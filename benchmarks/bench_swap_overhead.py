@@ -1,0 +1,69 @@
+"""Steady-state cost of hot-swappability: per-step slot rebinding is an
+epoch/hash check — it must be noise against the jitted step itself."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from statistics import mean, median
+
+import jax
+
+from repro.configs import make_run_config
+from repro.core.registry import ActiveCodeRegistry
+from repro.data.synthetic import batch_at, make_task
+from repro.models import build_model
+from repro.optim.api import build_optimizer
+from repro.train import HotSwapTrainStep, init_state
+from repro.train.step import build_ctx, make_train_step
+
+
+def setup():
+    run = make_run_config("smollm-135m", "train_4k")
+    run = dataclasses.replace(
+        run, model=run.model.reduced(num_layers=4, d_model=128),
+        shape=dataclasses.replace(run.shape, seq_len=128, global_batch=8),
+        train=dataclasses.replace(run.train, num_microbatches=1))
+    model = build_model(run.model)
+    opt = build_optimizer(run.train, run.model.param_dtype)
+    task = make_task(run.model.vocab_size, 128, 8)
+    return run, model, opt, task
+
+
+def time_steps(fn, state, task, n=30):
+    state, _ = fn(state, batch_at(task, 0))       # warm
+    jax.block_until_ready(state.params)
+    ts = []
+    for i in range(n):
+        b = batch_at(task, i + 1)
+        t0 = time.perf_counter()
+        state, _ = fn(state, b)
+        jax.block_until_ready(state.params)
+        ts.append(time.perf_counter() - t0)
+    return median(ts)
+
+
+def main(report) -> None:
+    run, model, opt, task = setup()
+
+    # raw jitted step (no hot-swap machinery)
+    ctx = build_ctx(run)
+    raw = jax.jit(make_train_step(model, run, opt, ctx),
+                  donate_argnums=(0,))
+    state = init_state(model, opt, jax.random.PRNGKey(0), run)
+    t_raw = time_steps(raw, state, task)
+
+    # hot-swap wrapper (per-step rebind + fingerprint compare)
+    reg = ActiveCodeRegistry()
+    bindings = {s: reg.bind("u", s) for s in HotSwapTrainStep.SLOTS}
+    hot = HotSwapTrainStep(model, run, opt, bindings, donate=True)
+    state = init_state(model, opt, jax.random.PRNGKey(0), run)
+    t_hot = time_steps(hot, state, task)
+
+    over = (t_hot - t_raw) / t_raw * 100
+    report("step_raw", t_raw * 1e6, f"{t_raw*1e3:.1f} ms/step")
+    report("step_hotswap", t_hot * 1e6,
+           f"{t_hot*1e3:.1f} ms/step ({over:+.1f}% vs raw)")
+
+
+if __name__ == "__main__":
+    main(lambda n, us, d: print(f"{n},{us:.1f},{d}"))

@@ -1,0 +1,44 @@
+"""Benchmark harness: one module per paper table / system claim.
+
+    PYTHONPATH=src python -m benchmarks.run [--only <name>]
+
+Prints ``name,us_per_call,derived`` CSV (plus a JSON mirror under
+experiments/bench.json).
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import json
+import os
+
+SUITES = ("bench_replacement", "bench_fleet", "bench_swap_overhead",
+          "bench_kernels")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--json", default="experiments/bench.json")
+    args = ap.parse_args()
+
+    rows = []
+
+    def report(name, us, derived=""):
+        rows.append({"name": name, "us_per_call": us, "derived": derived})
+        print(f"{name},{us:.1f},{derived}", flush=True)
+
+    print("name,us_per_call,derived")
+    for suite in SUITES:
+        if args.only and args.only not in suite:
+            continue
+        mod = importlib.import_module(f"benchmarks.{suite}")
+        mod.main(report)
+    if args.json:
+        os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

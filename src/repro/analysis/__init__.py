@@ -1,0 +1,6 @@
+"""Roofline analysis from compiled dry-run artifacts."""
+from repro.analysis.hlo import collective_bytes, parse_collectives
+from repro.analysis.roofline import RooflineTerms, roofline_from_artifacts
+
+__all__ = ["RooflineTerms", "collective_bytes", "parse_collectives",
+           "roofline_from_artifacts"]

@@ -1,0 +1,500 @@
+"""HLO cost analyzer: loop-aware flops / HBM bytes / collective bytes.
+
+Why not ``compiled.cost_analysis()``: XLA counts every called computation
+ONCE — a ``lax.scan`` over 61 layers reports one layer's flops (verified
+in tests). This module parses the post-SPMD-partitioning HLO text
+(per-device program), builds the call graph, and multiplies while-loop
+bodies by their trip count (``backend_config known_trip_count``, with a
+condition-constant fallback), giving faithful per-chip totals:
+
+* **flops** — 2*numel(out)*k for dots (k = product of the lhs
+  contracting dims, resolved through a per-computation symbol table);
+  1 flop/output element for elementwise ops; numel(input) for reduces.
+* **HBM bytes** — operands + results of every *top-level* instruction
+  (fusion internals are VMEM-resident by construction, so only the
+  fusion op's own operands/results count — XLA's own traffic model).
+* **collective bytes** — wire bytes with ring multipliers:
+  all-reduce 2B(n-1)/n; all-gather/reduce-scatter/all-to-all B(n-1)/n;
+  collective-permute B. Group size n from replica_groups (iota or
+  explicit form).
+"""
+from __future__ import annotations
+
+import json
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "f8e4m3": 1, "f8e5m2fnuz": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8,
+    "u64": 8, "f64": 8, "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_ELEMENTWISE_1 = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum",
+    "compare", "select", "and", "or", "xor", "not", "negate", "abs",
+    "floor", "ceil", "round-nearest-afz", "round-nearest-even", "clamp",
+    "sign", "shift-left", "shift-right-logical", "shift-right-arithmetic",
+    "remainder", "atan2",
+}
+_TRANSCENDENTAL = {
+    "exponential", "exponential-minus-one", "log", "log-plus-one", "tanh",
+    "rsqrt", "sqrt", "cbrt", "power", "logistic", "sine", "cosine", "tan",
+    "erf", "expm1",
+}
+_NO_TRAFFIC = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "add-dependency", "partition-id", "replica-id", "iota",
+}
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_TOKEN = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HEADER = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\((.*)\)\s*->")
+# rhs = "<result type> <op>(args), attrs" — the op is the first
+# word immediately followed by "(" (shape tokens never precede "(").
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*?)\s*([\w\-]+)\(")
+_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS = re.compile(r"calls=%?([\w.\-]+)")
+_TO_APPLY = re.compile(r"to_apply=%?([\w.\-]+)")
+_BODY = re.compile(r"body=%?([\w.\-]+)")
+_COND = re.compile(r"condition=%?([\w.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_IOTA_GROUPS = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_LIST_GROUPS = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_LHS_CDIMS = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_OPERANDS = re.compile(r"%([\w.\-]+)")
+
+
+def _shapes_in(type_str: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    out = []
+    for m in _SHAPE_TOKEN.finditer(type_str):
+        dtype, dims = m.groups()
+        if dtype in ("index",):
+            continue
+        shape = tuple(int(d) for d in dims.split(",") if d)
+        out.append((dtype, shape))
+    return out
+
+
+def _numel(shape: Tuple[int, ...]) -> int:
+    n = 1
+    for d in shape:
+        n *= d
+    return n
+
+
+def _bytes_of(type_str: str) -> int:
+    # strip layout annotations {2,1,0} so they don't parse as shapes
+    clean = re.sub(r"\{[\d,]*\}", "", type_str)
+    return sum(_numel(s) * _DTYPE_BYTES.get(dt, 4)
+               for dt, s in _shapes_in(clean))
+
+
+@dataclass
+class Instr:
+    name: str
+    op: str
+    rtype: str
+    line: str
+
+
+@dataclass
+class Computation:
+    name: str
+    is_entry: bool
+    instrs: List[Instr] = field(default_factory=list)
+    shapes: Dict[str, str] = field(default_factory=dict)   # name -> type str
+    params: List[str] = field(default_factory=list)        # in header order
+
+
+@dataclass
+class Costs:
+    flops: float = 0.0
+    transcendentals: float = 0.0
+    hbm_bytes: float = 0.0
+    fused_bytes: float = 0.0   # lower bound: perfect elementwise fusion
+                               # (dot/slice/copy/collective traffic only)
+    coll_wire: Dict[str, float] = field(
+        default_factory=lambda: defaultdict(float))
+    coll_raw: Dict[str, float] = field(
+        default_factory=lambda: defaultdict(float))
+    coll_count: Dict[str, float] = field(
+        default_factory=lambda: defaultdict(float))
+    unknown_trip_loops: int = 0
+
+    def add(self, other: "Costs", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.transcendentals += other.transcendentals * mult
+        self.hbm_bytes += other.hbm_bytes * mult
+        self.fused_bytes += other.fused_bytes * mult
+        for k, v in other.coll_wire.items():
+            self.coll_wire[k] += v * mult
+        for k, v in other.coll_raw.items():
+            self.coll_raw[k] += v * mult
+        for k, v in other.coll_count.items():
+            self.coll_count[k] += v * mult
+        self.unknown_trip_loops += other.unknown_trip_loops
+
+    @property
+    def total_wire(self) -> float:
+        return float(sum(self.coll_wire.values()))
+
+    def as_dict(self) -> Dict:
+        return {
+            "flops": self.flops,
+            "transcendentals": self.transcendentals,
+            "hbm_bytes": self.hbm_bytes,
+            "fused_bytes": self.fused_bytes,
+            "count": {k: int(v) for k, v in self.coll_count.items()},
+            "bytes_raw": dict(self.coll_raw),
+            "bytes_wire": dict(self.coll_wire),
+            "total_wire": self.total_wire,
+            "total_raw": float(sum(self.coll_raw.values())),
+            "unknown_trip_loops": self.unknown_trip_loops,
+        }
+
+
+def parse_computations(hlo_text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in hlo_text.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            m = _COMP_HEADER.match(line.strip())
+            if m and line.rstrip().endswith("{"):
+                cur = Computation(name=m.group(2),
+                                  is_entry=bool(m.group(1)))
+                # parameters declared in the header (order matters: the
+                # caller's operand i binds to the i-th header param)
+                for pm in re.finditer(r"([\w.\-]+):\s*(\(?[\w\[\]{},/* ]+\)?)",
+                                      m.group(3)):
+                    cur.shapes[pm.group(1)] = pm.group(2)
+                    cur.params.append(pm.group(1))
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        im = _INSTR.match(line)
+        if im:
+            name, rtype, op = im.groups()
+            cur.shapes[name] = rtype
+            cur.instrs.append(Instr(name=name, op=op, rtype=rtype,
+                                    line=line.strip()))
+    return comps
+
+
+def _dot_flops(instr: Instr, comp: Computation) -> float:
+    out_elems = _numel(_shapes_in(re.sub(r"\{[\d,]*\}", "",
+                                         instr.rtype))[0][1])
+    cd = _LHS_CDIMS.search(instr.line)
+    # first operand reference after the op name is the lhs
+    paren = instr.line.index("(", instr.line.index(instr.op))
+    ops = _OPERANDS.findall(instr.line[paren:])
+    k = 1
+    if cd and ops:
+        lhs_type = comp.shapes.get(ops[0], "")
+        lhs_shapes = _shapes_in(re.sub(r"\{[\d,]*\}", "", lhs_type))
+        if lhs_shapes:
+            lhs = lhs_shapes[0][1]
+            for d in (int(x) for x in cd.group(1).split(",") if x):
+                if d < len(lhs):
+                    k *= lhs[d]
+    return 2.0 * out_elems * k
+
+
+def _group_size(line: str, default: int = 1) -> int:
+    m = _IOTA_GROUPS.search(line)
+    if m:
+        return int(m.group(2))
+    m = _LIST_GROUPS.search(line)
+    if m:
+        return max(1, len([x for x in m.group(1).split(",") if x.strip()]))
+    return default
+
+
+def _trip_count(instr: Instr, comps: Dict[str, Computation]) -> Optional[int]:
+    m = _TRIP.search(instr.line)
+    if m:
+        return int(m.group(1))
+    # fallback: largest integer constant in the condition computation
+    cm = _COND.search(instr.line)
+    if cm and cm.group(1) in comps:
+        best = None
+        for ci in comps[cm.group(1)].instrs:
+            if ci.op == "constant":
+                mm = re.search(r"constant\((\d+)\)", ci.line)
+                if mm:
+                    v = int(mm.group(1))
+                    best = v if best is None else max(best, v)
+        return best
+    return None
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str):
+        self.comps = parse_computations(hlo_text)
+        self._fusion_bodies = set()
+        self._reducers = set()
+        for c in self.comps.values():
+            for i in c.instrs:
+                cm = _CALLS.search(i.line)
+                if cm:
+                    self._fusion_bodies.add(cm.group(1))
+                tm = _TO_APPLY.search(i.line)
+                if tm:
+                    self._reducers.add(tm.group(1))
+        self._memo: Dict[Tuple[str, bool], Costs] = {}
+
+    def entry_costs(self) -> Costs:
+        entry = next((c for c in self.comps.values() if c.is_entry), None)
+        if entry is None:
+            return Costs()
+        return self._comp_costs(entry.name, in_fusion=False)
+
+    # ------------------------------------------------------------------
+    def _comp_costs(self, name: str, in_fusion: bool) -> Costs:
+        key = (name, in_fusion)
+        if key in self._memo:
+            return self._memo[key]
+        self._memo[key] = Costs()          # cycle guard
+        comp = self.comps.get(name)
+        if comp is None:
+            return self._memo[key]
+        total = Costs()
+        for instr in comp.instrs:
+            self._instr_costs(instr, comp, total, in_fusion)
+        self._memo[key] = total
+        return total
+
+    def _instr_costs(self, instr: Instr, comp: Computation, total: Costs,
+                     in_fusion: bool) -> None:
+        op = instr.op
+        clean_rtype = re.sub(r"\{[\d,]*\}", "", instr.rtype)
+        out_shapes = _shapes_in(clean_rtype)
+        out_elems = sum(_numel(s) for _, s in out_shapes)
+
+        # --- control flow / calls ---
+        if op == "while":
+            trips = _trip_count(instr, self.comps)
+            if trips is None:
+                trips = 1
+                total.unknown_trip_loops += 1
+            bm, cm = _BODY.search(instr.line), _COND.search(instr.line)
+            if bm:
+                total.add(self._comp_costs(bm.group(1), in_fusion), trips)
+            if cm:
+                total.add(self._comp_costs(cm.group(1), in_fusion), trips)
+            return
+        if op == "conditional":
+            br = _BRANCHES.search(instr.line)
+            if br:
+                branches = [b.strip().lstrip("%")
+                            for b in br.group(1).split(",")]
+                costs = [self._comp_costs(b, in_fusion) for b in branches]
+                if costs:
+                    worst = max(costs, key=lambda c: (c.flops, c.hbm_bytes))
+                    total.add(worst)
+            return
+        if op == "fusion":
+            cm = _CALLS.search(instr.line)
+            callee = self.comps.get(cm.group(1)) if cm else None
+            if callee is not None:
+                total.add(self._comp_costs(callee.name, in_fusion=True))
+            if not in_fusion:
+                total.hbm_bytes += self._fusion_traffic(instr, comp, callee)
+            return
+        if op in ("call", "async-start", "async-done"):
+            cm = _CALLS.search(instr.line) or _TO_APPLY.search(instr.line)
+            if cm:
+                total.add(self._comp_costs(cm.group(1), in_fusion))
+            return
+
+        # --- collectives ---
+        coll = next((c for c in _COLLECTIVES
+                     if op in (c, c + "-start")), None)
+        if coll is not None:
+            nbytes = _bytes_of(instr.rtype)
+            n = _group_size(instr.line)
+            ring = (n - 1) / n if n > 1 else 0.0
+            if coll == "all-reduce":
+                wire = 2 * nbytes * ring
+            elif coll == "collective-permute":
+                wire = float(nbytes)
+            else:
+                wire = nbytes * ring
+            total.coll_count[coll] += 1
+            total.coll_raw[coll] += nbytes
+            total.coll_wire[coll] += wire
+            if not in_fusion:
+                t = self._traffic(instr, comp)
+                total.hbm_bytes += t
+                total.fused_bytes += t
+            return
+        if op.endswith("-done"):
+            return
+
+        # --- compute ---
+        if op == "dot":
+            total.flops += _dot_flops(instr, comp)
+        elif op == "convolution":
+            # window size x output elems x 2 (we avoid real convs; coarse)
+            total.flops += 2.0 * out_elems
+        elif op in _ELEMENTWISE_1:
+            total.flops += out_elems
+        elif op in _TRANSCENDENTAL:
+            total.flops += out_elems
+            total.transcendentals += out_elems
+        elif op in ("reduce", "reduce-window"):
+            paren = instr.line.index("(", instr.line.index(op))
+            ops = _OPERANDS.findall(instr.line[paren:])
+            in_elems = sum(
+                _numel(s) for o in ops[:1]
+                for _, s in _shapes_in(
+                    re.sub(r"\{[\d,]*\}", "", comp.shapes.get(o, ""))))
+            total.flops += in_elems
+
+        if not in_fusion and op not in _NO_TRAFFIC:
+            if op == "dynamic-slice":
+                # in-place read of the sliced region only
+                t = 2.0 * _bytes_of(instr.rtype)
+            elif op == "dynamic-update-slice":
+                # in-place write: read update + write region (not the
+                # whole destination buffer — XLA aliases it)
+                t = 2.0 * self._update_bytes(instr, comp)
+            else:
+                t = self._traffic(instr, comp)
+            total.hbm_bytes += t
+            if op in ("dot", "convolution", "dynamic-slice",
+                      "dynamic-update-slice", "copy", "gather", "scatter",
+                      "concatenate", "pad", "sort", "rng-bit-generator"):
+                total.fused_bytes += t
+
+    def _fusion_traffic(self, instr: Instr, comp: Computation,
+                        callee: Optional[Computation]) -> float:
+        """Traffic of a fusion op, accounting for internal slicing and
+        in-place updates of big operands:
+
+        * a param only consumed via ``dynamic-slice`` inside the fusion
+          is read at slice size, not full size;
+        * a param that is the destination of ``dynamic-update-slice``
+          is aliased with the output — its read AND the output write are
+          the touched region, not the whole buffer.
+        """
+        try:
+            paren = instr.line.index("(", instr.line.index(instr.op))
+        except ValueError:
+            return float(_bytes_of(instr.rtype))
+        operand_names = []
+        depth = 0
+        # operands end at the matching close paren (attrs follow)
+        seg = instr.line[paren:]
+        end = 0
+        for j, ch in enumerate(seg):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = j
+                    break
+        operand_names = _OPERANDS.findall(seg[:end] if end else seg)
+        if callee is None:
+            return self._traffic(instr, comp)
+
+        param_bytes: Dict[str, float] = {}
+        full_bytes: Dict[str, float] = {}
+        for i, pname in enumerate(callee.params):
+            if i < len(operand_names):
+                t = comp.shapes.get(operand_names[i])
+                b = float(_bytes_of(t)) if t else 0.0
+            else:
+                b = float(_bytes_of(callee.shapes.get(pname, "")))
+            param_bytes[pname] = b
+            full_bytes[pname] = b
+
+        aliased_out = False
+        out_write = float(_bytes_of(instr.rtype))
+        sliced: Dict[str, float] = {}
+        other_use: Dict[str, bool] = {}
+        for ci in callee.instrs:
+            try:
+                p2 = ci.line.index("(", ci.line.index(ci.op))
+            except ValueError:
+                continue
+            ops = _OPERANDS.findall(ci.line[p2:])
+            if ci.op == "dynamic-slice" and ops and ops[0] in param_bytes:
+                sliced[ops[0]] = sliced.get(ops[0], 0.0) + \
+                    float(_bytes_of(ci.rtype))
+            elif ci.op == "dynamic-update-slice" and ops \
+                    and ops[0] in param_bytes:
+                upd = (float(_bytes_of(callee.shapes.get(ops[1], "")))
+                       if len(ops) > 1 else 0.0)
+                if upd > 0:
+                    param_bytes[ops[0]] = min(param_bytes[ops[0]], upd)
+                    aliased_out = True
+                    out_write = min(out_write, upd)
+                for o in ops[1:]:
+                    if o in param_bytes:
+                        other_use[o] = True
+            else:
+                for o in ops:
+                    if o in param_bytes:
+                        other_use[o] = True
+        total = out_write if aliased_out else float(_bytes_of(instr.rtype))
+        for pname, b in param_bytes.items():
+            if pname in sliced and not other_use.get(pname):
+                total += min(b, sliced[pname])
+            else:
+                total += b
+        return total
+
+    def _update_bytes(self, instr: Instr, comp: Computation) -> float:
+        """Bytes of the update operand (operand 1) of a d-u-s."""
+        try:
+            paren = instr.line.index("(", instr.line.index(instr.op))
+        except ValueError:
+            return float(_bytes_of(instr.rtype))
+        ops = _OPERANDS.findall(instr.line[paren:])
+        if len(ops) >= 2 and ops[1] in comp.shapes:
+            return float(_bytes_of(comp.shapes[ops[1]]))
+        return float(_bytes_of(instr.rtype))
+
+    def _traffic(self, instr: Instr, comp: Computation) -> float:
+        """Operand + result bytes of a top-level instruction."""
+        nbytes = _bytes_of(instr.rtype)
+        try:
+            paren = instr.line.index("(", instr.line.index(instr.op))
+        except ValueError:
+            return float(nbytes)
+        seen = set()
+        for o in _OPERANDS.findall(instr.line[paren:]):
+            if o in seen:
+                continue
+            seen.add(o)
+            t = comp.shapes.get(o)
+            if t:
+                nbytes += _bytes_of(t)
+        return float(nbytes)
+
+
+# ---------------------------------------------------------------------------
+# Public API
+# ---------------------------------------------------------------------------
+
+def analyze(hlo_text: str) -> Costs:
+    return HloCostModel(hlo_text).entry_costs()
+
+
+def parse_collectives(hlo_text: str, default_group: int = 1) -> Costs:
+    """Backwards-compatible name: full analysis (collectives + more)."""
+    return analyze(hlo_text)
+
+
+def collective_bytes(hlo_text: str, default_group: int = 1) -> float:
+    return analyze(hlo_text).total_wire

@@ -1,0 +1,90 @@
+"""Generate EXPERIMENTS.md tables from dry-run/perf artifacts."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+ARCH_ORDER = ["kimi-k2-1t-a32b", "dbrx-132b", "smollm-135m", "qwen3-0.6b",
+              "llama3.2-3b", "yi-34b", "chameleon-34b", "mamba2-370m",
+              "whisper-large-v3", "hymba-1.5b"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(dirpath: str) -> List[Dict]:
+    out = []
+    for p in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
+        with open(p) as f:
+            out.append(json.load(f))
+    return out
+
+
+def fmt_bytes(b) -> str:
+    if b is None:
+        return "-"
+    return f"{b/2**30:.2f}"
+
+
+def fmt_t(s) -> str:
+    if s is None:
+        return "-"
+    if s >= 1:
+        return f"{s:.2f}s"
+    return f"{s*1e3:.1f}ms"
+
+
+def dryrun_table(recs: List[Dict], mesh: str) -> str:
+    rows = ["| arch | shape | kind | status | bytes/dev GiB | flops/chip "
+            "| t_comp | t_mem(fused) | t_coll | bottleneck | 6ND/HLO | "
+            "roofline frac |",
+            "|---|---|---|---|---|---|---|---|---|---|---|---|"]
+    idx = {(r["arch"], r["shape"]): r for r in recs if r["mesh"] == mesh}
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            r = idx.get((a, s))
+            if r is None:
+                continue
+            if r["status"] == "skip":
+                rows.append(f"| {a} | {s} | - | SKIP (long_500k needs "
+                            f"sub-quadratic attention) | - | - | - | - | - "
+                            f"| - | - | - |")
+                continue
+            m = r["memory"]
+            bpd = (m["argument_bytes"] + m["temp_bytes"]
+                   + m["output_bytes"] - m["alias_bytes"]) / r["chips"]
+            rows.append(
+                f"| {a} | {s} | {r['kind']} | OK | {fmt_bytes(bpd)} | "
+                f"{r['flops_per_chip']:.2e} | {fmt_t(r['t_compute_s'])} | "
+                f"{fmt_t(r['t_memory_fused_s'])} | "
+                f"{fmt_t(r['t_collective_s'])} | {r['bottleneck']} | "
+                f"{r['useful_flops_fraction']:.3f} | "
+                f"{r['roofline_fraction']:.3f} |")
+    return "\n".join(rows)
+
+
+def collective_summary(recs: List[Dict], mesh: str) -> str:
+    rows = ["| arch | shape | AG GiB | AR GiB | RS GiB | A2A GiB | CP GiB |",
+            "|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r["mesh"] != mesh or r["status"] != "ok":
+            continue
+        w = r["collectives"]["bytes_wire"]
+        g = lambda k: w.get(k, 0) / 2**30
+        rows.append(f"| {r['arch']} | {r['shape']} | {g('all-gather'):.1f} "
+                    f"| {g('all-reduce'):.1f} | {g('reduce-scatter'):.1f} | "
+                    f"| {g('all-to-all'):.1f} | {g('collective-permute'):.2f} |"
+                    .replace("| |", "|"))
+    return "\n".join(rows)
+
+
+def main() -> None:
+    recs = load("experiments/dryrun")
+    print("## single-pod (16x16)\n")
+    print(dryrun_table(recs, "16x16"))
+    print("\n## multi-pod (2x16x16)\n")
+    print(dryrun_table(recs, "2x16x16"))
+
+
+if __name__ == "__main__":
+    main()

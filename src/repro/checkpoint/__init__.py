@@ -1,0 +1,5 @@
+"""Checkpointing: atomic sharded save/restore with manifest + elastic
+reshard-on-load."""
+from repro.checkpoint.store import CheckpointStore, restore_tree, save_tree
+
+__all__ = ["CheckpointStore", "restore_tree", "save_tree"]

@@ -1,0 +1,22 @@
+"""DBRX — 132B fine-grained MoE, 16 experts top-4. [hf:databricks/dbrx-base; unverified]
+
+Assignment table: 40L d_model=6144 48H (GQA kv=8) d_ff=10752 vocab=100352,
+MoE 16e top-4.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="dbrx-132b",
+    family="moe",
+    num_layers=40,
+    d_model=6144,
+    vocab_size=100_352,
+    num_heads=48,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=0,
+    num_experts=16,
+    experts_per_token=4,
+    moe_d_ff=10_752,
+    source="hf:databricks/dbrx-base; unverified",
+)

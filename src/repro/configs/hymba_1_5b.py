@@ -1,0 +1,33 @@
+"""Hymba-1.5B — hybrid: parallel attention + mamba heads. [arXiv:2411.13676; hf]
+
+Assignment table: 32L d_model=1600 25H (GQA kv=5) d_ff=5504 vocab=32001,
+ssm_state=16. Each block runs attention heads and SSD heads in parallel
+on the same input and fuses the normalized outputs (mean). Sliding-window
+attention (1024) everywhere except three global-attention layers
+(first / middle / last) — this is what makes the 500k-token decode shape
+runnable: per-step attention cost is O(window) for SWA layers and the
+three global layers' KV can be sequence-sharded over the data axis.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="hymba-1.5b",
+    family="hybrid",
+    num_layers=32,
+    d_model=1600,
+    vocab_size=32_001,
+    num_heads=25,
+    num_kv_heads=5,
+    head_dim=64,
+    d_ff=5504,
+    sliding_window=1024,
+    global_attn_layers=(0, 15, 31),
+    n_meta_tokens=128,
+    ssm_state=16,
+    ssm_heads=25,
+    ssm_head_dim=64,
+    ssm_expand=1,
+    conv_width=4,
+    ssd_chunk=128,
+    source="arXiv:2411.13676; hf",
+)

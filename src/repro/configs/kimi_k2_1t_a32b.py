@@ -1,0 +1,36 @@
+"""Kimi K2 — trillion-parameter MoE. [arXiv:2501.kimi2; unverified]
+
+Assignment table: 61L d_model=7168 64H (GQA kv=8) d_ff=2048 vocab=163840,
+MoE 384 experts top-8. head_dim = 7168/64 = 112 (note: not 128-aligned —
+flagged in the roofline analysis).
+
+Scale note: ~1.04T total params / ~31B active. fp32 AdamW state (12 B/param)
+would need ~12.5 TB — beyond a 256-chip v5e pod (4 TB HBM). The default
+TrainConfig for this arch therefore uses Adafactor with bf16 parameters,
+which is how 1T-class models are actually trained on 16 GB-HBM parts.
+"""
+from repro.configs.base import ModelConfig, TrainConfig
+
+CONFIG = ModelConfig(
+    name="kimi-k2-1t-a32b",
+    family="moe",
+    num_layers=61,
+    d_model=7168,
+    vocab_size=163_840,
+    num_heads=64,
+    num_kv_heads=8,
+    head_dim=112,
+    d_ff=0,
+    num_experts=384,
+    experts_per_token=8,
+    moe_d_ff=2048,
+    param_dtype="bfloat16",
+    source="arXiv:2501.kimi2; unverified",
+)
+
+TRAIN = TrainConfig(
+    optimizer="adafactor",
+    num_microbatches=8,
+    grad_accum_dtype="bfloat16",
+    remat_policy="full",
+)

@@ -1,0 +1,26 @@
+"""Mamba2-370M — SSD (state-space duality), attention-free. [arXiv:2405.21060; unverified]
+
+Assignment table: 48L d_model=1024 (attn-free) d_ff=0 vocab=50280,
+ssm_state=128. Mamba2 defaults: expand=2 (d_inner=2048), head_dim P=64
+=> 32 SSD heads, conv width 4.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-370m",
+    family="ssm",
+    num_layers=48,
+    d_model=1024,
+    vocab_size=50_280,
+    num_heads=0,
+    num_kv_heads=0,
+    d_ff=0,
+    ssm_state=128,
+    ssm_heads=32,
+    ssm_head_dim=64,
+    ssm_expand=2,
+    conv_width=4,
+    ssd_chunk=128,
+    tie_embeddings=True,
+    source="arXiv:2405.21060; unverified",
+)

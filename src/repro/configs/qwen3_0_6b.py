@@ -1,0 +1,22 @@
+"""Qwen3-0.6B — qk_norm, GQA. [hf:Qwen/Qwen3-8B; hf]
+
+Assignment table: 28L d_model=1024 16H (GQA kv=8) d_ff=3072 vocab=151936.
+head_dim=128 per the HF config (Qwen3 decouples head_dim from d_model/H).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-0.6b",
+    family="dense",
+    num_layers=28,
+    d_model=1024,
+    vocab_size=151_936,
+    num_heads=16,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=3072,
+    qk_norm=True,
+    rope_theta=1e6,
+    tie_embeddings=True,
+    source="hf:Qwen/Qwen3-8B; hf",
+)

@@ -1,0 +1,19 @@
+"""Yi-34B — llama-arch GQA. [arXiv:2403.04652; hf]
+
+Assignment table: 60L d_model=7168 56H (GQA kv=8) d_ff=20480 vocab=64000.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="yi-34b",
+    family="dense",
+    num_layers=60,
+    d_model=7168,
+    vocab_size=64_000,
+    num_heads=56,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=20_480,
+    rope_theta=5_000_000.0,
+    source="arXiv:2403.04652; hf",
+)

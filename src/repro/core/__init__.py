@@ -1,0 +1,64 @@
+"""core/ — the paper's primary contribution: active-code replacement.
+
+Public API surface of the OODIDA-style layer: versioned hot-swappable
+code modules, front-end validation, the assignment/task actor fabric,
+and the md5-majority consistency rule.
+"""
+from repro.core.assignment import (
+    AssignmentKind,
+    AssignmentSpec,
+    Status,
+    Target,
+    TaskSpec,
+)
+from repro.core.consistency import (
+    FilterOutcome,
+    IterationCollector,
+    QuorumPolicy,
+    TaggedResult,
+    majority_filter,
+)
+from repro.core.fleet import (
+    BUILTIN_METHODS,
+    ClientApp,
+    CloudApp,
+    Fleet,
+    UserFrontend,
+)
+from repro.core.module import ActiveModule, ResolvedModule, compile_module
+from repro.core.registry import ActiveCodeRegistry, Binding
+from repro.core.validation import (
+    SlotSpec,
+    ValidationError,
+    scalar_output,
+    static_check,
+    validate,
+)
+
+__all__ = [
+    "ActiveCodeRegistry",
+    "ActiveModule",
+    "AssignmentKind",
+    "AssignmentSpec",
+    "BUILTIN_METHODS",
+    "Binding",
+    "ClientApp",
+    "CloudApp",
+    "FilterOutcome",
+    "Fleet",
+    "IterationCollector",
+    "QuorumPolicy",
+    "ResolvedModule",
+    "SlotSpec",
+    "Status",
+    "TaggedResult",
+    "Target",
+    "TaskSpec",
+    "UserFrontend",
+    "ValidationError",
+    "compile_module",
+    "majority_filter",
+    "scalar_output",
+    "static_check",
+    "validate",
+]

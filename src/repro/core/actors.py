@@ -1,0 +1,187 @@
+"""A small Erlang/OTP-flavoured actor runtime (threads + mailboxes).
+
+OODIDA's core is an Erlang/OTP process tree; we reproduce the semantics
+the paper relies on:
+
+* actors with mailboxes, processed one message at a time;
+* ``spawn`` of short-lived handler actors (OODIDA's b'/x' temporaries);
+* **monitors**: when an actor dies, every monitor receives a ``Down``
+  message with the reason (Erlang's ``monitor/2``);
+* **supervision**: a supervisor can restart permanent children on crash
+  (one-for-one, bounded restarts);
+* graceful system shutdown.
+
+This is a single-process simulation of the distributed message fabric;
+on a real cluster the same message protocol rides on a transport (the
+codec layer is already bytes-first). The *compute* fan-out at pod scale
+is pjit/GSPMD — see launch/ — and does not go through actors.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+import traceback
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+
+@dataclass
+class Envelope:
+    sender: Optional[str]
+    msg: Any
+
+
+@dataclass(frozen=True)
+class Down:
+    """Monitor notification (Erlang 'DOWN')."""
+    actor: str
+    reason: Optional[str]  # None == normal exit
+
+
+class Actor:
+    """Subclass and implement handle(sender, msg). Runs on its own thread."""
+
+    def __init__(self, name: str):
+        self.name = name
+        self._mailbox: "queue.Queue[Optional[Envelope]]" = queue.Queue()
+        self._thread: Optional[threading.Thread] = None
+        self._monitors: List[str] = []
+        self._system: Optional["ActorSystem"] = None
+        self._alive = False
+        self.exit_reason: Optional[str] = None
+
+    # -- lifecycle ----------------------------------------------------------
+    def _start(self, system: "ActorSystem") -> None:
+        self._system = system
+        self._alive = True
+        self._thread = threading.Thread(target=self._loop, name=self.name,
+                                        daemon=True)
+        self._thread.start()
+
+    def _loop(self) -> None:
+        try:
+            self.on_start()
+            while self._alive:
+                env = self._mailbox.get()
+                if env is None:          # poison pill
+                    break
+                self.handle(env.sender, env.msg)
+        except Exception:  # noqa: BLE001 - crash is a first-class event
+            self.exit_reason = traceback.format_exc(limit=8)
+        finally:
+            self._alive = False
+            try:
+                self.on_stop()
+            finally:
+                if self._system is not None:
+                    self._system._actor_exited(self, self.exit_reason)
+
+    def on_start(self) -> None:  # override points
+        pass
+
+    def on_stop(self) -> None:
+        pass
+
+    def handle(self, sender: Optional[str], msg: Any) -> None:
+        raise NotImplementedError
+
+    # -- messaging ----------------------------------------------------------
+    def send(self, target: str, msg: Any) -> None:
+        assert self._system is not None
+        self._system.send(target, msg, sender=self.name)
+
+    def stop(self) -> None:
+        self._alive = False
+        self._mailbox.put(None)
+
+    def monitor_me(self, watcher: str) -> None:
+        if watcher not in self._monitors:
+            self._monitors.append(watcher)
+
+
+class ActorSystem:
+    def __init__(self) -> None:
+        self._actors: Dict[str, Actor] = {}
+        self._lock = threading.RLock()
+        self._restart_counts: Dict[str, int] = {}
+        self._supervised: Dict[str, Callable[[], Actor]] = {}
+        self.max_restarts = 3
+        self.dead_letters: List[Envelope] = []
+
+    # -- registry -----------------------------------------------------------
+    def spawn(self, actor: Actor, *, supervised_factory:
+              Optional[Callable[[], Actor]] = None) -> Actor:
+        with self._lock:
+            if actor.name in self._actors:
+                raise ValueError(f"actor {actor.name!r} already registered")
+            self._actors[actor.name] = actor
+            if supervised_factory is not None:
+                self._supervised[actor.name] = supervised_factory
+        actor._start(self)
+        return actor
+
+    def whereis(self, name: str) -> Optional[Actor]:
+        with self._lock:
+            return self._actors.get(name)
+
+    def alive(self, name: str) -> bool:
+        a = self.whereis(name)
+        return bool(a and a._alive)
+
+    # -- messaging ----------------------------------------------------------
+    def send(self, target: str, msg: Any, sender: Optional[str] = None) -> None:
+        a = self.whereis(target)
+        if a is None or not a._alive:
+            with self._lock:
+                self.dead_letters.append(Envelope(sender, msg))
+            return
+        a._mailbox.put(Envelope(sender, msg))
+
+    def monitor(self, watcher: str, target: str) -> None:
+        a = self.whereis(target)
+        if a is None:
+            self.send(watcher, Down(actor=target, reason="noproc"))
+            return
+        a.monitor_me(watcher)
+
+    # -- exit / supervision ---------------------------------------------------
+    def _actor_exited(self, actor: Actor, reason: Optional[str]) -> None:
+        with self._lock:
+            self._actors.pop(actor.name, None)
+        for watcher in actor._monitors:
+            self.send(watcher, Down(actor=actor.name, reason=reason))
+        if reason is not None and actor.name in self._supervised:
+            with self._lock:
+                n = self._restart_counts.get(actor.name, 0)
+                if n >= self.max_restarts:
+                    return
+                self._restart_counts[actor.name] = n + 1
+                factory = self._supervised[actor.name]
+            replacement = factory()
+            assert replacement.name == actor.name, "supervised restart must keep name"
+            # carry over monitors so watchers keep watching the new incarnation
+            replacement._monitors = list(actor._monitors)
+            self.spawn(replacement, supervised_factory=factory)
+
+    # -- shutdown -------------------------------------------------------------
+    def shutdown(self, timeout: float = 5.0) -> None:
+        with self._lock:
+            actors = list(self._actors.values())
+            self._supervised.clear()   # no restarts during shutdown
+        for a in actors:
+            a.stop()
+        deadline = time.time() + timeout
+        for a in actors:
+            t = a._thread
+            if t is not None:
+                t.join(max(0.0, deadline - time.time()))
+
+
+def call(system: ActorSystem, target: str, make_msg: Callable[[queue.Queue], Any],
+         timeout: float = 10.0) -> Any:
+    """Synchronous request/response helper: builds a message carrying a
+    private reply queue (Erlang's gen_server:call pattern)."""
+    reply: "queue.Queue[Any]" = queue.Queue()
+    system.send(target, make_msg(reply))
+    return reply.get(timeout=timeout)

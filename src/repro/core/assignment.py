@@ -1,0 +1,126 @@
+"""Assignment and task specifications (OODIDA's JSON assignment objects).
+
+An *assignment* is what a user submits (to the whole fleet or a subset);
+the cloud's assignment handler fans it out into per-client *tasks*.
+Active-code replacement is **a special case of an assignment** — the
+payload carries the encoded module (paper §3).
+"""
+from __future__ import annotations
+
+import enum
+import itertools
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+from repro.core import codec
+from repro.core.module import ActiveModule
+
+
+class AssignmentKind(str, enum.Enum):
+    ANALYTICS = "analytics"            # run a (possibly custom) method over data
+    CODE_REPLACEMENT = "code_replacement"
+    FEDERATED = "federated"            # federated-learning rounds
+
+
+class Target(str, enum.Enum):
+    CLOUD = "cloud"
+    CLIENTS = "clients"
+    BOTH = "both"
+
+
+class Status(str, enum.Enum):
+    PENDING = "pending"
+    RUNNING = "running"
+    DONE = "done"
+    FAILED = "failed"
+    TIMEOUT = "timeout"
+
+
+_counter = itertools.count(1)
+_counter_lock = threading.Lock()
+
+
+def _next_id(prefix: str) -> str:
+    with _counter_lock:
+        return f"{prefix}-{next(_counter):06d}"
+
+
+@dataclass(frozen=True)
+class AssignmentSpec:
+    assignment_id: str
+    user_id: str
+    kind: AssignmentKind
+    target: Target
+    client_ids: Tuple[str, ...]          # empty => whole fleet
+    iterations: int = 1
+    params: Dict[str, Any] = field(default_factory=dict)
+    code: Optional[ActiveModule] = None  # for CODE_REPLACEMENT / custom methods
+    method: str = ""                     # built-in method name or slot name
+    created_at: float = field(default_factory=time.time)
+
+    @staticmethod
+    def new(user_id: str, kind: AssignmentKind, target: Target,
+            client_ids: Sequence[str] = (), **kw: Any) -> "AssignmentSpec":
+        return AssignmentSpec(
+            assignment_id=_next_id("asg"),
+            user_id=user_id, kind=kind, target=target,
+            client_ids=tuple(client_ids), **kw)
+
+    def to_wire(self) -> bytes:
+        d: Dict[str, Any] = {
+            "assignment_id": self.assignment_id,
+            "user_id": self.user_id,
+            "kind": self.kind.value,
+            "target": self.target.value,
+            "client_ids": list(self.client_ids),
+            "iterations": self.iterations,
+            "params": self.params,
+            "method": self.method,
+            "created_at": self.created_at,
+        }
+        if self.code is not None:
+            d["code"] = self.code.to_wire()
+        return codec.to_wire(d)
+
+    @staticmethod
+    def from_wire(data: bytes) -> "AssignmentSpec":
+        d = codec.from_wire(data)
+        return AssignmentSpec(
+            assignment_id=d["assignment_id"],
+            user_id=d["user_id"],
+            kind=AssignmentKind(d["kind"]),
+            target=Target(d["target"]),
+            client_ids=tuple(d["client_ids"]),
+            iterations=int(d["iterations"]),
+            params=d["params"],
+            method=d["method"],
+            code=ActiveModule.from_wire(d["code"]) if "code" in d else None,
+            created_at=float(d["created_at"]),
+        )
+
+
+@dataclass(frozen=True)
+class TaskSpec:
+    task_id: str
+    assignment_id: str
+    client_id: str
+    kind: AssignmentKind
+    iteration: int
+    params: Dict[str, Any] = field(default_factory=dict)
+    code: Optional[ActiveModule] = None
+    method: str = ""
+
+    @staticmethod
+    def for_client(a: AssignmentSpec, client_id: str, iteration: int) -> "TaskSpec":
+        return TaskSpec(
+            task_id=_next_id("tsk"),
+            assignment_id=a.assignment_id,
+            client_id=client_id,
+            kind=a.kind,
+            iteration=iteration,
+            params=a.params,
+            code=a.code,
+            method=a.method,
+        )

@@ -1,0 +1,72 @@
+"""Wire codec for assignments and active-code payloads.
+
+Faithful to the paper: user-defined code travels as an *encoded text
+string inside a JSON object* (we use base64), every module is tagged
+with its **md5** hash (sha256 carried alongside for collision paranoia),
+and on arrival the module is re-materialized as a real ``.py`` file at a
+predefined path *tied to the user ID*:
+
+    <store_root>/<user_id>/<slot>/<md5>.py
+"""
+from __future__ import annotations
+
+import base64
+import hashlib
+import json
+import os
+import tempfile
+from typing import Any, Dict
+
+
+def md5_of(source: str) -> str:
+    return hashlib.md5(source.encode("utf-8")).hexdigest()
+
+
+def sha256_of(source: str) -> str:
+    return hashlib.sha256(source.encode("utf-8")).hexdigest()
+
+
+def encode_source(source: str) -> str:
+    return base64.b64encode(source.encode("utf-8")).decode("ascii")
+
+
+def decode_source(encoded: str) -> str:
+    return base64.b64decode(encoded.encode("ascii")).decode("utf-8")
+
+
+def to_wire(obj: Dict[str, Any]) -> bytes:
+    """JSON-serialize a message dict (sorted keys => stable hashing)."""
+    return json.dumps(obj, sort_keys=True, default=_default).encode("utf-8")
+
+
+def from_wire(data: bytes) -> Dict[str, Any]:
+    return json.loads(data.decode("utf-8"))
+
+
+def _default(o: Any):
+    # numpy / jax scalars inside result payloads
+    if hasattr(o, "item"):
+        return o.item()
+    if hasattr(o, "tolist"):
+        return o.tolist()
+    raise TypeError(f"not JSON serializable: {type(o)!r}")
+
+
+def module_path(store_root: str, user_id: str, slot: str, md5: str) -> str:
+    return os.path.join(store_root, user_id, slot, f"{md5}.py")
+
+
+def materialize(store_root: str, user_id: str, slot: str, source: str) -> str:
+    """Atomically write the module file the paper's external apps would
+    load; returns the path."""
+    path = module_path(store_root, user_id, slot, md5_of(source))
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path), suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            f.write(source)
+        os.replace(tmp, path)  # atomic on POSIX
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+    return path

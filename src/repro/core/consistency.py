@@ -1,0 +1,122 @@
+"""Version-consistency for iteration results (the paper's md5-majority rule)
+plus its natural generalization to a straggler quorum.
+
+Paper: "each provided module ... is tagged with its md5 hash signature,
+which is reported together with the results from the clients. The cloud
+only uses the results tagged with the signature that achieves a majority.
+Consequently, results are never tainted by using different versions of
+custom code in the same iteration."
+
+We implement plurality-with-deterministic-tie-break (smallest md5 wins a
+tie) so the commit rule is a pure function of the result multiset —
+property-tested in tests/test_consistency.py.
+
+The same filter doubles as the fleet's straggler-mitigation commit rule:
+an iteration commits as soon as a quorum of same-hash results is in;
+late results are dropped exactly like stale-version results.
+"""
+from __future__ import annotations
+
+import math
+from collections import Counter
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+
+@dataclass(frozen=True)
+class TaggedResult:
+    client_id: str
+    iteration: int
+    code_md5: str
+    payload: Any = None
+    compute_ms: float = 0.0
+
+
+@dataclass(frozen=True)
+class FilterOutcome:
+    accepted: Tuple[TaggedResult, ...]
+    dropped: Tuple[TaggedResult, ...]
+    winning_md5: Optional[str]
+    counts: Dict[str, int]
+
+    @property
+    def clean(self) -> bool:
+        """True when no result had to be dropped for version skew."""
+        return not self.dropped
+
+
+def majority_filter(results: Sequence[TaggedResult]) -> FilterOutcome:
+    """Keep only results tagged with the plurality hash.
+
+    Deterministic: ties broken by lexicographically smallest md5. The
+    accepted set is always single-version (the paper's invariant).
+    """
+    if not results:
+        return FilterOutcome((), (), None, {})
+    counts = Counter(r.code_md5 for r in results)
+    # plurality; ties broken by lexicographically smallest md5
+    winning = min(counts.items(), key=lambda kv: (-kv[1], kv[0]))[0]
+    accepted = tuple(r for r in results if r.code_md5 == winning)
+    dropped = tuple(r for r in results if r.code_md5 != winning)
+    return FilterOutcome(accepted, dropped, winning, dict(counts))
+
+
+@dataclass(frozen=True)
+class QuorumPolicy:
+    """Iteration commit rule for a fleet of n clients.
+
+    ``min_fraction`` of the fleet must agree (same code hash) before the
+    iteration can commit; ``deadline_s`` bounds how long the assignment
+    handler waits for stragglers once the quorum is reachable.
+    """
+    min_fraction: float = 0.5
+    deadline_s: float = 30.0
+
+    def quorum_size(self, n_clients: int) -> int:
+        return max(1, math.ceil(self.min_fraction * n_clients))
+
+    def can_commit(self, results: Sequence[TaggedResult], n_clients: int) -> bool:
+        outcome = majority_filter(results)
+        return len(outcome.accepted) >= self.quorum_size(n_clients)
+
+
+@dataclass
+class IterationCollector:
+    """Accumulates TaggedResults for one iteration and decides commit.
+
+    Used by the assignment handler: add() results as they stream in;
+    ``ready()`` turns True once the majority-hash subset reaches quorum;
+    ``commit()`` freezes the iteration, returning the filter outcome.
+    Results arriving after commit are counted as stragglers.
+    """
+    iteration: int
+    n_clients: int
+    policy: QuorumPolicy = field(default_factory=QuorumPolicy)
+    results: List[TaggedResult] = field(default_factory=list)
+    committed: Optional[FilterOutcome] = None
+    stragglers: List[TaggedResult] = field(default_factory=list)
+
+    def add(self, result: TaggedResult) -> None:
+        if result.iteration != self.iteration:
+            raise ValueError(
+                f"result for iteration {result.iteration} fed to collector "
+                f"for iteration {self.iteration}")
+        if self.committed is not None:
+            self.stragglers.append(result)
+            return
+        self.results.append(result)
+
+    def ready(self) -> bool:
+        if self.committed is not None:
+            return True
+        if len(self.results) == self.n_clients:
+            return True
+        return self.policy.can_commit(self.results, self.n_clients)
+
+    def complete(self) -> bool:
+        return len(self.results) == self.n_clients
+
+    def commit(self) -> FilterOutcome:
+        if self.committed is None:
+            self.committed = majority_filter(self.results)
+        return self.committed

@@ -1,0 +1,546 @@
+"""The OODIDA node graph on the actor runtime.
+
+Figure 1 of the paper, reproduced:
+
+    UserFrontend (f)  -->  CloudNode (b)  -->  AssignmentHandler (b', temp)
+                                             |--> ClientNode (x)  --> TaskHandler (x', temp)
+                                             |--> ClientNode (y)  --> TaskHandler (y', temp)
+                                             ...
+
+* ClientNodes are permanent; TaskHandlers and AssignmentHandlers are
+  temporary (spawned per task/assignment, terminate when done).
+* Each client runs an "external application" (``ClientApp``) with its
+  **own** ActiveCodeRegistry — code reaches it only over the wire, as a
+  code-replacement task (paper: module files deployed per target).
+* Every analytics result is tagged with the md5 of the code that
+  produced it; the assignment handler commits an iteration through the
+  majority filter + straggler quorum (core/consistency.py).
+* Clients re-resolve the custom module **every iteration** (paper's
+  reload-per-iteration), so a mid-assignment deploy takes effect on the
+  next iteration without any restart.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.actors import Actor, ActorSystem, Down
+from repro.core.assignment import (
+    AssignmentKind,
+    AssignmentSpec,
+    Status,
+    Target,
+    TaskSpec,
+)
+from repro.core.consistency import (
+    FilterOutcome,
+    IterationCollector,
+    QuorumPolicy,
+    TaggedResult,
+)
+from repro.core.module import ActiveModule
+from repro.core.registry import ActiveCodeRegistry
+from repro.core.validation import SlotSpec, ValidationError
+
+# ---------------------------------------------------------------------------
+# Messages
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class SubmitAssignment:
+    spec: AssignmentSpec
+    reply_to: "queue.Queue[Any]"
+
+
+@dataclass(frozen=True)
+class NewTask:
+    task: TaskSpec
+    handler: str           # assignment-handler actor name
+
+
+@dataclass(frozen=True)
+class TaskDone:
+    task: TaskSpec
+    result: TaggedResult
+    error: Optional[str] = None
+
+
+@dataclass(frozen=True)
+class IterationResult:
+    assignment_id: str
+    iteration: int
+    value: Any
+    winning_md5: Optional[str]
+    n_accepted: int
+    n_dropped: int
+    n_stragglers: int
+
+
+@dataclass(frozen=True)
+class AssignmentDone:
+    assignment_id: str
+    status: Status
+    detail: str = ""
+
+
+@dataclass(frozen=True)
+class Deadline:
+    iteration: int
+
+
+# ---------------------------------------------------------------------------
+# Built-in analytics methods (the pre-deployed "library of computational
+# methods" that active code complements but does not replace)
+# ---------------------------------------------------------------------------
+
+BUILTIN_METHODS: Dict[str, Callable[[np.ndarray], Any]] = {
+    "mean": lambda xs: float(np.mean(xs)),
+    "min": lambda xs: float(np.min(xs)),
+    "max": lambda xs: float(np.max(xs)),
+    "variance": lambda xs: float(np.var(xs)),
+    "median": lambda xs: float(np.median(xs)),
+    "count": lambda xs: int(np.size(xs)),
+}
+
+
+class ClientApp:
+    """The external Python application on one client (on-board).
+
+    Holds the client's local telemetry stream and its local code store.
+    ``execute`` runs one task and returns a version-tagged result.
+    """
+
+    def __init__(self, client_id: str, data: np.ndarray,
+                 registry: Optional[ActiveCodeRegistry] = None,
+                 delay_fn: Optional[Callable[[TaskSpec], float]] = None):
+        self.client_id = client_id
+        self.data = np.asarray(data, dtype=np.float64)
+        self.registry = registry or ActiveCodeRegistry()
+        self.delay_fn = delay_fn
+        self._cursor = 0
+        self._lock = threading.Lock()
+        # extension point (federated learning etc.)
+        self.method_handlers: Dict[str, Callable[["ClientApp", TaskSpec], TaggedResult]] = {}
+
+    # -- data stream ----------------------------------------------------------
+    def next_window(self, n_values: int) -> np.ndarray:
+        with self._lock:
+            if self._cursor + n_values > len(self.data):
+                self._cursor = 0
+            window = self.data[self._cursor: self._cursor + n_values]
+            self._cursor += n_values
+        return window
+
+    # -- task execution ---------------------------------------------------------
+    def execute(self, task: TaskSpec) -> TaggedResult:
+        t0 = time.perf_counter()
+        if self.delay_fn is not None:
+            time.sleep(self.delay_fn(task))
+
+        if task.kind == AssignmentKind.CODE_REPLACEMENT:
+            assert task.code is not None
+            self.registry.install(task.code)  # re-validates on the client
+            return TaggedResult(self.client_id, task.iteration,
+                                task.code.md5, payload="installed",
+                                compute_ms=_ms(t0))
+
+        if task.method in self.method_handlers:
+            return self.method_handlers[task.method](self, task)
+
+        n_values = int(task.params.get("n_values", 16))
+        window = self.next_window(n_values)
+
+        if task.method in BUILTIN_METHODS:
+            value = BUILTIN_METHODS[task.method](window)
+            return TaggedResult(self.client_id, task.iteration,
+                                f"builtin:{task.method}", payload=value,
+                                compute_ms=_ms(t0))
+
+        # custom method: resolve *now* (reload-per-iteration semantics)
+        resolved = self.registry.resolve(task.params.get("code_user", ""),
+                                         task.method)
+        if resolved is None:
+            raise KeyError(
+                f"client {self.client_id}: no custom code for slot "
+                f"{task.method!r}")
+        value = resolved.fn(window)
+        return TaggedResult(self.client_id, task.iteration, resolved.md5,
+                            payload=_to_py(value), compute_ms=_ms(t0))
+
+
+class CloudApp:
+    """The external application on the cloud (off-board aggregation)."""
+
+    def __init__(self, registry: Optional[ActiveCodeRegistry] = None):
+        self.registry = registry or ActiveCodeRegistry()
+
+    def install(self, mod: ActiveModule) -> None:
+        self.registry.install(mod)
+
+    def aggregate(self, spec: AssignmentSpec, accepted: Sequence[TaggedResult]) -> Any:
+        payloads = [r.payload for r in accepted]
+        agg_slot = spec.params.get("cloud_method", "")
+        if agg_slot:
+            resolved = self.registry.resolve(spec.user_id, agg_slot)
+            if resolved is not None:
+                return _to_py(resolved.fn(np.asarray(payloads)))
+            if agg_slot in BUILTIN_METHODS:
+                return BUILTIN_METHODS[agg_slot](np.asarray(payloads))
+            raise KeyError(f"cloud: unknown aggregation {agg_slot!r}")
+        return payloads  # raw per-client values
+
+
+def _ms(t0: float) -> float:
+    return (time.perf_counter() - t0) * 1e3
+
+
+def _to_py(v: Any) -> Any:
+    if hasattr(v, "item") and getattr(v, "ndim", None) == 0:
+        return v.item()
+    if hasattr(v, "tolist"):
+        return v.tolist()
+    return v
+
+
+# ---------------------------------------------------------------------------
+# Actors
+# ---------------------------------------------------------------------------
+
+
+class TaskHandler(Actor):
+    """Temporary: executes exactly one task on the client app, replies,
+    terminates (OODIDA's x', y', z')."""
+
+    def __init__(self, name: str, app: ClientApp, task: TaskSpec, handler: str):
+        super().__init__(name)
+        self.app = app
+        self.task = task
+        self.handler = handler
+
+    def on_start(self) -> None:
+        try:
+            result = self.app.execute(self.task)
+            self.send(self.handler, TaskDone(self.task, result))
+        except Exception as e:  # noqa: BLE001 - report, don't crash the node
+            err = f"{type(e).__name__}: {e}"
+            dummy = TaggedResult(self.task.client_id, self.task.iteration,
+                                 "error", payload=None)
+            self.send(self.handler, TaskDone(self.task, dummy, error=err))
+        finally:
+            self.stop()
+
+    def handle(self, sender, msg) -> None:  # no inbound messages expected
+        pass
+
+
+class ClientNode(Actor):
+    """Permanent per-client Erlang node (OODIDA's x, y, z)."""
+
+    def __init__(self, name: str, app: ClientApp):
+        super().__init__(name)
+        self.app = app
+        self._task_seq = 0
+
+    def handle(self, sender, msg) -> None:
+        if isinstance(msg, NewTask):
+            self._task_seq += 1
+            handler_name = f"{self.name}.task{self._task_seq}"
+            assert self._system is not None
+            self._system.spawn(TaskHandler(handler_name, self.app, msg.task,
+                                           msg.handler))
+
+
+class AssignmentHandler(Actor):
+    """Temporary per-assignment coordinator (OODIDA's b')."""
+
+    def __init__(self, name: str, spec: AssignmentSpec,
+                 client_nodes: Dict[str, str], cloud_app: CloudApp,
+                 cloud: str, policy: QuorumPolicy,
+                 straggler_grace_s: float = 0.25):
+        super().__init__(name)
+        self.spec = spec
+        self.client_nodes = client_nodes      # client_id -> actor name
+        self.cloud_app = cloud_app
+        self.cloud = cloud
+        self.policy = policy
+        self.grace = straggler_grace_s
+        self.iteration = 0
+        self.collector: Optional[IterationCollector] = None
+        self._timer: Optional[threading.Timer] = None
+        self._committed_iterations = 0
+
+    # -- helpers ----------------------------------------------------------------
+    def _targets(self) -> List[str]:
+        ids = self.spec.client_ids or tuple(self.client_nodes)
+        return [c for c in ids if c in self.client_nodes]
+
+    def on_start(self) -> None:
+        if (self.spec.kind == AssignmentKind.CODE_REPLACEMENT
+                and self.spec.target in (Target.CLOUD, Target.BOTH)):
+            assert self.spec.code is not None
+            self.cloud_app.install(self.spec.code)
+            if self.spec.target == Target.CLOUD:
+                self.send(self.cloud, AssignmentDone(
+                    self.spec.assignment_id, Status.DONE,
+                    detail=f"cloud code {self.spec.code.md5} deployed"))
+                self.stop()
+                return
+        self._start_iteration()
+
+    def _start_iteration(self) -> None:
+        targets = self._targets()
+        if not targets:
+            self.send(self.cloud, AssignmentDone(
+                self.spec.assignment_id, Status.FAILED, detail="no clients"))
+            self.stop()
+            return
+        self.collector = IterationCollector(
+            iteration=self.iteration, n_clients=len(targets),
+            policy=self.policy)
+        for cid in targets:
+            task = TaskSpec.for_client(self.spec, cid, self.iteration)
+            self.send(self.client_nodes[cid], NewTask(task, self.name))
+
+    def _arm_deadline(self) -> None:
+        if self._timer is None:
+            it = self.iteration
+            sys_ = self._system
+            name = self.name
+            self._timer = threading.Timer(
+                self.grace, lambda: sys_.send(name, Deadline(it)))
+            self._timer.daemon = True
+            self._timer.start()
+
+    def handle(self, sender, msg) -> None:
+        if isinstance(msg, TaskDone):
+            if msg.task.iteration != self.iteration or self.collector is None:
+                return  # straggler from an already-committed iteration
+            if msg.error is not None:
+                # count errored client as a dropped (distinct-hash) result
+                self.collector.add(TaggedResult(
+                    msg.task.client_id, self.iteration, f"error:{msg.error}"))
+            else:
+                self.collector.add(msg.result)
+            if self.collector.complete():
+                self._commit()
+            elif self.collector.ready():
+                self._arm_deadline()
+        elif isinstance(msg, Deadline):
+            if msg.iteration == self.iteration and self.collector is not None:
+                self._commit()
+
+    def _commit(self) -> None:
+        if self._timer is not None:
+            self._timer.cancel()
+            self._timer = None
+        assert self.collector is not None
+        outcome = self.collector.commit()
+        n_strag = (self.collector.n_clients - len(self.collector.results))
+
+        if self.spec.kind == AssignmentKind.CODE_REPLACEMENT:
+            ok = all(r.payload == "installed" for r in outcome.accepted)
+            total = len(outcome.accepted)
+            done = (ok and total == self.collector.n_clients)
+            self.send(self.cloud, AssignmentDone(
+                self.spec.assignment_id,
+                Status.DONE if done else Status.FAILED,
+                detail=f"{total}/{self.collector.n_clients} clients installed "
+                       f"{self.spec.code.md5 if self.spec.code else '?'}"))
+            self.stop()
+            return
+
+        value = self.cloud_app.aggregate(self.spec, outcome.accepted)
+        self.send(self.cloud, IterationResult(
+            assignment_id=self.spec.assignment_id,
+            iteration=self.iteration,
+            value=value,
+            winning_md5=outcome.winning_md5,
+            n_accepted=len(outcome.accepted),
+            n_dropped=len(outcome.dropped),
+            n_stragglers=n_strag,
+        ))
+        self._committed_iterations += 1
+        self.collector = None
+        if self._committed_iterations >= self.spec.iterations:
+            self.send(self.cloud, AssignmentDone(self.spec.assignment_id,
+                                                 Status.DONE))
+            self.stop()
+        else:
+            self.iteration += 1
+            self._start_iteration()
+
+    def on_stop(self) -> None:
+        if self._timer is not None:
+            self._timer.cancel()
+
+
+class CloudNode(Actor):
+    """Permanent central node (OODIDA's b). Routes user assignments to
+    fresh AssignmentHandlers and streams results back to user queues."""
+
+    def __init__(self, name: str, client_nodes: Dict[str, str],
+                 cloud_app: CloudApp, policy: QuorumPolicy):
+        super().__init__(name)
+        self.client_nodes = client_nodes
+        self.cloud_app = cloud_app
+        self.policy = policy
+        self._user_queues: Dict[str, "queue.Queue[Any]"] = {}
+        self._handler_seq = 0
+
+    def handle(self, sender, msg) -> None:
+        if isinstance(msg, SubmitAssignment):
+            spec = msg.spec
+            self._user_queues[spec.assignment_id] = msg.reply_to
+            self._handler_seq += 1
+            name = f"{self.name}.asg{self._handler_seq}"
+            handler = AssignmentHandler(
+                name, spec, self.client_nodes, self.cloud_app, self.name,
+                self.policy,
+                straggler_grace_s=float(spec.params.get("straggler_grace_s",
+                                                        0.25)))
+            assert self._system is not None
+            self._system.spawn(handler)
+            self._system.monitor(self.name, name)
+            self._handler_assignments = getattr(self, "_handler_assignments", {})
+            self._handler_assignments[name] = spec.assignment_id
+        elif isinstance(msg, (IterationResult, AssignmentDone)):
+            q = self._user_queues.get(msg.assignment_id)
+            if q is not None:
+                q.put(msg)
+                if isinstance(msg, AssignmentDone):
+                    self._user_queues.pop(msg.assignment_id, None)
+        elif isinstance(msg, Down):
+            if msg.reason is not None:   # handler crashed: fail the assignment
+                asg = getattr(self, "_handler_assignments", {}).get(msg.actor)
+                if asg and asg in self._user_queues:
+                    self._user_queues.pop(asg).put(AssignmentDone(
+                        asg, Status.FAILED, detail=f"handler crash: {msg.reason}"))
+
+
+# ---------------------------------------------------------------------------
+# User frontend (f) + Fleet assembly
+# ---------------------------------------------------------------------------
+
+
+class UserFrontend:
+    """The analyst's Python library (OODIDA's f): validates code before
+    ingestion, submits assignments, iterates results."""
+
+    def __init__(self, user_id: str, system: ActorSystem, cloud: str,
+                 slot_specs: Sequence[SlotSpec] = ()):
+        self.user_id = user_id
+        self.system = system
+        self.cloud = cloud
+        self._frontend_registry = ActiveCodeRegistry()  # for validation only
+        for s in slot_specs:
+            self._frontend_registry.declare_slot(s)
+        self._queues: Dict[str, "queue.Queue[Any]"] = {}
+
+    # -- code deployment (active-code replacement) ----------------------------
+    def deploy_code(self, slot: str, source: str,
+                    target: Target = Target.CLIENTS,
+                    client_ids: Sequence[str] = ()) -> AssignmentSpec:
+        """Validate (front-end checks) then ship as a special assignment."""
+        # raises ValidationError before anything is sent — the paper's gate
+        self._frontend_registry.deploy(self.user_id, slot, source)
+        mod = self._frontend_registry.versions(self.user_id, slot)[-1]
+        spec = AssignmentSpec.new(
+            self.user_id, AssignmentKind.CODE_REPLACEMENT, target,
+            client_ids=client_ids, code=mod, method=slot)
+        return self._submit(spec)
+
+    # -- analytics assignments --------------------------------------------------
+    def submit_analytics(self, method: str, *, iterations: int = 1,
+                         client_ids: Sequence[str] = (),
+                         params: Optional[Dict[str, Any]] = None) -> AssignmentSpec:
+        p = dict(params or {})
+        p.setdefault("code_user", self.user_id)
+        spec = AssignmentSpec.new(
+            self.user_id, AssignmentKind.ANALYTICS, Target.CLIENTS,
+            client_ids=client_ids, iterations=iterations, params=p,
+            method=method)
+        return self._submit(spec)
+
+    def _submit(self, spec: AssignmentSpec) -> AssignmentSpec:
+        q: "queue.Queue[Any]" = queue.Queue()
+        self._queues[spec.assignment_id] = q
+        # exercise the wire codec on every submission (bytes in, bytes out)
+        spec = AssignmentSpec.from_wire(spec.to_wire())
+        self.system.send(self.cloud, SubmitAssignment(spec, q))
+        return spec
+
+    # -- results ------------------------------------------------------------------
+    def next_event(self, spec: AssignmentSpec, timeout: float = 10.0) -> Any:
+        return self._queues[spec.assignment_id].get(timeout=timeout)
+
+    def wait_done(self, spec: AssignmentSpec, timeout: float = 30.0
+                  ) -> Tuple[List[IterationResult], AssignmentDone]:
+        results: List[IterationResult] = []
+        deadline = time.time() + timeout
+        while True:
+            ev = self._queues[spec.assignment_id].get(
+                timeout=max(0.01, deadline - time.time()))
+            if isinstance(ev, AssignmentDone):
+                return results, ev
+            results.append(ev)
+
+
+@dataclass
+class Fleet:
+    """A simulated OODIDA deployment: one cloud + n clients."""
+
+    system: ActorSystem
+    cloud_name: str
+    cloud_app: CloudApp
+    client_apps: Dict[str, ClientApp]
+
+    @staticmethod
+    def create(n_clients: int, *, seed: int = 0,
+               policy: Optional[QuorumPolicy] = None,
+               slot_specs: Sequence[SlotSpec] = (),
+               data_per_client: int = 4096,
+               delay_fns: Optional[Dict[str, Callable]] = None,
+               store_root: Optional[str] = None) -> "Fleet":
+        rng = np.random.default_rng(seed)
+        system = ActorSystem()
+        client_nodes: Dict[str, str] = {}
+        client_apps: Dict[str, ClientApp] = {}
+        for i in range(n_clients):
+            cid = f"c{i:03d}"
+            reg = ActiveCodeRegistry(
+                store_root=f"{store_root}/{cid}" if store_root else None)
+            for s in slot_specs:
+                reg.declare_slot(s)
+            app = ClientApp(
+                cid,
+                data=rng.normal(loc=float(i), scale=1.0, size=data_per_client),
+                registry=reg,
+                delay_fn=(delay_fns or {}).get(cid),
+            )
+            node = ClientNode(f"client.{cid}", app)
+            system.spawn(node)
+            client_nodes[cid] = node.name
+            client_apps[cid] = app
+        cloud_reg = ActiveCodeRegistry(
+            store_root=f"{store_root}/cloud" if store_root else None)
+        for s in slot_specs:
+            cloud_reg.declare_slot(s)
+        cloud_app = CloudApp(cloud_reg)
+        cloud = CloudNode("cloud", client_nodes, cloud_app,
+                          policy or QuorumPolicy())
+        system.spawn(cloud)
+        return Fleet(system=system, cloud_name=cloud.name,
+                     cloud_app=cloud_app, client_apps=client_apps)
+
+    def frontend(self, user_id: str,
+                 slot_specs: Sequence[SlotSpec] = ()) -> UserFrontend:
+        return UserFrontend(user_id, self.system, self.cloud_name, slot_specs)
+
+    def shutdown(self) -> None:
+        self.system.shutdown()

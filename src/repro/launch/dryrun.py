@@ -1,0 +1,239 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: AOT lower + compile every (arch x shape) on the
+production meshes, extract memory/cost/collective artifacts for the
+roofline analysis.
+
+MUST be run as its own process (the XLA_FLAGS line above executes before
+any other import, including jax — jax locks device count on first init):
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-135m --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod both \
+        --out experiments/dryrun
+
+Artifacts land one JSON per (arch, shape, mesh) cell; EXPERIMENTS.md's
+§Dry-run and §Roofline tables are generated from them.
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.analysis.roofline import roofline_from_artifacts
+from repro.configs import ARCH_NAMES, SHAPES, make_run_config, shape_supported
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import (
+    abstract_cache,
+    abstract_state,
+    cache_shardings,
+    input_specs,
+    param_shardings,
+    state_shardings,
+)
+from repro.models import build_model
+from repro.optim.api import build_optimizer
+from repro.sharding.auto import run_rules
+from repro.serve.engine import default_sampler, make_serve_step
+from repro.train.step import build_ctx, make_train_step
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+               run_overrides: Optional[Dict[str, Any]] = None,
+               preset: str = "baseline", verbose: bool = True):
+    """Returns (lowered, compiled, run_cfg, mesh, kind)."""
+    run_cfg = make_run_config(arch, shape_name, multi_pod=multi_pod,
+                              preset=preset)
+    if run_overrides:
+        run_cfg = run_cfg.replace(**run_overrides)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = run_rules(run_cfg)
+    model = build_model(run_cfg.model)
+    cfg = run_cfg.model
+    shp = run_cfg.shape
+    kind = shp.kind
+    ins = input_specs(run_cfg, mesh, rules)
+
+    with jax.set_mesh(mesh):
+        p_sds = jax.eval_shape(model.init,
+                               jax.ShapeDtypeStruct((2,), jnp.uint32))
+        p_shd = param_shardings(model, p_sds, rules, mesh)
+
+        if kind == "train":
+            optimizer = build_optimizer(run_cfg.train, cfg.param_dtype)
+            state_sds = abstract_state(model, optimizer, run_cfg)
+            # ZeRO-1 (params TP-only + data-sharded optimizer states):
+            # derive the states' shardings from an FSDP rule set so
+            # GSPMD emits the reduce-scatter(grads) / all-gather(params)
+            # schedule once per step instead of per-layer weight gathers.
+            opt_p_shd = p_shd
+            if run_cfg.train.zero1 and not run_cfg.sharding.fsdp_params:
+                from repro.sharding.specs import make_rules
+                fsdp_rules = make_rules(
+                    run_cfg.mesh.axes, fsdp_params=True,
+                    seq_shard_activations=(
+                        run_cfg.sharding.seq_shard_activations),
+                    tp_axis=run_cfg.sharding.tp_axis,
+                    fsdp_axis=run_cfg.sharding.fsdp_axis)
+                opt_p_shd = param_shardings(model, p_sds, fsdp_rules, mesh)
+            state_shd = state_shardings(model, optimizer, run_cfg,
+                                        state_sds, opt_p_shd, mesh)
+            state_shd = state_shd._replace(params=p_shd)
+            ctx = build_ctx(run_cfg, mesh=mesh, rules=rules)
+            step = make_train_step(model, run_cfg, optimizer, ctx, mesh=mesh)
+            jitted = jax.jit(
+                step,
+                in_shardings=(state_shd, {k: v.sharding
+                                          for k, v in ins.items()}),
+                out_shardings=(state_shd, None),
+                donate_argnums=(0,))
+            lowered = jitted.lower(state_sds, ins)
+        elif kind == "prefill":
+            ctx = build_ctx(run_cfg, mesh=mesh, rules=rules)
+            cache_sds = abstract_cache(model, run_cfg, ctx)
+            c_shd = cache_shardings(model, cache_sds, rules, mesh)
+            if cfg.is_encoder_decoder:
+                fn = lambda p, t, f, c: model.prefill(p, t, f, c, ctx)
+                args = (p_sds, ins["tokens"], ins["frames"], cache_sds)
+                in_shd = (p_shd, ins["tokens"].sharding,
+                          ins["frames"].sharding, c_shd)
+            else:
+                fn = lambda p, t, c: model.prefill(p, t, c, ctx)
+                args = (p_sds, ins["tokens"], cache_sds)
+                in_shd = (p_shd, ins["tokens"].sharding, c_shd)
+            jitted = jax.jit(fn, in_shardings=in_shd,
+                             out_shardings=(None, c_shd, None),
+                             donate_argnums=(len(args) - 1,))
+            lowered = jitted.lower(*args)
+        else:   # decode
+            ctx = build_ctx(run_cfg, mesh=mesh, rules=rules, decode=True)
+            cache_sds = abstract_cache(model, run_cfg, ctx)
+            c_shd = cache_shardings(model, cache_sds, rules, mesh)
+            step = make_serve_step(model, ctx, default_sampler)
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_shd, ins["token"].sharding, c_shd,
+                              ins["pos"].sharding, ins["key"].sharding),
+                out_shardings=(ins["token"].sharding, c_shd,
+                               ins["pos"].sharding, ins["key"].sharding),
+                donate_argnums=(2,))
+            lowered = jitted.lower(p_sds, ins["token"], cache_sds,
+                                   ins["pos"], ins["key"])
+
+        t0 = time.perf_counter()
+        compiled = lowered.compile()
+        compile_s = time.perf_counter() - t0
+    if verbose:
+        print(f"  compiled in {compile_s:.1f}s", flush=True)
+    return lowered, compiled, run_cfg, mesh, kind
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             out_dir: Optional[str] = None,
+             run_overrides: Optional[Dict[str, Any]] = None,
+             preset: str = "baseline",
+             tag: str = "") -> Dict[str, Any]:
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    shp = SHAPES[shape_name]
+    cfg = make_run_config(arch, shape_name).model
+    ok, why = shape_supported(cfg, shp)
+    cell = f"{arch} x {shape_name} @ {mesh_name}"
+    if not ok:
+        print(f"SKIP  {cell}: {why}", flush=True)
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "status": "skip", "reason": why}
+    print(f"LOWER {cell}", flush=True)
+    t0 = time.perf_counter()
+    try:
+        lowered, compiled, run_cfg, mesh, kind = lower_cell(
+            arch, shape_name, multi_pod=multi_pod,
+            run_overrides=run_overrides, preset=preset)
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        terms = roofline_from_artifacts(
+            arch=arch, shape=shape_name, mesh_name=mesh_name,
+            chips=mesh.size, cost=cost, hlo_text=hlo, memory=mem,
+            model_cfg=run_cfg.model, shape_cfg=run_cfg.shape, kind=kind)
+        rec = {
+            "status": "ok",
+            "kind": kind,
+            "elapsed_s": time.perf_counter() - t0,
+            "memory": {
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+                "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+                "alias_bytes": getattr(mem, "alias_size_in_bytes", 0),
+                "generated_code_bytes": getattr(
+                    mem, "generated_code_size_in_bytes", 0),
+            },
+            "cost": {k: cost.get(k, 0.0)
+                     for k in ("flops", "bytes accessed",
+                               "utilization operand 0", "transcendentals")},
+            **terms.as_dict(),
+        }
+        bpd = (rec["memory"]["argument_bytes"] + rec["memory"]["temp_bytes"]
+               + rec["memory"]["output_bytes"]
+               - rec["memory"]["alias_bytes"]) / mesh.size
+        print(f"  OK   bytes/device={bpd/2**30:.2f}GiB "
+              f"flops/chip={terms.flops_per_chip:.3g} "
+              f"bottleneck={terms.bottleneck} "
+              f"t_bound={terms.t_bound*1e3:.1f}ms "
+              f"roofline_frac={terms.roofline_fraction:.3f}", flush=True)
+    except Exception as e:  # noqa: BLE001
+        rec = {"status": "fail", "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc(limit=16),
+               "elapsed_s": time.perf_counter() - t0}
+        print(f"  FAIL {type(e).__name__}: {str(e)[:300]}", flush=True)
+    rec.update({"arch": arch, "shape": shape_name, "mesh": mesh_name})
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        suffix = f"-{tag}" if tag else ""
+        path = os.path.join(
+            out_dir, f"{arch}__{shape_name}__{mesh_name}{suffix}.json")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1, default=str)
+    return rec
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", choices=("on", "off", "both"),
+                    default="off")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--preset", choices=("baseline", "optimized"),
+                    default="baseline")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    cells = []
+    archs = ARCH_NAMES if (args.all or args.arch is None) else (args.arch,)
+    shapes = tuple(SHAPES) if (args.all or args.shape is None) \
+        else (args.shape,)
+    pods = {"on": (True,), "off": (False,),
+            "both": (False, True)}[args.multi_pod]
+    for arch in archs:
+        for shape in shapes:
+            for mp in pods:
+                cells.append((arch, shape, mp))
+
+    n_fail = 0
+    for arch, shape, mp in cells:
+        rec = run_cell(arch, shape, multi_pod=mp, out_dir=args.out,
+                       preset=args.preset, tag=args.tag)
+        n_fail += rec["status"] == "fail"
+    print(f"done: {len(cells)} cells, {n_fail} failures", flush=True)
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,13 @@
+"""Model zoo: decoder-only LM (dense/moe/ssm/hybrid/vlm) + enc-dec."""
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig
+
+
+def build_model(cfg: ModelConfig):
+    """Factory: returns the model object for a config (LM or EncDec)."""
+    if cfg.is_encoder_decoder:
+        from repro.models.encdec import EncDec
+        return EncDec(cfg)
+    from repro.models.lm import LM
+    return LM(cfg)

@@ -1,0 +1,298 @@
+"""Attention block: GQA projections, optional qk-norm, RoPE, KV cache.
+
+Train/prefill call into kernels.ops.attention (blockwise / triangular /
+pallas); decode does a cache update + masked attention over the cache.
+Logical axes: heads are tensor-parallel ("heads" -> model axis), the
+embed dim of every projection is the FSDP dim.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from repro.models import layers
+
+
+def attn_init(key, cfg: ModelConfig, dtype) -> Dict[str, jax.Array]:
+    d, hq, hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd()
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": layers.dense_init(ks[0], d, (hq, hd), dtype),
+        "wk": layers.dense_init(ks[1], d, (hkv, hd), dtype),
+        "wv": layers.dense_init(ks[2], d, (hkv, hd), dtype),
+        "wo": layers.trunc_normal(ks[3], (hq, hd, d), (hq * hd) ** -0.5, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def attn_axes(cfg: ModelConfig) -> Dict[str, Tuple[str, ...]]:
+    a = {
+        "wq": ("embed", "heads", "head_dim"),
+        "wk": ("embed", "kv_heads", "head_dim"),
+        "wv": ("embed", "kv_heads", "head_dim"),
+        "wo": ("heads", "head_dim", "embed"),
+    }
+    if cfg.qk_norm:
+        a["q_norm"] = ("head_dim",)
+        a["k_norm"] = ("head_dim",)
+    return a
+
+
+def _project_qkv(p, x, cfg: ModelConfig, positions, *, rope: bool = True):
+    q = jnp.einsum("bsd,dhk->bhsk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bhsk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bhsk", x, p["wv"])
+    if cfg.qk_norm:
+        q = layers.rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = layers.rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    if rope:
+        q = layers.apply_rope(q, positions, cfg.rope_theta)
+        k = layers.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_apply(
+    p: Dict[str, jax.Array], x: jax.Array, cfg: ModelConfig, *,
+    causal: bool = True, window: int = 0, impl: str = "blockwise",
+    rope: bool = True, positions: Optional[jax.Array] = None,
+    kv: Optional[Tuple[jax.Array, jax.Array]] = None, prefix: int = 0,
+    mesh=None, tp_axis: str = "model",
+    batch_axes: Tuple[str, ...] = ("pod", "data"),
+) -> jax.Array:
+    """Full-sequence attention (train / prefill / encoder).
+
+    ``kv`` overrides keys/values (cross-attention: precomputed from the
+    encoder). x [B,S,d] -> [B,S,d].
+    """
+    B, S, d = x.shape
+    if positions is None:
+        positions = jnp.arange(S)
+    if kv is None:
+        q, k, v = _project_qkv(p, x, cfg, positions, rope=rope)
+    else:
+        q = jnp.einsum("bsd,dhk->bhsk", x, p["wq"])
+        if cfg.qk_norm:
+            q = layers.rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        if rope:
+            q = layers.apply_rope(q, positions, cfg.rope_theta)
+        k, v = kv
+    if impl == "ctxpar":
+        out = attn_ctxpar(q, k, v, mesh, axis=tp_axis, causal=causal,
+                          window=window, prefix=prefix,
+                          batch_axes=batch_axes)
+    else:
+        out = ops.attention(q, k, v, causal=causal, window=window,
+                            impl=impl, prefix=prefix)
+    return jnp.einsum("bhsk,hkd->bsd", out, p["wo"])
+
+
+def attn_ctxpar(q, k, v, mesh, *, axis: str = "model", causal: bool = True,
+                window: int = 0, prefix: int = 0,
+                batch_axes: Tuple[str, ...] = ("pod", "data")) -> jax.Array:
+    """Context-parallel attention over the TP axis.
+
+    For archs whose head counts do not divide the TP degree (smollm 9H,
+    yi 56H, whisper 20H, hymba 25H on a 16-way axis) attention would
+    otherwise be *replicated* across all TP ranks — 16x wasted flops and
+    score-matrix traffic. Instead the QUERY sequence is sharded over the
+    TP axis (each rank computes its Sq/n rows against the full K/V) and
+    outputs concatenate for free along the sharded seq dim. K/V are
+    gathered once per layer ([B,Hkv,S,D] — MBs) against an S^2-sized
+    compute saving. Exact: masking uses absolute positions via q_start.
+    """
+    from jax.sharding import PartitionSpec as P
+    from repro.kernels.xla import attention_blockwise as _xla_blockwise
+
+    n = mesh.shape[axis]
+    S = q.shape[2]
+    assert S % n == 0, (S, n)
+    S_l = S // n
+    # fully-manual region: a partial-manual shard_map would force the
+    # batch dim replicated over the (auto) data axis at the boundary —
+    # a 16x gather of every activation (measured; see EXPERIMENTS §Perf)
+    b_axes = tuple(a for a in batch_axes if a in mesh.shape)
+    bspec = b_axes if len(b_axes) > 1 else (b_axes[0] if b_axes else None)
+
+    def body(q_l, k_l, v_l):
+        r = jax.lax.axis_index(axis)
+        # explicit K/V all-gather (one [B_l,Hkv,S,D] gather per layer —
+        # MBs, vs the S^2 compute this shards 16 ways). f32 at the
+        # boundary: the online-softmax computes in f32 anyway, and
+        # XLA:CPU's AllReducePromotion pass crashes on bf16 gathers.
+        k_f = jax.lax.all_gather(k_l.astype(jnp.float32), axis, axis=2,
+                                 tiled=True)
+        v_f = jax.lax.all_gather(v_l.astype(jnp.float32), axis, axis=2,
+                                 tiled=True)
+        return _xla_blockwise(q_l, k_f, v_f, causal=causal, window=window,
+                              prefix=prefix, q_start=r * S_l)
+
+    spec = P(bspec, None, axis, None)
+    return jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(spec, spec, spec),
+        out_specs=spec,
+        axis_names=set(mesh.axis_names), check_vma=False,
+    )(q, k, v)
+
+
+def cross_kv(p: Dict[str, jax.Array], enc: jax.Array, cfg: ModelConfig,
+             rope: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """Precompute cross-attention K/V from encoder output [B,Senc,d]."""
+    k = jnp.einsum("bsd,dhk->bhsk", enc, p["wk"])
+    v = jnp.einsum("bsd,dhk->bhsk", enc, p["wv"])
+    if cfg.qk_norm:
+        k = layers.rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# Decode path (single new token against a KV cache)
+# ---------------------------------------------------------------------------
+
+class KVLayerCache(NamedTuple):
+    k: jax.Array        # [B, Hkv, Smax, D]
+    v: jax.Array
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_seq: int,
+                  dtype) -> KVLayerCache:
+    shape = (batch, cfg.num_kv_heads, max_seq, cfg.hd())
+    return KVLayerCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+def kv_cache_axes() -> KVLayerCache:
+    return KVLayerCache(("batch", "kv_heads", "kv_seq", "head_dim"),
+                        ("batch", "kv_heads", "kv_seq", "head_dim"))
+
+
+def attn_decode(
+    p: Dict[str, jax.Array], x: jax.Array, cache: KVLayerCache,
+    pos: jax.Array, cfg: ModelConfig, *,
+    window: int = 0, impl: str = "dense", rope: bool = True, prefix: int = 0,
+) -> Tuple[jax.Array, KVLayerCache]:
+    """x [B,1,d]; pos [] scalar current position. Returns (out, cache)."""
+    B = x.shape[0]
+    positions = jnp.full((1,), pos, jnp.int32)
+    q, k_new, v_new = _project_qkv(p, x, cfg, positions, rope=rope)
+    k = jax.lax.dynamic_update_slice_in_dim(
+        cache.k, k_new.astype(cache.k.dtype), pos, axis=2)
+    v = jax.lax.dynamic_update_slice_in_dim(
+        cache.v, v_new.astype(cache.v.dtype), pos, axis=2)
+    if not (isinstance(window, int) and window == 0):
+        # sliding-window decode: band mask pos-window < j <= pos
+        w = jnp.asarray(window)
+        k_posn = jnp.arange(k.shape[2])
+        band = (k_posn <= pos) & (((pos - k_posn) < w) | (w <= 0))
+        if prefix:
+            band |= (k_posn < prefix) & (k_posn <= pos)
+        out = _masked_decode(q, k.astype(q.dtype), v.astype(q.dtype),
+                             band[None, None, None, :])
+    else:
+        kv_len = jnp.full((B,), pos + 1, jnp.int32)
+        out = ops.attention(q, k.astype(q.dtype), v.astype(q.dtype),
+                            causal=False, window=0, impl=impl, kv_len=kv_len)
+    y = jnp.einsum("bhsk,hkd->bsd", out, p["wo"])
+    return y, KVLayerCache(k, v)
+
+
+def attn_decode_seqshard(
+    p: Dict[str, jax.Array], x: jax.Array, cache: KVLayerCache,
+    pos: jax.Array, cfg: ModelConfig, mesh, *,
+    axis: str = "model", window: int = 0, rope: bool = True, prefix: int = 0,
+) -> Tuple[jax.Array, KVLayerCache]:
+    """Flash-decode over a sequence-sharded KV cache.
+
+    cache.k/v [B, Hkv, S, D] are sharded over S on mesh axis ``axis``
+    (kv_heads never divide 16 on the assigned archs, and at batch 1 the
+    data axis is idle — the seq dim is the only way to spread a 500k KV).
+    Each rank computes a partial online-softmax over its KV slice; the
+    merge is one pmax + two psums of [B, Hq, D]-sized partials — O(B*H*D)
+    bytes on the wire instead of all-gathering the O(B*Hkv*S*D) cache.
+    The new token's K/V is written by the owning rank only.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    B = x.shape[0]
+    n = mesh.shape[axis]
+    S = cache.k.shape[2]
+    assert S % n == 0, (S, n)
+    slice_len = S // n
+    positions = jnp.full((1,), pos, jnp.int32)
+    q, k_new, v_new = _project_qkv(p, x, cfg, positions, rope=rope)
+    scale = cfg.hd() ** -0.5
+
+    def body(q, k_new, v_new, k_sl, v_sl):
+        r = jax.lax.axis_index(axis)
+        start = r * slice_len
+        local = pos - start
+        own = (local >= 0) & (local < slice_len)
+        loc = jnp.clip(local, 0, slice_len - 1)
+        k_upd = jax.lax.dynamic_update_slice_in_dim(
+            k_sl, k_new.astype(k_sl.dtype), loc, axis=2)
+        v_upd = jax.lax.dynamic_update_slice_in_dim(
+            v_sl, v_new.astype(v_sl.dtype), loc, axis=2)
+        k_sl = jnp.where(own, k_upd, k_sl)
+        v_sl = jnp.where(own, v_upd, v_sl)
+
+        k_pos = start + jnp.arange(slice_len)
+        mask = k_pos <= pos
+        if not (isinstance(window, int) and window == 0):
+            w = jnp.asarray(window)
+            band = (pos - k_pos) < w
+            if prefix:
+                band |= k_pos < prefix
+            mask &= band | (w <= 0)
+
+        # grouped-q GQA: never materialize a q-head-expanded (or f32)
+        # copy of the cache — bf16 cache streams straight into the dots
+        # with fp32 accumulation (preferred_element_type).
+        Hkv = k_sl.shape[1]
+        group = q.shape[1] // Hkv
+        qg = q.reshape(q.shape[0], Hkv, group, q.shape[3])    # Sq==1
+        logits = jnp.einsum("bhgd,bhkd->bhgk", qg, k_sl,
+                            preferred_element_type=jnp.float32) * scale
+        logits = jnp.where(mask[None, None, None, :], logits, -1e30)
+        m = logits.max(axis=-1)                               # [B,Hkv,g]
+        pr = jnp.exp(logits - m[..., None])
+        pr = jnp.where(mask[None, None, None, :], pr, 0.0)
+        l = pr.sum(axis=-1)
+        acc = jnp.einsum("bhgk,bhkd->bhgd", pr.astype(v_sl.dtype), v_sl,
+                         preferred_element_type=jnp.float32)
+        m_g = jax.lax.pmax(m, axis)
+        corr = jnp.exp(m - m_g)
+        l_g = jax.lax.psum(l * corr, axis)
+        acc_g = jax.lax.psum(acc * corr[..., None], axis)
+        out = (acc_g / jnp.maximum(l_g, 1e-30)[..., None])
+        out = out.reshape(q.shape[0], q.shape[1], 1,
+                          q.shape[3]).astype(x.dtype)
+        return out, k_sl, v_sl
+
+    out, k_c, v_c = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(), P(), P(), P(None, None, axis, None),
+                  P(None, None, axis, None)),
+        out_specs=(P(), P(None, None, axis, None),
+                   P(None, None, axis, None)),
+        axis_names={axis}, check_vma=False,
+    )(q, k_new, v_new, cache.k, cache.v)
+    y = jnp.einsum("bhsk,hkd->bsd", out, p["wo"])
+    return y, KVLayerCache(k_c, v_c)
+
+
+def _masked_decode(q, k, v, mask):
+    group = q.shape[1] // k.shape[1]
+    kr = jnp.repeat(k, group, axis=1)
+    vr = jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        kr.astype(jnp.float32)) * (q.shape[-1] ** -0.5)
+    logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs,
+                      vr.astype(jnp.float32)).astype(q.dtype)

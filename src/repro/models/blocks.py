@@ -1,0 +1,294 @@
+"""Per-layer block assembly for all LM families.
+
+One layer's params are a flat dict; lm.py stacks L copies along a
+leading "layers" dim for lax.scan. The per-layer sliding window is a
+traced int32 (0 = full attention) so heterogeneous layer schedules
+(hymba's SWA + 3 global layers) still scan.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import layers, moe, ssm
+from repro.sharding.specs import AxisRules, constrain
+
+
+@dataclass(frozen=True)
+class ModelCtx:
+    """Everything a model fwd needs besides params: mesh + sharding rules
+    and kernel/impl selection."""
+    mesh: Any = None
+    rules: Optional[AxisRules] = None
+    attn_impl: str = "blockwise"
+    decode_attn_impl: str = "dense"
+    moe_impl: str = "ep"            # ep | dense
+    ssd_impl: str = "xla"
+    norm_impl: str = "xla"
+    gmm_impl: str = "auto"
+    tp_axis: str = "model"
+    batch_axes: Tuple[str, ...] = ("pod", "data")
+    remat_policy: str = "full"      # none | full | dots
+
+    def act(self, x, *axes):
+        return constrain(x, self.rules, axes, self.mesh)
+
+
+class LayerCache(NamedTuple):
+    """Uniform per-layer decode cache; unused fields are size-0 arrays so
+    the pytree structure is identical across layers (scan-stackable)."""
+    kv: attn.KVLayerCache
+    ssm: ssm.SSMLayerCache
+
+
+def _empty_kv() -> attn.KVLayerCache:
+    z = jnp.zeros((0,), jnp.float32)
+    return attn.KVLayerCache(z, z)
+
+
+def _empty_ssm() -> ssm.SSMLayerCache:
+    z = jnp.zeros((0,), jnp.float32)
+    return ssm.SSMLayerCache(z, z)
+
+
+# ---------------------------------------------------------------------------
+# Init / axes
+# ---------------------------------------------------------------------------
+
+def block_init(key, cfg: ModelConfig, dtype) -> Dict[str, Any]:
+    ks = jax.random.split(key, 6)
+    p: Dict[str, Any] = {"norm1": jnp.ones((cfg.d_model,), dtype)}
+    fam = cfg.family
+    if fam == "ssm":
+        p["ssm"] = ssm.ssm_init(ks[0], cfg, dtype)
+        return p
+    p["attn"] = attn.attn_init(ks[1], cfg, dtype)
+    p["norm2"] = jnp.ones((cfg.d_model,), dtype)
+    if fam == "hybrid":
+        p["ssm"] = ssm.ssm_init(ks[0], cfg, dtype)
+        p["branch_norm_attn"] = jnp.ones((cfg.d_model,), dtype)
+        p["branch_norm_ssm"] = jnp.ones((cfg.d_model,), dtype)
+        p["mlp"] = layers.mlp_init(ks[2], cfg.d_model, cfg.d_ff, "swiglu",
+                                   dtype)
+        return p
+    if cfg.is_moe:
+        p["moe"] = moe.moe_init(ks[3], cfg, dtype)
+    else:
+        kind = "gelu" if cfg.is_encoder_decoder else "swiglu"
+        p["mlp"] = layers.mlp_init(ks[2], cfg.d_model, cfg.d_ff, kind, dtype)
+    return p
+
+
+def block_axes(cfg: ModelConfig) -> Dict[str, Any]:
+    a: Dict[str, Any] = {"norm1": ("embed_act",)}
+    fam = cfg.family
+    if fam == "ssm":
+        a["ssm"] = ssm.ssm_axes(cfg)
+        return a
+    a["attn"] = attn.attn_axes(cfg)
+    a["norm2"] = ("embed_act",)
+    if fam == "hybrid":
+        a["ssm"] = ssm.ssm_axes(cfg)
+        a["branch_norm_attn"] = ("embed_act",)
+        a["branch_norm_ssm"] = ("embed_act",)
+        a["mlp"] = layers.mlp_axes("swiglu")
+        return a
+    if cfg.is_moe:
+        a["moe"] = moe.moe_axes()
+    else:
+        kind = "gelu" if cfg.is_encoder_decoder else "swiglu"
+        a["mlp"] = layers.mlp_axes(kind)
+    return a
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / full-sequence)
+# ---------------------------------------------------------------------------
+
+def block_apply(p, x, cfg: ModelConfig, ctx: ModelCtx, window
+                ) -> Tuple[jax.Array, jax.Array]:
+    """x [B,S,d] -> (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    fam = cfg.family
+    h = layers.rmsnorm(x, p["norm1"], cfg.norm_eps, ctx.norm_impl)
+    if fam == "ssm":
+        x = x + ctx.act(ssm.ssm_apply(p["ssm"], h, cfg, impl=ctx.ssd_impl),
+                        "batch", "seq", "embed_act")
+        return x, aux
+    if fam == "hybrid":
+        a = attn.attn_apply(p["attn"], h, cfg, window=window,
+                            impl=ctx.attn_impl, prefix=cfg.n_meta_tokens,
+                            mesh=ctx.mesh, tp_axis=ctx.tp_axis,
+                            batch_axes=ctx.batch_axes)
+        s = ssm.ssm_apply(p["ssm"], h, cfg, impl=ctx.ssd_impl)
+        mix = (layers.rmsnorm(a, p["branch_norm_attn"], cfg.norm_eps,
+                              ctx.norm_impl)
+               + layers.rmsnorm(s, p["branch_norm_ssm"], cfg.norm_eps,
+                                ctx.norm_impl)) * 0.5
+        x = x + ctx.act(mix, "batch", "seq", "embed_act")
+        h2 = layers.rmsnorm(x, p["norm2"], cfg.norm_eps, ctx.norm_impl)
+        x = x + ctx.act(layers.mlp_apply(p["mlp"], h2, "swiglu"),
+                        "batch", "seq", "embed_act")
+        return x, aux
+    # dense / moe / vlm decoder layer
+    x = x + ctx.act(
+        attn.attn_apply(p["attn"], h, cfg, window=window, impl=ctx.attn_impl,
+                        mesh=ctx.mesh, tp_axis=ctx.tp_axis,
+                        batch_axes=ctx.batch_axes),
+        "batch", "seq", "embed_act")
+    h2 = layers.rmsnorm(x, p["norm2"], cfg.norm_eps, ctx.norm_impl)
+    if cfg.is_moe:
+        y, aux = moe.moe_apply(p["moe"], h2, cfg, impl=ctx.moe_impl,
+                               mesh=ctx.mesh, tp_axis=ctx.tp_axis,
+                               batch_axes=ctx.batch_axes,
+                               gmm_impl=ctx.gmm_impl)
+    else:
+        kind = "gelu" if cfg.is_encoder_decoder else "swiglu"
+        y = layers.mlp_apply(p["mlp"], h2, kind)
+    x = x + ctx.act(y, "batch", "seq", "embed_act")
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# Prefill / decode
+# ---------------------------------------------------------------------------
+
+def init_layer_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype,
+                     kv_dtype) -> LayerCache:
+    fam = cfg.family
+    kv = (attn.init_kv_cache(cfg, batch, max_seq, kv_dtype)
+          if fam != "ssm" else _empty_kv())
+    st = (ssm.init_ssm_cache(cfg, batch, dtype)
+          if fam in ("ssm", "hybrid") else _empty_ssm())
+    return LayerCache(kv=kv, ssm=st)
+
+
+def cache_axes(cfg: ModelConfig) -> LayerCache:
+    fam = cfg.family
+    kv = attn.kv_cache_axes() if fam != "ssm" else attn.KVLayerCache(
+        (None,), (None,))
+    st = ssm.ssm_cache_axes() if fam in ("ssm", "hybrid") else \
+        ssm.SSMLayerCache((None,), (None,))
+    return LayerCache(kv=kv, ssm=st)
+
+
+def block_prefill(p, x, cfg: ModelConfig, ctx: ModelCtx, window,
+                  cache: LayerCache) -> Tuple[jax.Array, LayerCache]:
+    """Full-sequence forward that also fills the decode cache.
+
+    The KV cache slots [0:S] are written; the SSM state comes from the
+    chunked scan's final state.
+    """
+    fam = cfg.family
+    B, S, d = x.shape
+    h = layers.rmsnorm(x, p["norm1"], cfg.norm_eps, ctx.norm_impl)
+    aux0 = jnp.zeros((), jnp.float32)
+
+    new_kv, new_ssm = cache.kv, cache.ssm
+
+    if fam in ("ssm", "hybrid"):
+        s_out, new_ssm = ssm.ssm_prefill(p["ssm"], h, cfg, impl=ctx.ssd_impl)
+
+    if fam != "ssm":
+        positions = jnp.arange(S)
+        q, k, v = attn._project_qkv(p["attn"], h, cfg, positions)
+        new_kv = attn.KVLayerCache(
+            jax.lax.dynamic_update_slice_in_dim(
+                cache.kv.k, k.astype(cache.kv.k.dtype), 0, axis=2),
+            jax.lax.dynamic_update_slice_in_dim(
+                cache.kv.v, v.astype(cache.kv.v.dtype), 0, axis=2))
+        from repro.kernels import ops
+        a_out = ops.attention(q, k, v, causal=True, window=window,
+                              impl=ctx.attn_impl, prefix=cfg.n_meta_tokens)
+        a_out = jnp.einsum("bhsk,hkd->bsd", a_out, p["attn"]["wo"])
+
+    if fam == "ssm":
+        return x + s_out, LayerCache(new_kv, new_ssm)
+    if fam == "hybrid":
+        mix = (layers.rmsnorm(a_out, p["branch_norm_attn"], cfg.norm_eps,
+                              ctx.norm_impl)
+               + layers.rmsnorm(s_out, p["branch_norm_ssm"], cfg.norm_eps,
+                                ctx.norm_impl)) * 0.5
+        x = x + mix
+        h2 = layers.rmsnorm(x, p["norm2"], cfg.norm_eps, ctx.norm_impl)
+        x = x + layers.mlp_apply(p["mlp"], h2, "swiglu")
+        return x, LayerCache(new_kv, new_ssm)
+    x = x + a_out
+    h2 = layers.rmsnorm(x, p["norm2"], cfg.norm_eps, ctx.norm_impl)
+    if cfg.is_moe:
+        y, _ = moe.moe_apply(p["moe"], h2, cfg, impl=ctx.moe_impl,
+                             mesh=ctx.mesh, tp_axis=ctx.tp_axis,
+                             batch_axes=ctx.batch_axes, gmm_impl=ctx.gmm_impl)
+    else:
+        kind = "gelu" if cfg.is_encoder_decoder else "swiglu"
+        y = layers.mlp_apply(p["mlp"], h2, kind)
+    return x + y, LayerCache(new_kv, new_ssm)
+
+
+def block_decode(p, x, cfg: ModelConfig, ctx: ModelCtx, window,
+                 cache: LayerCache, pos) -> Tuple[jax.Array, LayerCache]:
+    """One-token step. x [B,1,d]."""
+    fam = cfg.family
+    h = layers.rmsnorm(x, p["norm1"], cfg.norm_eps, ctx.norm_impl)
+    new_kv, new_ssm = cache.kv, cache.ssm
+
+    if fam in ("ssm", "hybrid"):
+        s_out, new_ssm = ssm.ssm_decode(p["ssm"], h, cache.ssm, cfg)
+    if fam != "ssm":
+        if ctx.decode_attn_impl == "seqshard":
+            a_out, new_kv = attn.attn_decode_seqshard(
+                p["attn"], h, cache.kv, pos, cfg, ctx.mesh,
+                axis=ctx.tp_axis, window=window, prefix=cfg.n_meta_tokens)
+        else:
+            a_out, new_kv = attn.attn_decode(
+                p["attn"], h, cache.kv, pos, cfg, window=window,
+                impl=ctx.decode_attn_impl, prefix=cfg.n_meta_tokens)
+
+    if fam == "ssm":
+        return x + s_out, LayerCache(new_kv, new_ssm)
+    if fam == "hybrid":
+        mix = (layers.rmsnorm(a_out, p["branch_norm_attn"], cfg.norm_eps,
+                              ctx.norm_impl)
+               + layers.rmsnorm(s_out, p["branch_norm_ssm"], cfg.norm_eps,
+                                ctx.norm_impl)) * 0.5
+        x = x + mix
+        h2 = layers.rmsnorm(x, p["norm2"], cfg.norm_eps, ctx.norm_impl)
+        return x + layers.mlp_apply(p["mlp"], h2, "swiglu"), \
+            LayerCache(new_kv, new_ssm)
+    x = x + a_out
+    h2 = layers.rmsnorm(x, p["norm2"], cfg.norm_eps, ctx.norm_impl)
+    if cfg.is_moe:
+        y, _ = moe.moe_apply(p["moe"], h2, cfg, impl=ctx.moe_impl,
+                             mesh=ctx.mesh, tp_axis=ctx.tp_axis,
+                             batch_axes=ctx.batch_axes, gmm_impl=ctx.gmm_impl)
+    else:
+        kind = "gelu" if cfg.is_encoder_decoder else "swiglu"
+        y = layers.mlp_apply(p["mlp"], h2, kind)
+    return x + y, LayerCache(new_kv, new_ssm)
+
+
+def layer_windows(cfg: ModelConfig) -> jax.Array:
+    """Per-layer window sizes [L] (0 = full attention)."""
+    w = []
+    for i in range(cfg.num_layers):
+        if cfg.sliding_window and i not in cfg.global_attn_layers:
+            w.append(cfg.sliding_window)
+        else:
+            w.append(0)
+    return jnp.asarray(w, jnp.int32)
+
+
+def uniform_window(cfg: ModelConfig) -> Optional[int]:
+    """Static window if all layers share one (enables pallas/triangular)."""
+    ws = set()
+    for i in range(cfg.num_layers):
+        if cfg.sliding_window and i not in cfg.global_attn_layers:
+            ws.add(cfg.sliding_window)
+        else:
+            ws.add(0)
+    return ws.pop() if len(ws) == 1 else None

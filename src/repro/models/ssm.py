@@ -1,0 +1,169 @@
+"""Mamba2 (SSD) block: in_proj -> causal depthwise conv -> SSD scan ->
+gated RMSNorm -> out_proj.
+
+Train/prefill uses the chunked SSD (kernels.ops.ssd — Pallas on TPU);
+decode carries (conv_state [B, W-1, d_conv], ssm_state [B, H, P, N]) and
+does O(1) work per token. Logical axes: the inner width is
+tensor-parallel ("ssm_inner"/"ssm_heads" -> model), embed is FSDP.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from repro.models import layers
+
+
+class SSMLayerCache(NamedTuple):
+    conv: jax.Array     # [B, W-1, d_conv_in]
+    state: jax.Array    # [B, H, P, N]
+
+
+def _dims(cfg: ModelConfig):
+    di = cfg.ssm_expand * cfg.d_model
+    H = cfg.ssm_heads or max(1, di // (cfg.ssm_head_dim or 64))
+    P = cfg.ssm_head_dim or di // H
+    N = cfg.ssm_state
+    assert H * P == di, (H, P, di)
+    return di, H, P, N
+
+
+def ssm_init(key, cfg: ModelConfig, dtype) -> Dict[str, jax.Array]:
+    d = cfg.d_model
+    di, H, P, N = _dims(cfg)
+    d_conv = di + 2 * N                 # conv covers x, B, C (mamba2)
+    ks = jax.random.split(key, 5)
+    return {
+        "in_proj": layers.dense_init(ks[0], d, (2 * di + 2 * N + H,), dtype),
+        "conv_w": layers.trunc_normal(ks[1], (cfg.conv_width, d_conv),
+                                      cfg.conv_width ** -0.5, dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((H,), 1e-2))).astype(jnp.float32),
+        "norm": jnp.ones((di,), dtype),
+        "out_proj": layers.trunc_normal(ks[4], (di, d), di ** -0.5, dtype),
+    }
+
+
+def ssm_axes(cfg: ModelConfig) -> Dict[str, Tuple[str, ...]]:
+    return {
+        "in_proj": ("embed", "ssm_inner"),
+        "conv_w": ("conv", None),
+        "A_log": ("ssm_heads",),
+        "D": ("ssm_heads",),
+        "dt_bias": ("ssm_heads",),
+        "norm": ("ssm_inner",),
+        "out_proj": ("ssm_inner", "embed"),
+    }
+
+
+def _split_proj(proj, cfg: ModelConfig):
+    di, H, P, N = _dims(cfg)
+    z, xbc_dt = jnp.split(proj, [di], axis=-1)
+    xbc, dt_raw = jnp.split(xbc_dt, [di + 2 * N], axis=-1)
+    return z, xbc, dt_raw
+
+
+def _causal_conv(xbc, conv_w, prefix: Optional[jax.Array] = None):
+    """Depthwise causal conv via static shifts. xbc [B,S,Dc]; conv_w [W,Dc].
+    ``prefix`` [B, W-1, Dc] provides left context (decode)."""
+    W = conv_w.shape[0]
+    B, S, Dc = xbc.shape
+    if prefix is None:
+        prefix = jnp.zeros((B, W - 1, Dc), xbc.dtype)
+    padded = jnp.concatenate([prefix, xbc], axis=1)     # [B, S+W-1, Dc]
+    out = jnp.zeros_like(xbc)
+    for i in range(W):
+        out = out + padded[:, i:i + S, :] * conv_w[i][None, None, :]
+    return jax.nn.silu(out.astype(jnp.float32)).astype(xbc.dtype)
+
+
+def ssm_apply(
+    p: Dict[str, jax.Array], x: jax.Array, cfg: ModelConfig, *,
+    impl: str = "xla",
+) -> jax.Array:
+    """Full-sequence SSD. x [B,S,d] -> [B,S,d]."""
+    di, H, P, N = _dims(cfg)
+    B, S, d = x.shape
+    proj = jnp.einsum("bsd,dk->bsk", x, p["in_proj"])
+    z, xbc, dt_raw = _split_proj(proj, cfg)
+    xbc = _causal_conv(xbc, p["conv_w"])
+    xs, Bm, Cm = jnp.split(xbc, [di, di + N], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"][None, None, :])
+    A = -jnp.exp(p["A_log"])
+    y, _ = ops.ssd(xs.reshape(B, S, H, P), dt, A, Bm, Cm, p["D"],
+                   chunk=cfg.ssd_chunk, impl=impl)
+    y = y.reshape(B, S, di)
+    y = layers.rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                       p["norm"], cfg.norm_eps)
+    return jnp.einsum("bsk,kd->bsd", y, p["out_proj"])
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype) -> SSMLayerCache:
+    di, H, P, N = _dims(cfg)
+    d_conv = di + 2 * N
+    return SSMLayerCache(
+        conv=jnp.zeros((batch, cfg.conv_width - 1, d_conv), dtype),
+        state=jnp.zeros((batch, H, P, N), jnp.float32),
+    )
+
+
+def ssm_cache_axes() -> SSMLayerCache:
+    return SSMLayerCache(conv=("batch", None, "ssm_inner"),
+                         state=("batch", "ssm_heads", None, None))
+
+
+def ssm_prefill(p, x, cfg: ModelConfig, *, impl: str = "xla"
+                ) -> Tuple[jax.Array, SSMLayerCache]:
+    """Like ssm_apply but also returns the decode cache."""
+    di, H, P, N = _dims(cfg)
+    B, S, d = x.shape
+    proj = jnp.einsum("bsd,dk->bsk", x, p["in_proj"])
+    z, xbc_raw, dt_raw = _split_proj(proj, cfg)
+    xbc = _causal_conv(xbc_raw, p["conv_w"])
+    xs, Bm, Cm = jnp.split(xbc, [di, di + N], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"][None, None, :])
+    A = -jnp.exp(p["A_log"])
+    y, state = ops.ssd(xs.reshape(B, S, H, P), dt, A, Bm, Cm, p["D"],
+                       chunk=cfg.ssd_chunk, impl=impl)
+    y = y.reshape(B, S, di)
+    y = layers.rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                       p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bsk,kd->bsd", y, p["out_proj"])
+    W = cfg.conv_width
+    conv_state = xbc_raw[:, -(W - 1):, :] if S >= W - 1 else jnp.pad(
+        xbc_raw, ((0, 0), (W - 1 - S, 0), (0, 0)))
+    return out, SSMLayerCache(conv=conv_state, state=state)
+
+
+def ssm_decode(p, x, cache: SSMLayerCache, cfg: ModelConfig
+               ) -> Tuple[jax.Array, SSMLayerCache]:
+    """One token. x [B,1,d] -> (out [B,1,d], new cache)."""
+    di, H, P, N = _dims(cfg)
+    B = x.shape[0]
+    proj = jnp.einsum("bsd,dk->bsk", x, p["in_proj"])
+    z, xbc_raw, dt_raw = _split_proj(proj, cfg)
+    xbc = _causal_conv(xbc_raw, p["conv_w"], prefix=cache.conv)
+    new_conv = jnp.concatenate([cache.conv[:, 1:, :], xbc_raw], axis=1)
+    xs, Bm, Cm = jnp.split(xbc[:, 0], [di, di + N], axis=-1)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32)
+                         + p["dt_bias"][None, :])
+    A = -jnp.exp(p["A_log"])
+    y, new_state = ops.ssd_decode(xs.reshape(B, H, P), dt, A, Bm, Cm,
+                                  cache.state, p["D"])
+    y = y.reshape(B, 1, di)
+    y = layers.rmsnorm(
+        y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+        p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bsk,kd->bsd", y, p["out_proj"])
+    return out, SSMLayerCache(conv=new_conv, state=new_state)

@@ -1,0 +1,36 @@
+"""Optimizers (no optax dependency): AdamW, Adafactor, schedules,
+global-norm clipping, error-feedback gradient compression.
+
+States are plain pytrees shaped like the params, so they inherit the
+params' NamedShardings under pjit (fully-sharded optimizer states —
+ZeRO-3-like — fall out of FSDP param sharding for free).
+"""
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update
+from repro.optim.adafactor import AdafactorState, adafactor_init, adafactor_update
+from repro.optim.api import Optimizer, build_optimizer
+from repro.optim.clip import global_norm, clip_by_global_norm
+from repro.optim.schedules import warmup_cosine
+from repro.optim.compression import (
+    CompressionState,
+    build_compressor,
+    ef_int8_compress,
+    ef_topk_compress,
+)
+
+__all__ = [
+    "AdafactorState",
+    "AdamWState",
+    "CompressionState",
+    "Optimizer",
+    "adafactor_init",
+    "adafactor_update",
+    "adamw_init",
+    "adamw_update",
+    "build_compressor",
+    "build_optimizer",
+    "clip_by_global_norm",
+    "ef_int8_compress",
+    "ef_topk_compress",
+    "global_norm",
+    "warmup_cosine",
+]

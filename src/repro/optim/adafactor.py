@@ -1,0 +1,88 @@
+"""Adafactor (Shazeer & Stern 2018) — factored second moments.
+
+For a [R, C] matrix the second moment is stored as row/col vectors
+(R + C floats instead of R*C), which is what makes 1T-param training
+fit: kimi-k2's fp32 AdamW state would be ~12.5 TB; Adafactor state is
+~2000x smaller. Vectors (and scalars) fall back to full second moments.
+No first moment by default (beta1=0), per the paper's memory-efficient
+configuration.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdafactorState(NamedTuple):
+    vr: Any          # row second moments (or full, for ndim<2)
+    vc: Any          # col second moments (zeros((0,)) for ndim<2)
+    count: jax.Array
+
+
+def _factored(p) -> bool:
+    return p.ndim >= 2
+
+
+def adafactor_init(params) -> AdafactorState:
+    def vr_init(p):
+        if _factored(p):
+            return jnp.zeros(p.shape[:-1], jnp.float32)   # reduce last dim
+        return jnp.zeros(p.shape, jnp.float32)
+
+    def vc_init(p):
+        if _factored(p):
+            return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+        return jnp.zeros((0,), jnp.float32)
+
+    return AdafactorState(
+        vr=jax.tree.map(vr_init, params),
+        vc=jax.tree.map(vc_init, params),
+        count=jnp.zeros((), jnp.int32),
+    )
+
+
+def adafactor_update(grads, state: AdafactorState, params, lr, *,
+                     decay_pow: float = 0.8, eps1: float = 1e-30,
+                     eps2: float = 1e-3, clip_threshold: float = 1.0,
+                     weight_decay: float = 0.0):
+    count = state.count + 1
+    c = count.astype(jnp.float32)
+    beta2 = 1.0 - c ** (-decay_pow)
+
+    def upd(p, g, vr, vc):
+        g = g.astype(jnp.float32)
+        g2 = g * g + eps1
+        if _factored(p):
+            vr_n = beta2 * vr + (1 - beta2) * g2.mean(axis=-1)
+            vc_n = beta2 * vc + (1 - beta2) * g2.mean(axis=-2)
+            # rank-1 reconstruction of the preconditioner
+            r = vr_n / jnp.maximum(
+                vr_n.mean(axis=-1, keepdims=True), eps1)
+            u = g / jnp.sqrt(r)[..., None] / jnp.sqrt(vc_n)[..., None, :]
+        else:
+            vr_n = beta2 * vr + (1 - beta2) * g2
+            vc_n = vc
+            u = g / jnp.sqrt(vr_n)
+        # update clipping (RMS of the update capped at clip_threshold)
+        rms = jnp.sqrt(jnp.mean(u * u))
+        u = u / jnp.maximum(1.0, rms / clip_threshold)
+        scale = lr * jnp.maximum(eps2, _rms(p))
+        newp = p.astype(jnp.float32) - scale * u
+        if weight_decay:
+            newp = newp - lr * weight_decay * p.astype(jnp.float32)
+        return newp.astype(p.dtype), vr_n, vc_n
+
+    out = jax.tree.map(upd, params, grads, state.vr, state.vc)
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    vr = jax.tree.map(lambda t: t[1], out,
+                      is_leaf=lambda x: isinstance(x, tuple))
+    vc = jax.tree.map(lambda t: t[2], out,
+                      is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, AdafactorState(vr, vc, count)
+
+
+def _rms(x) -> jax.Array:
+    return jnp.sqrt(jnp.mean(jnp.square(x.astype(jnp.float32))))

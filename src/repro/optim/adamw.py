@@ -1,0 +1,72 @@
+"""AdamW with decoupled weight decay.
+
+Moments are stored in fp32 regardless of param dtype (bf16 params get
+fp32 master copies via the ``master`` field when param_dtype != fp32 —
+standard mixed-precision training discipline).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    mu: Any          # first moment, fp32
+    nu: Any          # second moment, fp32
+    master: Any      # fp32 master params (None-like empty leaves if unused)
+    count: jax.Array
+
+
+def adamw_init(params, *, keep_master: bool = False) -> AdamWState:
+    f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    master = (jax.tree.map(lambda p: p.astype(jnp.float32), params)
+              if keep_master else jax.tree.map(lambda p: jnp.zeros((0,)), params))
+    return AdamWState(
+        mu=jax.tree.map(f32, params),
+        nu=jax.tree.map(f32, params),
+        master=master,
+        count=jnp.zeros((), jnp.int32),
+    )
+
+
+def adamw_update(grads, state: AdamWState, params, lr, *,
+                 b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1, keep_master: bool = False):
+    """Returns (new_params, new_state)."""
+    count = state.count + 1
+    c = count.astype(jnp.float32)
+    bc1 = 1 - b1 ** c
+    bc2 = 1 - b2 ** c
+
+    def moments(g, mu, nu):
+        g = g.astype(jnp.float32)
+        mu = b1 * mu + (1 - b1) * g
+        nu = b2 * nu + (1 - b2) * g * g
+        return mu, nu
+
+    mu_nu = jax.tree.map(moments, grads, state.mu, state.nu)
+    mu = jax.tree.map(lambda t: t[0], mu_nu,
+                      is_leaf=lambda x: isinstance(x, tuple))
+    nu = jax.tree.map(lambda t: t[1], mu_nu,
+                      is_leaf=lambda x: isinstance(x, tuple))
+
+    def step(p, ref, m, v):
+        upd = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+        newf = ref - lr * (upd + weight_decay * ref)
+        return newf
+
+    if keep_master:
+        new_master = jax.tree.map(
+            lambda p, ref, m, v: step(p, ref, m, v),
+            params, state.master, mu, nu)
+        new_params = jax.tree.map(lambda p, f: f.astype(p.dtype),
+                                  params, new_master)
+    else:
+        new_params = jax.tree.map(
+            lambda p, m, v: step(p, p.astype(jnp.float32), m, v
+                                 ).astype(p.dtype),
+            params, mu, nu)
+        new_master = state.master
+    return new_params, AdamWState(mu, nu, new_master, count)

@@ -1,0 +1,47 @@
+"""Uniform optimizer facade used by the train step."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Tuple
+
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+from repro.optim import adafactor as _af
+from repro.optim import adamw as _aw
+from repro.optim.schedules import warmup_cosine
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable[[Any], Any]
+    update: Callable[..., Tuple[Any, Any]]   # (grads, state, params, lr)
+    schedule: Callable[[Any], Any]
+
+
+def build_optimizer(cfg: TrainConfig, param_dtype: str = "float32"
+                    ) -> Optimizer:
+    sched = warmup_cosine(cfg.learning_rate, cfg.warmup_steps,
+                          cfg.total_steps)
+    if cfg.optimizer == "adamw":
+        keep_master = jnp.dtype(param_dtype) != jnp.float32
+
+        def init(params):
+            return _aw.adamw_init(params, keep_master=keep_master)
+
+        def update(grads, state, params, lr):
+            return _aw.adamw_update(
+                grads, state, params, lr, b1=cfg.beta1, b2=cfg.beta2,
+                weight_decay=cfg.weight_decay, keep_master=keep_master)
+
+        return Optimizer("adamw", init, update, sched)
+
+    if cfg.optimizer == "adafactor":
+        def update(grads, state, params, lr):
+            return _af.adafactor_update(grads, state, params, lr,
+                                        weight_decay=cfg.weight_decay)
+
+        return Optimizer("adafactor", _af.adafactor_init, update, sched)
+
+    raise ValueError(f"unknown optimizer {cfg.optimizer!r}")

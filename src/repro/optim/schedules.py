@@ -1,0 +1,20 @@
+"""Learning-rate schedules (pure functions of the step scalar)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(base_lr: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1):
+    """Linear warmup then cosine decay to ``final_frac * base_lr``."""
+
+    def schedule(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / jnp.maximum(warmup_steps, 1)
+        prog = (step - warmup_steps) / jnp.maximum(
+            total_steps - warmup_steps, 1)
+        prog = jnp.clip(prog, 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup_steps, warm, base_lr * cos)
+
+    return schedule

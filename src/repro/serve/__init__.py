@@ -1,0 +1,4 @@
+"""Serving: prefill/decode engine with hot-swappable sampler slot."""
+from repro.serve.engine import ServeEngine, default_sampler, make_serve_step
+
+__all__ = ["ServeEngine", "default_sampler", "make_serve_step"]

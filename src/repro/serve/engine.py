@@ -1,0 +1,123 @@
+"""Batched prefill + decode engine.
+
+``serve_step`` (one token for the whole batch against the KV cache) is
+the unit the decode-shape dry-runs lower. The sampler — logits [B,V] +
+key -> token ids [B] — is an active-code slot: an analyst can deploy a
+new sampling rule (temperature change, top-k, logit bias) between decode
+steps of an *ongoing* generation, the serving analogue of the paper's
+mid-assignment algorithm swap. Executables are cached per sampler
+fingerprint exactly like the train step.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RunConfig
+from repro.core.registry import Binding
+from repro.models.blocks import ModelCtx
+from repro.train.step import build_ctx
+
+
+def default_sampler(logits: jax.Array, key: jax.Array) -> jax.Array:
+    """Greedy (temperature 0)."""
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def temperature_sampler(temp: float) -> Callable:
+    def sample(logits, key):
+        if temp <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(key, logits / temp).astype(jnp.int32)
+    return sample
+
+
+def make_serve_step(model, ctx: ModelCtx, sampler: Callable) -> Callable:
+    """(params, token [B], cache, pos, key) ->
+    (next_token [B], new_cache, new_pos, new_key)."""
+
+    def serve_step(params, token, cache, pos, key):
+        logits, new_cache = model.decode_step(params, token, cache, pos, ctx)
+        key, sub = jax.random.split(key)
+        nxt = sampler(logits, sub)
+        return nxt, new_cache, pos + 1, key
+
+    return serve_step
+
+
+class ServeEngine:
+    def __init__(self, model, cfg: RunConfig, *,
+                 sampler_binding: Optional[Binding] = None,
+                 mesh=None, rules=None, max_seq: Optional[int] = None):
+        self.model = model
+        self.cfg = cfg
+        self.mesh = mesh
+        self.ctx = build_ctx(cfg, mesh=mesh, rules=rules, decode=True)
+        self.sampler_binding = sampler_binding
+        self.max_seq = max_seq or cfg.shape.seq_len
+        self._cache: Dict[Tuple, Callable] = {}
+        self._prefill_jit = None
+        self.rebuilds = 0
+
+    # ------------------------------------------------------------------
+    def _resolve_sampler(self) -> Tuple[Tuple, Callable, str]:
+        b = self.sampler_binding
+        if b is None or (b.default is None
+                         and b.registry.resolve(b.user_id, b.slot) is None):
+            return ("sampler", "builtin", 0), default_sampler, "builtin"
+        r = b.current()
+        return r.fingerprint, (r.fn if not r.is_default
+                               else default_sampler), r.md5
+
+    def _serve_step_for(self, fp, sampler) -> Callable:
+        ex = self._cache.get(fp)
+        if ex is None:
+            step = make_serve_step(self.model, self.ctx, sampler)
+            ex = jax.jit(step, donate_argnums=(2,))
+            self._cache[fp] = ex
+            self.rebuilds += 1
+        return ex
+
+    # ------------------------------------------------------------------
+    def prefill(self, params, prompt: jax.Array,
+                frames: Optional[jax.Array] = None):
+        B = prompt.shape[0]
+        cache = self.model.init_cache(B, self.max_seq, self.ctx)
+        if self._prefill_jit is None:
+            if self.model.cfg.is_encoder_decoder:
+                fn = lambda p, t, f, c: self.model.prefill(p, t, f, c,
+                                                           self.ctx)
+            else:
+                fn = lambda p, t, c: self.model.prefill(p, t, c, self.ctx)
+            self._prefill_jit = jax.jit(fn)
+        if self.model.cfg.is_encoder_decoder:
+            logits, cache, pos = self._prefill_jit(params, prompt, frames,
+                                                   cache)
+        else:
+            logits, cache, pos = self._prefill_jit(params, prompt, cache)
+        return logits, cache, pos
+
+    def generate(self, params, prompt: jax.Array, n_tokens: int, *,
+                 frames: Optional[jax.Array] = None, seed: int = 0,
+                 on_token: Optional[Callable[[int, jax.Array], None]] = None
+                 ) -> Tuple[jax.Array, Dict[str, Any]]:
+        """Decode loop with per-token sampler rebinding (hot-swap point)."""
+        logits, cache, pos = self.prefill(params, prompt, frames=frames)
+        key = jax.random.PRNGKey(seed)
+        fp, sampler, md5 = self._resolve_sampler()
+        tok = sampler(logits, key).astype(jnp.int32)
+        out = [tok]
+        md5s = [md5]
+        for i in range(n_tokens - 1):
+            fp, sampler, md5 = self._resolve_sampler()   # swap boundary
+            step = self._serve_step_for(fp, sampler)
+            tok, cache, pos, key = step(params, tok, cache, pos, key)
+            out.append(tok)
+            md5s.append(md5)
+            if on_token is not None:
+                on_token(i, tok)
+        return jnp.stack(out, axis=1), {"sampler_md5s": md5s,
+                                        "rebuilds": self.rebuilds}

@@ -1,0 +1,17 @@
+from repro.sharding.specs import (
+    AxisRules,
+    batch_spec,
+    logical_to_spec,
+    make_rules,
+    named_sharding,
+    param_specs_for_tree,
+)
+
+__all__ = [
+    "AxisRules",
+    "batch_spec",
+    "logical_to_spec",
+    "make_rules",
+    "named_sharding",
+    "param_specs_for_tree",
+]

@@ -1,0 +1,135 @@
+"""Divisibility-aware sharding: logical rules -> per-tensor PartitionSpecs.
+
+The assigned archs have many dims that do NOT divide the 16-way mesh
+axes (yi-34b: 56 heads; smollm: 9 heads / kv 3; whisper: 20 heads, vocab
+51866; hymba: 25 heads, vocab 32001; mamba2: in_proj width 4384 but
+norm width 2048 under the same logical name). A logical rule table alone
+therefore cannot be sound per-tensor. ``sanitize`` post-processes every
+leaf's PartitionSpec against its concrete shape: a mesh axis (or product
+of axes) keeps sharding a dim only if it divides it evenly — otherwise
+that dim falls back to replicated. This keeps GSPMD padding out of the
+compiled program and guarantees shard_map-compatible layouts.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import RunConfig
+from repro.sharding.specs import AxisRules, make_rules, param_specs_for_tree
+
+
+def _axis_size(mesh_shape: dict, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh_shape.get(a, 1)
+    return n
+
+
+def sanitize_spec(shape: Tuple[int, ...], spec: P, mesh: Mesh) -> P:
+    """Drop mesh axes whose size does not divide the dim they shard."""
+    mesh_shape = dict(mesh.shape)
+    out = []
+    for i, entry in enumerate(spec):
+        if entry is None or i >= len(shape):
+            out.append(None)
+            continue
+        n = _axis_size(mesh_shape, entry)
+        if n > 1 and shape[i] % n == 0:
+            out.append(entry)
+        else:
+            # try a prefix of the axis tuple (e.g. ('pod','data') -> ('pod',))
+            if isinstance(entry, tuple) and len(entry) > 1:
+                kept = []
+                size = 1
+                for a in entry:
+                    if shape[i] % (size * mesh_shape.get(a, 1)) == 0:
+                        kept.append(a)
+                        size *= mesh_shape.get(a, 1)
+                out.append(tuple(kept) if len(kept) > 1
+                           else (kept[0] if kept else None))
+            else:
+                out.append(None)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def sanitize_tree(shapes: Any, specs: Any, mesh: Mesh) -> Any:
+    """Per-leaf sanitize over matching (ShapeDtypeStruct, PartitionSpec)
+    trees."""
+    return jax.tree.map(
+        lambda sh, sp: sanitize_spec(sh.shape, sp, mesh),
+        shapes, specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def logical_to_spec_shaped(axes, shape: Tuple[int, ...], rules: AxisRules,
+                           mesh: Mesh) -> P:
+    """Shape-aware logical->PartitionSpec: a mesh axis is consumed by a
+    dim only if it divides it, so an indivisible early dim (e.g. kv_heads
+    = 8 on a 16-way axis) does not shadow a later dim (kv_seq) that
+    could use the axis. This ordering bug would otherwise leave decode
+    caches unsharded in seq and force whole-cache all-gathers at the jit
+    boundary."""
+    mesh_shape = dict(mesh.shape)
+    used: set = set()
+    out = []
+    for i, name in enumerate(axes):
+        mesh_ax = rules.get(name)
+        if mesh_ax is None or i >= len(shape):
+            out.append(None)
+            continue
+        if isinstance(mesh_ax, str):
+            mesh_ax = (mesh_ax,)
+        kept = []
+        size = 1
+        for a in mesh_ax:
+            n = mesh_shape.get(a, 1)
+            if a in used or n <= 1:
+                continue
+            if shape[i] % (size * n) == 0:
+                kept.append(a)
+                size *= n
+        used.update(kept)
+        out.append(tuple(kept) if len(kept) > 1
+                   else (kept[0] if kept else None))
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def shardings_for(shapes: Any, axes_tree: Any, rules: AxisRules,
+                  mesh: Mesh) -> Any:
+    """Logical axes tree + abstract shapes -> shape-aware NamedShardings."""
+    is_axes = lambda x: (isinstance(x, tuple)
+                         and all(isinstance(e, (str, type(None)))
+                                 for e in x))
+    return jax.tree.map(
+        lambda axes, sh: NamedSharding(
+            mesh, logical_to_spec_shaped(axes, sh.shape, rules, mesh)),
+        axes_tree, shapes, is_leaf=is_axes)
+
+
+def run_rules(cfg: RunConfig) -> AxisRules:
+    """AxisRules for a RunConfig (mesh axes + perf knobs)."""
+    rules = make_rules(
+        cfg.mesh.axes,
+        fsdp_params=cfg.sharding.fsdp_params,
+        seq_shard_activations=cfg.sharding.seq_shard_activations,
+        tp_axis=cfg.sharding.tp_axis,
+        fsdp_axis=cfg.sharding.fsdp_axis,
+    )
+    table = dict(rules.table)
+    if cfg.shape.kind == "decode" or cfg.serve.kv_seq_shard:
+        # decode shapes: KV/cache sequence dim sharded over the TP axis
+        # (kv_heads never divide 16 on the assigned archs); attention over
+        # the sharded cache runs as a shard_map flash-decode merge.
+        table["kv_seq"] = cfg.sharding.tp_axis
+    return AxisRules(table=table, mesh_axes=rules.mesh_axes)

@@ -1,0 +1,150 @@
+"""Logical-axis sharding rules -> PartitionSpec.
+
+Parameters and activations are annotated with tuples of *logical* axis
+names (``("layers", "embed", "heads", "head_dim")`` ...). An
+``AxisRules`` table maps logical names to mesh axes; conversion resolves
+conflicts (one mesh axis may shard at most one dim of a given tensor) by
+first-come-first-served, which matches the order params are declared in.
+
+Baseline 2D layout (MaxText-style "fsdp x tensor"):
+    batch   -> ("pod", "data")      activations' leading dim
+    embed   -> "data"               FSDP dim of every weight
+    vocab/heads/ffn/experts/ssm_inner -> "model"   tensor-parallel dims
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+
+@dataclass(frozen=True)
+class AxisRules:
+    table: Dict[str, MeshAxes]
+    mesh_axes: Tuple[str, ...]
+
+    def get(self, logical: Optional[str]) -> MeshAxes:
+        if logical is None:
+            return None
+        got = self.table.get(logical, None)
+        if got is None:
+            return None
+        # Drop mesh axes the current mesh doesn't have (e.g. "pod" on 2D mesh).
+        if isinstance(got, str):
+            return got if got in self.mesh_axes else None
+        kept = tuple(a for a in got if a in self.mesh_axes)
+        return kept if kept else None
+
+
+def make_rules(
+    mesh_axes: Sequence[str],
+    *,
+    fsdp_params: bool = True,
+    seq_shard_activations: bool = False,
+    tp_axis: str = "model",
+    fsdp_axis: str = "data",
+) -> AxisRules:
+    table: Dict[str, MeshAxes] = {
+        "batch": ("pod", fsdp_axis),
+        "seq": tp_axis if seq_shard_activations else None,
+        "embed": fsdp_axis if fsdp_params else None,
+        "embed_act": None,          # activations' feature dim stays unsharded
+        "vocab": tp_axis,
+        "heads": tp_axis,
+        "kv_heads": tp_axis,
+        "head_dim": None,
+        "ffn": tp_axis,
+        "experts": tp_axis,
+        "expert_ffn": None,
+        "ssm_inner": tp_axis,
+        "ssm_heads": tp_axis,
+        "ssm_state": None,
+        "conv": None,
+        "layers": None,
+        "enc_seq": None,
+        "kv_seq": None,             # set to fsdp_axis for seq-sharded KV caches
+        None: None,
+    }
+    return AxisRules(table=table, mesh_axes=tuple(mesh_axes))
+
+
+def logical_to_spec(axes: Sequence[Optional[str]], rules: AxisRules) -> P:
+    """Map a tuple of logical axis names to a PartitionSpec, resolving
+    duplicate mesh-axis use (first occurrence wins)."""
+    used: set = set()
+    out = []
+    for name in axes:
+        mesh_ax = rules.get(name)
+        if mesh_ax is None:
+            out.append(None)
+            continue
+        if isinstance(mesh_ax, str):
+            mesh_ax = (mesh_ax,)
+        kept = tuple(a for a in mesh_ax if a not in used)
+        if not kept:
+            out.append(None)
+            continue
+        used.update(kept)
+        out.append(kept if len(kept) > 1 else kept[0])
+    # trim trailing Nones for tidiness
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def param_specs_for_tree(axes_tree: Any, rules: AxisRules) -> Any:
+    """Convert a pytree of logical-axis tuples into a pytree of PartitionSpec."""
+    return jax.tree.map(
+        lambda axes: logical_to_spec(axes, rules),
+        axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple)
+        and all(isinstance(e, (str, type(None))) for e in x),
+    )
+
+
+def batch_spec(rules: AxisRules, extra_dims: int = 1) -> P:
+    """PartitionSpec for [batch, seq, ...]-shaped host inputs."""
+    axes: list = [rules.get("batch")]
+    axes.extend([None] * extra_dims)
+    while len(axes) > 1 and axes[-1] is None:
+        axes.pop()
+    return P(*axes)
+
+
+def named_sharding(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+def constrain(x: jax.Array, rules: Optional[AxisRules],
+              axes: Sequence[Optional[str]], mesh: Optional[Mesh] = None):
+    """with_sharding_constraint by logical names (no-op without a mesh).
+    Shape-aware: a mesh axis only shards a dim it divides evenly."""
+    if rules is None or mesh is None:
+        return x
+    mesh_shape = dict(mesh.shape)
+    used: set = set()
+    out = []
+    for i, name in enumerate(axes):
+        mesh_ax = rules.get(name)
+        if mesh_ax is None or i >= x.ndim:
+            out.append(None)
+            continue
+        if isinstance(mesh_ax, str):
+            mesh_ax = (mesh_ax,)
+        kept = []
+        size = 1
+        for a in mesh_ax:
+            n = mesh_shape.get(a, 1)
+            if a in used or n <= 1 or x.shape[i] % (size * n):
+                continue
+            kept.append(a)
+            size *= n
+        used.update(kept)
+        out.append(tuple(kept) if len(kept) > 1
+                   else (kept[0] if kept else None))
+    spec = P(*out)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

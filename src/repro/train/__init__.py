@@ -1,0 +1,21 @@
+"""Training: state, hot-swappable step builder, host loop."""
+from repro.train.state import TrainState, init_state
+from repro.train.step import (
+    HotSwapTrainStep,
+    build_ctx,
+    default_loss,
+    default_metrics,
+    make_train_step,
+)
+from repro.train.loop import TrainLoop
+
+__all__ = [
+    "HotSwapTrainStep",
+    "TrainLoop",
+    "TrainState",
+    "build_ctx",
+    "default_loss",
+    "default_metrics",
+    "init_state",
+    "make_train_step",
+]

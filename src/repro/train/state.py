@@ -1,0 +1,29 @@
+"""TrainState pytree."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RunConfig
+from repro.optim.api import Optimizer
+from repro.optim.compression import CompressionState, compression_init
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: Any
+    comp_state: Any          # CompressionState or () when compression off
+    step: jax.Array
+
+
+def init_state(model, optimizer: Optimizer, rng: jax.Array,
+               run_cfg: Optional[RunConfig] = None) -> TrainState:
+    params = model.init(rng)
+    opt_state = optimizer.init(params)
+    comp = ()
+    if run_cfg is not None and run_cfg.train.grad_compression != "none":
+        comp = compression_init(params)
+    return TrainState(params=params, opt_state=opt_state, comp_state=comp,
+                      step=jnp.zeros((), jnp.int32))

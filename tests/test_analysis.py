@@ -1,0 +1,109 @@
+"""HLO cost-model tests: hand-written HLO + real compiled modules."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.hlo import HloCostModel, analyze
+from repro.analysis.roofline import RooflineTerms
+
+HAND_HLO = """
+HloModule test
+
+%body.1 (param.0: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %param.0 = (s32[], f32[8,8]) parameter(0)
+  %gte.0 = s32[] get-tuple-element(%param.0), index=0
+  %gte.1 = f32[8,8] get-tuple-element(%param.0), index=1
+  %c1 = s32[] constant(1)
+  %add.0 = s32[] add(%gte.0, %c1)
+  %dot.0 = f32[8,8]{1,0} dot(%gte.1, %gte.1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,8]{1,0} all-reduce(%dot.0), replica_groups=[4,8]<=[32], to_apply=%sum.1
+  ROOT %tuple.0 = (s32[], f32[8,8]) tuple(%add.0, %ar)
+}
+
+%cond.1 (param.1: (s32[], f32[8,8])) -> pred[] {
+  %param.1 = (s32[], f32[8,8]) parameter(0)
+  %gte.2 = s32[] get-tuple-element(%param.1), index=0
+  %c10 = s32[] constant(10)
+  ROOT %lt = pred[] compare(%gte.2, %c10), direction=LT
+}
+
+%sum.1 (a.0: f32[], b.0: f32[]) -> f32[] {
+  %a.0 = f32[] parameter(0)
+  %b.0 = f32[] parameter(1)
+  ROOT %s = f32[] add(%a.0, %b.0)
+}
+
+ENTRY %main (p: f32[8,8]) -> (s32[], f32[8,8]) {
+  %p = f32[8,8]{1,0} parameter(0)
+  %c0 = s32[] constant(0)
+  %t = (s32[], f32[8,8]) tuple(%c0, %p)
+  ROOT %w = (s32[], f32[8,8]) while(%t), condition=%cond.1, body=%body.1, backend_config={"known_trip_count":{"n":"10"}}
+}
+"""
+
+
+def test_hand_hlo_loop_scaling():
+    c = analyze(HAND_HLO)
+    # dot: 2*8*8*8 = 1024 flops, x10 trips
+    assert c.flops == pytest.approx(10 * (1024 + 1), rel=0.01)  # +add
+    # all-reduce: 256B payload, 8-rank ring => 2*256*(7/8) wire, x10
+    assert c.coll_wire["all-reduce"] == pytest.approx(
+        10 * 2 * 256 * 7 / 8)
+    assert c.coll_count["all-reduce"] == 10
+    assert c.unknown_trip_loops == 0
+
+
+def test_trip_count_fallback_from_condition():
+    txt = HAND_HLO.replace(
+        ', backend_config={"known_trip_count":{"n":"10"}}', "")
+    c = analyze(txt)
+    assert c.flops == pytest.approx(10 * (1024 + 1), rel=0.01)
+
+
+def test_real_module_scales_with_depth():
+    """The motivating bug: XLA cost_analysis counts scan bodies once;
+    our analyzer must scale with L."""
+    def make(L):
+        def f(x, w):
+            def body(x, _):
+                return jnp.tanh(x @ w), None
+            y, _ = jax.lax.scan(body, x, None, length=L)
+            return y
+        return jax.jit(f).lower(
+            jax.ShapeDtypeStruct((16, 16), jnp.float32),
+            jax.ShapeDtypeStruct((16, 16), jnp.float32)).compile()
+
+    c2 = analyze(make(2).as_text())
+    c8 = analyze(make(8).as_text())
+    assert c8.flops > 3.5 * c2.flops
+    # and XLA's own counter is flat (documents why we parse ourselves)
+    x2 = make(2).cost_analysis()["flops"]
+    x8 = make(8).cost_analysis()["flops"]
+    assert x2 == x8
+
+
+def test_dot_flops_exact():
+    def f(a, b):
+        return a @ b
+    comp = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((32, 48), jnp.float32),
+        jax.ShapeDtypeStruct((48, 24), jnp.float32)).compile()
+    c = analyze(comp.as_text())
+    assert c.flops == pytest.approx(2 * 32 * 48 * 24, rel=0.05)
+
+
+def test_roofline_terms_math():
+    t = RooflineTerms(
+        arch="a", shape="s", mesh="16x16", chips=256,
+        flops_per_chip=197e12, bytes_per_chip=819e9,
+        fused_bytes_per_chip=819e9 / 2, wire_bytes_per_chip=50e9 * 2,
+        model_flops=197e12 * 256, peak_memory_bytes=0,
+        collective_detail={})
+    assert t.t_compute == pytest.approx(1.0)
+    assert t.t_memory == pytest.approx(1.0)
+    assert t.t_memory_fused == pytest.approx(0.5)
+    assert t.t_collective == pytest.approx(2.0)
+    assert t.bottleneck == "collective"
+    assert t.roofline_fraction == pytest.approx(0.5)
+    assert t.useful_flops_fraction == pytest.approx(1.0)

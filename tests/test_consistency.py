@@ -1,0 +1,133 @@
+"""Property tests (hypothesis) for the md5-majority rule — the paper's
+consistency invariant: an iteration's accepted set is never mixed-version."""
+import string
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.consistency import (
+    FilterOutcome,
+    IterationCollector,
+    QuorumPolicy,
+    TaggedResult,
+    majority_filter,
+)
+
+MD5S = st.text(alphabet="0123456789abcdef", min_size=4, max_size=8)
+
+
+def results_strategy(min_size=0, max_size=40):
+    return st.lists(
+        st.builds(
+            TaggedResult,
+            client_id=st.text(string.ascii_lowercase, min_size=1, max_size=4),
+            iteration=st.just(0),
+            code_md5=MD5S,
+            payload=st.integers(),
+        ),
+        min_size=min_size, max_size=max_size)
+
+
+@given(results_strategy())
+@settings(max_examples=200)
+def test_accepted_single_version(results):
+    out = majority_filter(results)
+    assert len({r.code_md5 for r in out.accepted} | set()) <= 1
+
+
+@given(results_strategy())
+def test_partition_complete(results):
+    out = majority_filter(results)
+    assert len(out.accepted) + len(out.dropped) == len(results)
+    assert set(out.accepted) | set(out.dropped) == set(results)
+
+
+@given(results_strategy(min_size=1))
+def test_plurality_wins(results):
+    out = majority_filter(results)
+    counts = {}
+    for r in results:
+        counts[r.code_md5] = counts.get(r.code_md5, 0) + 1
+    best = max(counts.values())
+    assert counts[out.winning_md5] == best
+    assert len(out.accepted) == best
+
+
+@given(results_strategy(min_size=1))
+def test_tie_break_deterministic(results):
+    """Among equal counts the lexicographically smallest md5 wins, so the
+    rule is a pure function of the result multiset (order-independent)."""
+    out1 = majority_filter(results)
+    out2 = majority_filter(list(reversed(results)))
+    assert out1.winning_md5 == out2.winning_md5
+    counts = {}
+    for r in results:
+        counts[r.code_md5] = counts.get(r.code_md5, 0) + 1
+    best = max(counts.values())
+    tied = sorted(k for k, v in counts.items() if v == best)
+    assert out1.winning_md5 == tied[0]
+
+
+@given(results_strategy(), MD5S)
+def test_adding_winner_votes_never_flips(results, winner):
+    """Monotonicity: adding another result with the winning hash never
+    changes the winner."""
+    out = majority_filter(results)
+    if out.winning_md5 is None:
+        return
+    more = results + [TaggedResult("extra", 0, out.winning_md5)]
+    assert majority_filter(more).winning_md5 == out.winning_md5
+
+
+def test_empty():
+    out = majority_filter([])
+    assert out.winning_md5 is None and not out.accepted and not out.dropped
+
+
+# ---------------------------------------------------------------------------
+# Quorum / collector
+# ---------------------------------------------------------------------------
+
+def _r(cid, md5, it=0):
+    return TaggedResult(cid, it, md5)
+
+
+def test_quorum_size():
+    p = QuorumPolicy(min_fraction=0.5)
+    assert p.quorum_size(10) == 5
+    assert p.quorum_size(1) == 1
+    assert p.quorum_size(3) == 2
+
+
+def test_collector_commit_and_stragglers():
+    c = IterationCollector(iteration=0, n_clients=4,
+                           policy=QuorumPolicy(min_fraction=0.5))
+    c.add(_r("a", "x"))
+    assert not c.ready()
+    c.add(_r("b", "x"))
+    assert c.ready() and not c.complete()
+    out = c.commit()
+    assert out.winning_md5 == "x" and len(out.accepted) == 2
+    c.add(_r("c", "x"))                 # late
+    assert len(c.stragglers) == 1
+    assert c.commit() is out            # frozen
+
+
+def test_collector_rejects_wrong_iteration():
+    c = IterationCollector(iteration=3, n_clients=2)
+    with pytest.raises(ValueError):
+        c.add(_r("a", "x", it=2))
+
+
+def test_mixed_version_iteration_filtered():
+    """The paper's scenario: a code deploy lands mid-iteration; results
+    from the old module must not mix with the new ones."""
+    c = IterationCollector(iteration=0, n_clients=5)
+    for cid in ("a", "b", "c"):
+        c.add(_r(cid, "new"))
+    for cid in ("d", "e"):
+        c.add(_r(cid, "old"))
+    out = c.commit()
+    assert out.winning_md5 == "new"
+    assert {r.client_id for r in out.dropped} == {"d", "e"}
+    assert not out.clean

@@ -1,0 +1,210 @@
+"""End-to-end OODIDA fleet behaviour: assignments, active-code
+replacement as-a-task, mid-assignment swap, stragglers, supervision."""
+import queue
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    AssignmentKind,
+    QuorumPolicy,
+    Status,
+    Target,
+)
+from repro.core.actors import ActorSystem, Actor, Down
+from repro.core.fleet import Fleet
+
+MEAN_X2 = """
+import jax.numpy as jnp
+def run(xs):
+    return jnp.mean(xs) * 2.0
+"""
+
+MEAN_X4 = """
+import jax.numpy as jnp
+def run(xs):
+    return jnp.mean(xs) * 4.0
+"""
+
+
+@pytest.fixture()
+def fleet():
+    f = Fleet.create(4, seed=1)
+    yield f
+    f.shutdown()
+
+
+def test_builtin_analytics_whole_fleet(fleet):
+    fe = fleet.frontend("u1")
+    spec = fe.submit_analytics("mean", iterations=2,
+                               params={"n_values": 32})
+    results, done = fe.wait_done(spec)
+    assert done.status == Status.DONE
+    assert len(results) == 2
+    assert all(r.n_accepted == 4 for r in results)
+    assert all(len(r.value) == 4 for r in results)
+
+
+def test_subset_targeting(fleet):
+    fe = fleet.frontend("u1")
+    spec = fe.submit_analytics("max", client_ids=["c000", "c002"],
+                               params={"n_values": 8})
+    results, done = fe.wait_done(spec)
+    assert results[0].n_accepted == 2
+
+
+def test_code_replacement_then_custom_method(fleet):
+    fe = fleet.frontend("u1")
+    dep = fe.deploy_code("my_mean", MEAN_X2)
+    _, done = fe.wait_done(dep)
+    assert done.status == Status.DONE and "4/4" in done.detail
+
+    spec = fe.submit_analytics("my_mean", iterations=1,
+                               params={"n_values": 64})
+    results, done = fe.wait_done(spec)
+    assert done.status == Status.DONE
+    # every client executed the same version (hash majority = unanimity)
+    assert results[0].n_dropped == 0
+    assert results[0].winning_md5 is not None
+
+
+def test_cloud_side_code(fleet):
+    fe = fleet.frontend("u1")
+    dep = fe.deploy_code("agg_spread", """
+import jax.numpy as jnp
+def run(values):
+    return jnp.max(values) - jnp.min(values)
+""", target=Target.CLOUD)
+    _, done = fe.wait_done(dep)
+    assert done.status == Status.DONE
+    spec = fe.submit_analytics("mean", iterations=1,
+                               params={"n_values": 32,
+                                       "cloud_method": "agg_spread"})
+    results, done = fe.wait_done(spec)
+    assert np.isscalar(results[0].value) or results[0].value is not None
+
+
+def test_mid_assignment_swap_changes_next_iteration(fleet):
+    """The paper's headline: deploy between iterations of an ongoing
+    assignment; subsequent iterations use the new module, no restart."""
+    fe = fleet.frontend("u1")
+    _, d = fe.wait_done(fe.deploy_code("my_mean", MEAN_X2))
+    assert d.status == Status.DONE
+
+    spec = fe.submit_analytics("my_mean", iterations=6,
+                               params={"n_values": 16})
+    first = fe.next_event(spec)
+    md5_a = first.winning_md5
+    _, d2 = fe.wait_done(fe.deploy_code("my_mean", MEAN_X4))
+    assert d2.status == Status.DONE
+    results, done = fe.wait_done(spec)
+    assert done.status == Status.DONE
+    md5s = [r.winning_md5 for r in results]
+    assert md5s[-1] != md5_a          # later iterations ran the new code
+    # an md5 switch happened exactly once across the sequence
+    seq = [md5_a] + md5s
+    assert sum(a != b for a, b in zip(seq, seq[1:])) == 1
+
+
+def test_user_isolation_across_frontends(fleet):
+    fa = fleet.frontend("alice")
+    fb = fleet.frontend("bob")
+    fe_events = fa.wait_done(fa.deploy_code("m", MEAN_X2))
+    fb_events = fb.wait_done(fb.deploy_code("m", MEAN_X4))
+    sa = fa.submit_analytics("m", params={"n_values": 16})
+    sb = fb.submit_analytics("m", params={"n_values": 16})
+    ra, _ = fa.wait_done(sa)
+    rb, _ = fb.wait_done(sb)
+    assert ra[0].winning_md5 != rb[0].winning_md5
+
+
+def test_straggler_quorum_commit():
+    """One slow client: the iteration commits on quorum; the straggler's
+    late result is dropped (counted), not mixed in."""
+    delays = {"c003": lambda task: 1.5}
+    f = Fleet.create(4, policy=QuorumPolicy(min_fraction=0.75),
+                     delay_fns=delays)
+    try:
+        fe = f.frontend("u1")
+        t0 = time.time()
+        spec = fe.submit_analytics("mean", iterations=1,
+                                   params={"n_values": 8,
+                                           "straggler_grace_s": 0.05})
+        results, done = fe.wait_done(spec)
+        elapsed = time.time() - t0
+        assert done.status == Status.DONE
+        assert results[0].n_accepted == 3
+        assert results[0].n_stragglers == 1
+        assert elapsed < 1.2          # did not wait for the slow client
+    finally:
+        f.shutdown()
+
+
+def test_failed_validation_never_ships(fleet):
+    fe = fleet.frontend("u1")
+    from repro.core.validation import ValidationError
+    with pytest.raises(ValidationError):
+        fe.deploy_code("bad", "import os\ndef run(x):\n    return x\n")
+
+
+def test_client_error_reported_not_fatal(fleet):
+    fe = fleet.frontend("u1")
+    _, d = fe.wait_done(fe.deploy_code("div", """
+def run(xs):
+    return 1.0 / 0.0
+"""))
+    assert d.status == Status.DONE
+    spec = fe.submit_analytics("div", params={"n_values": 4})
+    results, done = fe.wait_done(spec)
+    # all clients errored -> majority hash is an error tag; assignment
+    # still completes (the fleet survives bad user code)
+    assert done.status == Status.DONE
+
+
+def test_supervision_restarts_crashed_actor():
+    system = ActorSystem()
+
+    class Flaky(Actor):
+        def handle(self, sender, msg):
+            if msg == "boom":
+                raise RuntimeError("crash")
+            if isinstance(msg, tuple):
+                msg[0].put("alive")
+
+    def factory():
+        return Flaky("flaky")
+
+    system.spawn(Flaky("flaky"), supervised_factory=factory)
+    system.send("flaky", "boom")
+    time.sleep(0.2)                    # restart happens asynchronously
+    q = queue.Queue()
+    system.send("flaky", (q,))
+    assert q.get(timeout=2.0) == "alive"
+    system.shutdown()
+
+
+def test_monitor_down_message():
+    system = ActorSystem()
+    events = queue.Queue()
+
+    class Watcher(Actor):
+        def handle(self, sender, msg):
+            if isinstance(msg, Down):
+                events.put(msg)
+
+    class Short(Actor):
+        def handle(self, sender, msg):
+            self.stop()
+
+    system.spawn(Watcher("w"))
+    system.spawn(Short("s"))
+    system.monitor("w", "s")
+    system.send("s", "quit")
+    down = events.get(timeout=2.0)
+    assert down.actor == "s" and down.reason is None
+    # monitoring a dead actor yields an immediate noproc DOWN (Erlang)
+    system.monitor("w", "s")
+    down2 = events.get(timeout=2.0)
+    assert down2.reason == "noproc"
+    system.shutdown()

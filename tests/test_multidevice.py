@@ -1,0 +1,22 @@
+"""Multi-device distribution checks (subprocess: the main pytest process
+must keep 1 device per the dry-run contract)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = os.path.join(os.path.dirname(__file__), "device_scripts",
+                      "multidevice_checks.py")
+
+
+@pytest.mark.slow
+def test_multidevice_suite():
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=1200)
+    sys.stdout.write(proc.stdout)
+    sys.stderr.write(proc.stderr[-4000:])
+    assert proc.returncode == 0, "multidevice checks failed"
+    assert "FAILURES: []" in proc.stdout

@@ -1,0 +1,160 @@
+"""Optimizer unit tests + hypothesis properties for compression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from hypothesis.extra import numpy as hnp
+
+from repro.optim.adafactor import adafactor_init, adafactor_update
+from repro.optim.adamw import adamw_init, adamw_update
+from repro.optim.api import build_optimizer
+from repro.optim.clip import clip_by_global_norm, global_norm
+from repro.optim.compression import (
+    CompressionState,
+    compression_init,
+    ef_int8_compress,
+    ef_topk_compress,
+    int8_decode,
+    int8_encode,
+    topk_mask,
+)
+from repro.optim.schedules import warmup_cosine
+from repro.configs.base import TrainConfig
+
+
+def quad_problem():
+    """min 0.5||x - t||^2; both optimizers must reduce distance."""
+    t = jnp.asarray([1.0, -2.0, 3.0])
+    params = {"x": jnp.zeros((3,))}
+    grad = lambda p: {"x": p["x"] - t}
+    return t, params, grad
+
+
+def test_adamw_converges_quadratic():
+    t, params, grad = quad_problem()
+    state = adamw_init(params)
+    for _ in range(300):
+        params, state = adamw_update(grad(params), state, params, 0.05,
+                                     weight_decay=0.0)
+    np.testing.assert_allclose(np.asarray(params["x"]), np.asarray(t),
+                               atol=1e-2)
+
+
+def test_adamw_weight_decay_shrinks():
+    params = {"x": jnp.ones((4,)) * 10.0}
+    state = adamw_init(params)
+    zeros = {"x": jnp.zeros((4,))}
+    for _ in range(50):
+        params, state = adamw_update(zeros, state, params, 0.1,
+                                     weight_decay=0.1)
+    assert float(jnp.abs(params["x"]).max()) < 10.0
+
+
+def test_adamw_master_params_bf16():
+    params = {"x": jnp.ones((4,), jnp.bfloat16)}
+    state = adamw_init(params, keep_master=True)
+    assert state.master["x"].dtype == jnp.float32
+    g = {"x": jnp.full((4,), 1e-3, jnp.bfloat16)}
+    p2, s2 = adamw_update(g, state, params, 1e-4, keep_master=True)
+    assert p2["x"].dtype == jnp.bfloat16
+    # master accumulates finer than bf16 resolution
+    assert float(jnp.abs(s2.master["x"] - 1.0).max()) > 0
+
+
+def test_adafactor_memory_shapes():
+    params = {"w": jnp.zeros((64, 32)), "b": jnp.zeros((32,))}
+    state = adafactor_init(params)
+    assert state.vr["w"].shape == (64,)       # factored
+    assert state.vc["w"].shape == (32,)
+    assert state.vr["b"].shape == (32,)       # full for vectors
+    assert state.vc["b"].shape == (0,)
+
+
+def test_adafactor_converges_quadratic():
+    t, params, grad = quad_problem()
+    state = adafactor_init(params)
+    for _ in range(400):
+        params, state = adafactor_update(grad(params), state, params, 0.1)
+    np.testing.assert_allclose(np.asarray(params["x"]), np.asarray(t),
+                               atol=5e-2)
+
+
+def test_clip_by_global_norm():
+    tree = {"a": jnp.ones((4,)) * 3.0, "b": jnp.ones((9,)) * 4.0}
+    clipped, norm = clip_by_global_norm(tree, 1.0)
+    assert float(norm) == pytest.approx(
+        float(jnp.sqrt(4 * 9.0 + 9 * 16.0)))
+    assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+    # under the limit: untouched
+    small = {"a": jnp.ones((2,)) * 1e-3}
+    out, _ = clip_by_global_norm(small, 1.0)
+    np.testing.assert_allclose(np.asarray(out["a"]),
+                               np.asarray(small["a"]))
+
+
+def test_schedule_shape():
+    s = warmup_cosine(1e-3, 10, 100)
+    assert float(s(0)) == 0.0
+    assert float(s(10)) == pytest.approx(1e-3)
+    assert float(s(100)) == pytest.approx(1e-4, rel=1e-2)
+    assert float(s(55)) < 1e-3
+
+
+def test_build_optimizer_dispatch():
+    assert build_optimizer(TrainConfig(optimizer="adamw")).name == "adamw"
+    assert build_optimizer(
+        TrainConfig(optimizer="adafactor")).name == "adafactor"
+    with pytest.raises(ValueError):
+        build_optimizer(TrainConfig(optimizer="sgd"))
+
+
+# ---------------------------------------------------------------------------
+# Compression (hypothesis)
+# ---------------------------------------------------------------------------
+
+ARRS = hnp.arrays(np.float32, st.integers(4, 64),
+                  elements=st.floats(-100, 100, width=32))
+
+
+@given(ARRS)
+@settings(max_examples=50, deadline=None)
+def test_int8_roundtrip_bounded_error(arr):
+    g = jnp.asarray(arr)
+    q, scale = int8_encode(g)
+    deq = int8_decode(q, scale)
+    # quantization error bounded by half a step
+    assert float(jnp.abs(deq - g).max()) <= float(scale) * 0.5 + 1e-6
+    assert q.dtype == jnp.int8
+
+
+@given(ARRS)
+@settings(max_examples=30, deadline=None)
+def test_error_feedback_conserves_signal(arr):
+    """EF invariant: transmitted + residual == accumulated gradient."""
+    g = {"w": jnp.asarray(arr)}
+    state = compression_init(g)
+    sent, new_state = ef_int8_compress(g, state)
+    total = sent["w"].astype(jnp.float32) + new_state.residual["w"]
+    np.testing.assert_allclose(np.asarray(total), arr, atol=1e-4)
+
+
+def test_topk_keeps_largest():
+    g = jnp.asarray([0.1, -5.0, 0.2, 3.0, -0.05, 0.0, 1.0, -2.0])
+    kept = topk_mask(g, 0.25)
+    nz = np.nonzero(np.asarray(kept))[0]
+    assert set(nz) == {1, 3}
+
+
+def test_ef_topk_eventually_transmits_everything():
+    """Small entries accumulate in the residual until they win top-k:
+    over n rounds the residual stays bounded, so sent/(n*g) -> 1."""
+    g = {"w": jnp.asarray([1.0, 0.5, 0.2, 0.1])}
+    state = compression_init(g)
+    total_sent = jnp.zeros((4,))
+    n = 200
+    for _ in range(n):
+        sent, state = ef_topk_compress(g, state, frac=0.25)
+        total_sent = total_sent + sent["w"]
+    ratio = np.asarray(total_sent) / (n * np.asarray(g["w"]))
+    np.testing.assert_allclose(ratio, 1.0, atol=0.1)

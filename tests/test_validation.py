@@ -1,0 +1,98 @@
+"""Front-end validation: the paper's static + dynamic checks."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.validation import (
+    SlotSpec,
+    ValidationError,
+    scalar_output,
+    static_check,
+    validate,
+)
+
+GOOD = """
+import jax.numpy as jnp
+def run(xs):
+    return jnp.mean(xs) * 2.0
+"""
+
+
+def test_good_module_passes():
+    fn = validate(GOOD)
+    assert float(fn(jnp.arange(4.0))) == pytest.approx(3.0)
+
+
+def test_syntax_error_rejected():
+    with pytest.raises(ValidationError, match="syntax"):
+        validate("def run(xs: return xs")
+
+
+def test_missing_run_rejected():
+    with pytest.raises(ValidationError, match="run"):
+        validate("def main(xs):\n    return xs\n")
+
+
+@pytest.mark.parametrize("source,frag", [
+    ("import os\ndef run(x):\n    return x\n", "os"),
+    ("import subprocess\ndef run(x):\n    return x\n", "subprocess"),
+    ("from socket import socket\ndef run(x):\n    return x\n", "socket"),
+    ("def run(x):\n    return eval('1+1')\n", "eval"),
+    ("def run(x):\n    return open('/etc/passwd')\n", "open"),
+    ("def run(x):\n    return x.__class__\n", "dunder"),
+    ("def run(x):\n    return getattr(x, 'shape')\n", "getattr"),
+])
+def test_sandbox_violations(source, frag):
+    violations = static_check(source)
+    assert violations, source
+    with pytest.raises(ValidationError):
+        validate(source)
+
+
+def test_oversized_module_rejected():
+    big = "def run(x):\n    return x\n" + "# pad\n" * 40000
+    assert any("bytes" in v for v in static_check(big))
+
+
+def test_runtime_import_blocked_dynamically():
+    """Even if the AST walk were bypassed, the restricted __import__
+    hook blocks disallowed imports at execution time."""
+    from repro.core.validation import compile_restricted
+    sneaky = "def run(x):\n    import os\n    return x\n"
+    fn = compile_restricted(sneaky)
+    with pytest.raises(ImportError):
+        fn(1)
+
+
+# ---------------------------------------------------------------------------
+# Dynamic stage: interface probes via eval_shape (no FLOPs spent)
+# ---------------------------------------------------------------------------
+
+def _scalar_slot():
+    return SlotSpec(
+        name="reduce",
+        probe_args=lambda: (jax.ShapeDtypeStruct((16,), jnp.float32),),
+        check_output=scalar_output,
+    )
+
+
+def test_probe_accepts_matching_interface():
+    fn = validate(GOOD, _scalar_slot())
+    assert callable(fn)
+
+
+def test_probe_rejects_wrong_output_shape():
+    bad = "import jax.numpy as jnp\ndef run(xs):\n    return xs * 2\n"
+    with pytest.raises(ValidationError, match="scalar"):
+        validate(bad, _scalar_slot())
+
+
+def test_probe_rejects_wrong_arity():
+    bad = "def run(xs, ys):\n    return 0.0\n"
+    with pytest.raises(ValidationError, match="probe failed"):
+        validate(bad, _scalar_slot())
+
+
+def test_module_level_crash_is_validation_failure():
+    with pytest.raises(ValidationError, match="execution failed"):
+        validate("raise RuntimeError('boom')\ndef run(x):\n    return x\n")
