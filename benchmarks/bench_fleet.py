@@ -13,9 +13,9 @@ def bench_round_throughput(n_clients: int = 16, iters: int = 20):
     fleet = Fleet.create(n_clients)
     fe = fleet.frontend("bench")
     t0 = time.perf_counter()
-    spec = fe.submit_analytics("mean", iterations=iters,
-                               params={"n_values": 64})
-    results, done = fe.wait_done(spec, timeout=60)
+    handle = fe.submit_analytics("mean", iterations=iters,
+                                 params={"n_values": 64})
+    results, done = handle.result(timeout=60)
     dt = time.perf_counter() - t0
     fleet.shutdown()
     return iters / dt, len(results)
@@ -32,10 +32,10 @@ def bench_straggler_mitigation(n_clients: int = 8):
         fleet = Fleet.create(n_clients, delay_fns=delays, policy=policy)
         fe = fleet.frontend("bench")
         t0 = time.perf_counter()
-        spec = fe.submit_analytics(
+        handle = fe.submit_analytics(
             "mean", iterations=3,
             params={"n_values": 16, "straggler_grace_s": grace})
-        fe.wait_done(spec, timeout=60)
+        handle.result(timeout=60)
         out[tag] = (time.perf_counter() - t0) / 3
         fleet.shutdown()
     return out
@@ -47,19 +47,19 @@ def bench_concurrent_users(n_clients: int = 8, n_users: int = 4):
     fleet = Fleet.create(n_clients)
     fes = [fleet.frontend(f"user{i}") for i in range(n_users)]
     for i, fe in enumerate(fes):
-        spec = fe.deploy_code("m", f"""
+        dep = fe.deploy_code("m", f"""
 import jax.numpy as jnp
 def run(xs):
     return jnp.mean(xs) * {i + 1}
 """)
-        fe.wait_done(spec)
+        dep.result()
     t0 = time.perf_counter()
-    specs = [fe.submit_analytics("m", iterations=5,
-                                 params={"n_values": 32})
-             for fe in fes]
+    handles = [fe.submit_analytics("m", iterations=5,
+                                   params={"n_values": 32})
+               for fe in fes]
     hashes = set()
-    for fe, spec in zip(fes, specs):
-        results, done = fe.wait_done(spec, timeout=60)
+    for handle in handles:
+        results, done = handle.result(timeout=60)
         hashes.update(r.winning_md5 for r in results)
     dt = time.perf_counter() - t0
     fleet.shutdown()

@@ -55,22 +55,22 @@ def bench_fleet_layer(n_clients: int = 8) -> Dict[str, float]:
         fe = fleet.frontend("bench")
         # cloud replacement
         t0 = time.perf_counter()
-        spec = fe.deploy_code("m", MODULE_V.format(k=run_i + 2),
+        dep = fe.deploy_code("m", MODULE_V.format(k=run_i + 2),
                               target=Target.CLOUD)
-        fe.wait_done(spec)
+        dep.result()
         res["replace_cloud_ms"].append((time.perf_counter() - t0) * 1e3)
         # client replacement (all clients)
         t0 = time.perf_counter()
-        spec = fe.deploy_code("m", MODULE_V.format(k=run_i + 100))
-        fe.wait_done(spec)
+        dep = fe.deploy_code("m", MODULE_V.format(k=run_i + 100))
+        dep.result()
         res["replace_client_ms"].append((time.perf_counter() - t0) * 1e3)
         fleet.shutdown()
         # standard redeployment: tear down + recreate the installation
         t0 = time.perf_counter()
         fleet2 = Fleet.create(n_clients, seed=run_i)
         fe2 = fleet2.frontend("bench")
-        spec = fe2.deploy_code("m", MODULE_V.format(k=run_i + 2))
-        fe2.wait_done(spec)
+        dep = fe2.deploy_code("m", MODULE_V.format(k=run_i + 2))
+        dep.result()
         res["redeploy_ms"].append((time.perf_counter() - t0) * 1e3)
         fleet2.shutdown()
     return {k: mean(v) for k, v in res.items()}

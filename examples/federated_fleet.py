@@ -31,7 +31,7 @@ def main() -> None:
               f"version {str(r['winning_md5'])[:12]}")
 
     print("== deploy a faster update rule to ALL clients, mid-session")
-    spec = analyst.deploy_code("client_update", """
+    deploy = analyst.deploy_code("client_update", """
 import jax.numpy as jnp
 def run(w, xs, ys):
     z = jnp.tanh(xs)
@@ -43,19 +43,18 @@ def run(w, xs, ys):
         w = w - 0.1 * grad                    # higher lr
     return w
 """)
-    _, done = analyst.wait_done(spec)
-    print(f"  deploy: {done.status.value} ({done.detail})")
+    _, done = deploy.result()
+    print(f"  deploy: {done.status.value} v{deploy.version} ({done.detail})")
 
     print("== deploy a trimmed-mean aggregator to the CLOUD")
     from repro.core.assignment import Target
-    spec = analyst.deploy_code("fed_aggregate", """
+    analyst.deploy_code("fed_aggregate", """
 import jax.numpy as jnp
 def run(stacked):
     # drop the most extreme client per coordinate (byzantine-lite)
     s = jnp.sort(stacked, axis=0)
     return jnp.mean(s[1:-1], axis=0)
-""", target=Target.CLOUD)
-    analyst.wait_done(spec)
+""", target=Target.CLOUD).result()
 
     print("== 15 more rounds with the swapped rules")
     sess.run_rounds(analyst, 15)

@@ -2,7 +2,9 @@
 
 Spin up a simulated fleet (1 cloud + 8 vehicle clients), run built-in
 analytics, then deploy custom code at runtime — no restart — and watch
-an ongoing assignment pick it up between iterations.
+an ongoing assignment pick it up between iterations. Every submission
+returns an AssignmentHandle: one control surface for events, results,
+status, and cancellation.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -10,6 +12,7 @@ import sys
 
 sys.path.insert(0, "src")
 
+from repro.core import IterationEvent
 from repro.core.fleet import Fleet
 
 
@@ -18,26 +21,30 @@ def main() -> None:
     analyst = fleet.frontend("analyst-1")
 
     # 1. built-in analytics over the fleet's telemetry windows
-    spec = analyst.submit_analytics("mean", iterations=2,
-                                    params={"n_values": 64})
-    results, done = analyst.wait_done(spec)
+    handle = analyst.submit_analytics("mean", iterations=2,
+                                      params={"n_values": 64})
+    results, done = handle.result()
     print(f"[builtin] {done.status.value}: per-client means of iteration 0 "
           f"= {[round(v, 2) for v in results[0].value[:4]]} ...")
 
-    # 2. deploy custom code — validated, hashed, shipped as a task
+    # 2. deploy custom code — validated, hashed, shipped as a task; the
+    #    Deployment handle carries the registry identity of what shipped
     deploy = analyst.deploy_code("smoothed_range", """
 import jax.numpy as jnp
 def run(xs):
     # robust range: 90th - 10th percentile of the window
     return jnp.percentile(xs, 90) - jnp.percentile(xs, 10)
 """)
-    _, done = analyst.wait_done(deploy)
-    print(f"[deploy ] {done.status.value}: {done.detail}")
+    _, done = deploy.result()
+    print(f"[deploy ] {done.status.value}: v{deploy.version} "
+          f"{deploy.md5[:8]} ({done.detail})")
 
-    # 3. the custom method is callable immediately
-    spec = analyst.submit_analytics("smoothed_range", iterations=4,
-                                    params={"n_values": 128})
-    first = analyst.next_event(spec)
+    # 3. the custom method is callable immediately; iterate the typed
+    #    event stream as iterations commit
+    handle = analyst.submit_analytics("smoothed_range", iterations=4,
+                                      params={"n_values": 128})
+    stream = handle.events()
+    first = next(stream)
     print(f"[custom ] iteration 0 committed with version "
           f"{first.winning_md5[:8]} ({first.n_accepted}/8 clients)")
 
@@ -47,12 +54,18 @@ import jax.numpy as jnp
 def run(xs):
     return jnp.percentile(xs, 75) - jnp.percentile(xs, 25)  # IQR now
 """)
-    analyst.wait_done(deploy2)
-    rest, done = analyst.wait_done(spec)
+    deploy2.result()
+    rest = [ev for ev in stream if isinstance(ev, IterationEvent)]
     versions = [first.winning_md5[:8]] + [r.winning_md5[:8] for r in rest]
-    print(f"[swap   ] {done.status.value}: iteration versions = {versions}")
+    print(f"[swap   ] {handle.status.value}: iteration versions = {versions}")
     print("          (version changed mid-assignment, no restart, and no "
           "iteration mixed results from two versions)")
+
+    # 5. didn't like v2? one call re-deploys v1 fleet-wide
+    rollback = deploy2.rollback()
+    _, done = rollback.result()
+    print(f"[rollbk ] {done.status.value}: fleet back on v{rollback.version} "
+          f"{rollback.md5[:8]}")
     fleet.shutdown()
 
 

@@ -30,15 +30,19 @@ def main() -> None:
     prompt = jax.random.randint(jax.random.PRNGKey(1), (4, 24), 0,
                                 run.model.vocab_size)
 
+    deployments = []
+
     def on_token(i, tok):
         if i == 7:   # mid-generation: greedy -> temperature sampling
-            reg.deploy("analyst", "sampler", """
+            dep = engine.deploy_sampler("""
 import jax
 def run(logits, key):
     return jax.random.categorical(key, logits / 0.8).astype('int32')
 """)
-            print("  [token 8] sampler swapped greedy -> temp=0.8 "
-                  "(same generation, same KV cache)")
+            deployments.append(dep)
+            print(f"  [token 8] sampler v{dep.version} ({dep.md5[:8]}) "
+                  "deployed: greedy -> temp=0.8 (same generation, same "
+                  "KV cache)")
 
     toks, info = engine.generate(params, prompt, 24, on_token=on_token)
     md5s = info["sampler_md5s"]
@@ -51,6 +55,18 @@ def run(logits, key):
     a = np.asarray(toks)
     print("greedy prefix (seq 0):", a[0, :8].tolist())
     print("sampled suffix (seq 0):", a[0, 8:16].tolist())
+
+    # versioned deployments support one-call rollback: deploy a second
+    # sampler, regret it, return to v1 without re-validating or re-jitting
+    dep2 = engine.deploy_sampler("""
+import jax
+def run(logits, key):
+    return jax.random.categorical(key, logits / 1.5).astype('int32')
+""")
+    restored = dep2.rollback()
+    engine.generate(params, prompt, 8)
+    print(f"rolled back v{dep2.version} -> v{restored.version}; re-jits "
+          f"still {engine.rebuilds} (rollback hit the executable cache)")
 
 
 if __name__ == "__main__":

@@ -64,13 +64,15 @@ def main() -> None:
     state = loop.run(state, third, on_step=log)
 
     print("== phase 2: hot-swap z-loss-regularized CE (no restart)")
-    reg.deploy("analyst", "train_loss", """
+    deploy = bindings["train_loss"].deploy("""
 import jax, jax.numpy as jnp
 def run(logits, labels):
     logz = jax.nn.logsumexp(logits, axis=-1)
     gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)
     return jnp.mean(logz - gold.squeeze(-1)) + 1e-4 * jnp.mean(logz ** 2)
 """)
+    print(f"   deployed train_loss v{deploy.version} ({deploy.md5[:8]}); "
+          f"a later deploy could rollback() to this version instantly")
     state = loop.run(state, third, on_step=log)
 
     print("== phase 3: simulate preemption -> restore -> continue")

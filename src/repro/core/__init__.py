@@ -5,11 +5,17 @@ code modules, front-end validation, the assignment/task actor fabric,
 and the md5-majority consistency rule.
 """
 from repro.core.assignment import (
+    AssignmentEvent,
     AssignmentKind,
     AssignmentSpec,
+    DeployEvent,
+    DoneEvent,
+    IterationEvent,
     Status,
     Target,
     TaskSpec,
+    event_from_wire,
+    event_to_wire,
 )
 from repro.core.consistency import (
     FilterOutcome,
@@ -20,13 +26,17 @@ from repro.core.consistency import (
 )
 from repro.core.fleet import (
     BUILTIN_METHODS,
+    AssignmentHandle,
+    CancelAssignment,
     ClientApp,
     CloudApp,
+    CloudNode,
+    Deployment,
     Fleet,
     UserFrontend,
 )
 from repro.core.module import ActiveModule, ResolvedModule, compile_module
-from repro.core.registry import ActiveCodeRegistry, Binding
+from repro.core.registry import ActiveCodeRegistry, Binding, LocalDeployment
 from repro.core.validation import (
     SlotSpec,
     ValidationError,
@@ -38,15 +48,24 @@ from repro.core.validation import (
 __all__ = [
     "ActiveCodeRegistry",
     "ActiveModule",
+    "AssignmentEvent",
+    "AssignmentHandle",
     "AssignmentKind",
     "AssignmentSpec",
     "BUILTIN_METHODS",
     "Binding",
+    "CancelAssignment",
     "ClientApp",
     "CloudApp",
+    "CloudNode",
+    "DeployEvent",
+    "Deployment",
+    "DoneEvent",
     "FilterOutcome",
     "Fleet",
     "IterationCollector",
+    "IterationEvent",
+    "LocalDeployment",
     "QuorumPolicy",
     "ResolvedModule",
     "SlotSpec",
@@ -57,6 +76,8 @@ __all__ = [
     "UserFrontend",
     "ValidationError",
     "compile_module",
+    "event_from_wire",
+    "event_to_wire",
     "majority_filter",
     "scalar_output",
     "static_check",

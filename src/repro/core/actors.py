@@ -47,6 +47,8 @@ class Actor:
         self._mailbox: "queue.Queue[Optional[Envelope]]" = queue.Queue()
         self._thread: Optional[threading.Thread] = None
         self._monitors: List[str] = []
+        self._monitor_lock = threading.Lock()
+        self._exited = False
         self._system: Optional["ActorSystem"] = None
         self._alive = False
         self.exit_reason: Optional[str] = None
@@ -95,9 +97,16 @@ class Actor:
         self._alive = False
         self._mailbox.put(None)
 
-    def monitor_me(self, watcher: str) -> None:
-        if watcher not in self._monitors:
-            self._monitors.append(watcher)
+    def monitor_me(self, watcher: str) -> bool:
+        """Register a watcher; False if this actor has already exited
+        (its DOWN fan-out has happened — the caller must synthesize
+        one), closing the spawn/monitor vs fast-exit race."""
+        with self._monitor_lock:
+            if self._exited:
+                return False
+            if watcher not in self._monitors:
+                self._monitors.append(watcher)
+            return True
 
 
 class ActorSystem:
@@ -140,16 +149,17 @@ class ActorSystem:
 
     def monitor(self, watcher: str, target: str) -> None:
         a = self.whereis(target)
-        if a is None:
+        if a is None or not a.monitor_me(watcher):
             self.send(watcher, Down(actor=target, reason="noproc"))
-            return
-        a.monitor_me(watcher)
 
     # -- exit / supervision ---------------------------------------------------
     def _actor_exited(self, actor: Actor, reason: Optional[str]) -> None:
         with self._lock:
             self._actors.pop(actor.name, None)
-        for watcher in actor._monitors:
+        with actor._monitor_lock:
+            actor._exited = True
+            monitors = list(actor._monitors)
+        for watcher in monitors:
             self.send(watcher, Down(actor=actor.name, reason=reason))
         if reason is not None and actor.name in self._supervised:
             with self._lock:

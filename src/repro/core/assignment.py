@@ -12,7 +12,7 @@ import itertools
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Any, Dict, Optional, Sequence, Tuple
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
 
 from repro.core import codec
 from repro.core.module import ActiveModule
@@ -36,6 +36,12 @@ class Status(str, enum.Enum):
     DONE = "done"
     FAILED = "failed"
     TIMEOUT = "timeout"
+    CANCELLED = "cancelled"
+
+    @property
+    def terminal(self) -> bool:
+        return self in (Status.DONE, Status.FAILED, Status.TIMEOUT,
+                        Status.CANCELLED)
 
 
 _counter = itertools.count(1)
@@ -99,6 +105,139 @@ class AssignmentSpec:
             code=ActiveModule.from_wire(d["code"]) if "code" in d else None,
             created_at=float(d["created_at"]),
         )
+
+
+# ---------------------------------------------------------------------------
+# Typed assignment events (the control-plane stream a handle iterates).
+#
+# Every event is wire-codec round-trippable exactly like AssignmentSpec:
+# ``event_to_wire``/``event_from_wire`` carry a type tag so a byte stream
+# of mixed events demultiplexes without out-of-band information.
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class IterationEvent:
+    """One committed iteration of an ongoing assignment."""
+
+    assignment_id: str
+    iteration: int
+    value: Any
+    winning_md5: Optional[str]
+    n_accepted: int
+    n_dropped: int
+    n_stragglers: int
+
+    def to_wire(self) -> bytes:
+        return codec.to_wire({
+            "event": "iteration",
+            "assignment_id": self.assignment_id,
+            "iteration": self.iteration,
+            "value": self.value,
+            "winning_md5": self.winning_md5,
+            "n_accepted": self.n_accepted,
+            "n_dropped": self.n_dropped,
+            "n_stragglers": self.n_stragglers,
+        })
+
+    @staticmethod
+    def from_wire(data: bytes) -> "IterationEvent":
+        d = codec.from_wire(data)
+        return IterationEvent(
+            assignment_id=d["assignment_id"],
+            iteration=int(d["iteration"]),
+            value=d["value"],
+            winning_md5=d["winning_md5"],
+            n_accepted=int(d["n_accepted"]),
+            n_dropped=int(d["n_dropped"]),
+            n_stragglers=int(d["n_stragglers"]),
+        )
+
+
+@dataclass(frozen=True)
+class DeployEvent:
+    """A code-replacement assignment installed a module version on its
+    targets (paper: the ack that active code reached the fleet)."""
+
+    assignment_id: str
+    slot: str
+    md5: str
+    version: int
+    target: Target
+    n_installed: int
+    n_targets: int
+
+    def to_wire(self) -> bytes:
+        return codec.to_wire({
+            "event": "deploy",
+            "assignment_id": self.assignment_id,
+            "slot": self.slot,
+            "md5": self.md5,
+            "version": self.version,
+            "target": self.target.value,
+            "n_installed": self.n_installed,
+            "n_targets": self.n_targets,
+        })
+
+    @staticmethod
+    def from_wire(data: bytes) -> "DeployEvent":
+        d = codec.from_wire(data)
+        return DeployEvent(
+            assignment_id=d["assignment_id"],
+            slot=d["slot"],
+            md5=d["md5"],
+            version=int(d["version"]),
+            target=Target(d["target"]),
+            n_installed=int(d["n_installed"]),
+            n_targets=int(d["n_targets"]),
+        )
+
+
+@dataclass(frozen=True)
+class DoneEvent:
+    """Terminal event: the assignment reached a final status."""
+
+    assignment_id: str
+    status: Status
+    detail: str = ""
+
+    def to_wire(self) -> bytes:
+        return codec.to_wire({
+            "event": "done",
+            "assignment_id": self.assignment_id,
+            "status": self.status.value,
+            "detail": self.detail,
+        })
+
+    @staticmethod
+    def from_wire(data: bytes) -> "DoneEvent":
+        d = codec.from_wire(data)
+        return DoneEvent(
+            assignment_id=d["assignment_id"],
+            status=Status(d["status"]),
+            detail=d["detail"],
+        )
+
+
+AssignmentEvent = Union["IterationEvent", "DeployEvent", "DoneEvent"]
+
+EVENT_TYPES: Dict[str, Any] = {
+    "iteration": IterationEvent,
+    "deploy": DeployEvent,
+    "done": DoneEvent,
+}
+
+
+def event_to_wire(ev: AssignmentEvent) -> bytes:
+    return ev.to_wire()
+
+
+def event_from_wire(data: bytes) -> AssignmentEvent:
+    tag = codec.from_wire(data).get("event")
+    cls = EVENT_TYPES.get(tag)
+    if cls is None:
+        raise ValueError(f"unknown event type on the wire: {tag!r}")
+    return cls.from_wire(data)
 
 
 @dataclass(frozen=True)

@@ -24,6 +24,7 @@ from __future__ import annotations
 import queue
 import threading
 import time
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -31,11 +32,16 @@ import numpy as np
 
 from repro.core.actors import Actor, ActorSystem, Down
 from repro.core.assignment import (
+    AssignmentEvent,
     AssignmentKind,
     AssignmentSpec,
+    DeployEvent,
+    DoneEvent,
+    IterationEvent,
     Status,
     Target,
     TaskSpec,
+    event_from_wire,
 )
 from repro.core.consistency import (
     FilterOutcome,
@@ -59,6 +65,14 @@ class SubmitAssignment:
 
 
 @dataclass(frozen=True)
+class CancelAssignment:
+    """User-initiated cancellation of an in-flight assignment; the
+    handler stops cleanly mid-iteration (no partial commit)."""
+
+    assignment_id: str
+
+
+@dataclass(frozen=True)
 class NewTask:
     task: TaskSpec
     handler: str           # assignment-handler actor name
@@ -69,24 +83,6 @@ class TaskDone:
     task: TaskSpec
     result: TaggedResult
     error: Optional[str] = None
-
-
-@dataclass(frozen=True)
-class IterationResult:
-    assignment_id: str
-    iteration: int
-    value: Any
-    winning_md5: Optional[str]
-    n_accepted: int
-    n_dropped: int
-    n_stragglers: int
-
-
-@dataclass(frozen=True)
-class AssignmentDone:
-    assignment_id: str
-    status: Status
-    detail: str = ""
 
 
 @dataclass(frozen=True)
@@ -274,6 +270,7 @@ class AssignmentHandler(Actor):
         self.collector: Optional[IterationCollector] = None
         self._timer: Optional[threading.Timer] = None
         self._committed_iterations = 0
+        self._cancelled = False
 
     # -- helpers ----------------------------------------------------------------
     def _targets(self) -> List[str]:
@@ -286,7 +283,11 @@ class AssignmentHandler(Actor):
             assert self.spec.code is not None
             self.cloud_app.install(self.spec.code)
             if self.spec.target == Target.CLOUD:
-                self.send(self.cloud, AssignmentDone(
+                self.send(self.cloud, DeployEvent(
+                    self.spec.assignment_id, self.spec.code.slot,
+                    self.spec.code.md5, self.spec.code.version,
+                    Target.CLOUD, n_installed=1, n_targets=1))
+                self.send(self.cloud, DoneEvent(
                     self.spec.assignment_id, Status.DONE,
                     detail=f"cloud code {self.spec.code.md5} deployed"))
                 self.stop()
@@ -296,7 +297,7 @@ class AssignmentHandler(Actor):
     def _start_iteration(self) -> None:
         targets = self._targets()
         if not targets:
-            self.send(self.cloud, AssignmentDone(
+            self.send(self.cloud, DoneEvent(
                 self.spec.assignment_id, Status.FAILED, detail="no clients"))
             self.stop()
             return
@@ -318,8 +319,23 @@ class AssignmentHandler(Actor):
             self._timer.start()
 
     def handle(self, sender, msg) -> None:
-        if isinstance(msg, TaskDone):
-            if msg.task.iteration != self.iteration or self.collector is None:
+        if isinstance(msg, CancelAssignment):
+            # Stop cleanly mid-iteration: never commit a partial iteration,
+            # never dispatch the next one. In-flight task results land in
+            # dead letters once this actor is gone.
+            self._cancelled = True
+            if self._timer is not None:
+                self._timer.cancel()
+                self._timer = None
+            self.collector = None
+            self.send(self.cloud, DoneEvent(
+                self.spec.assignment_id, Status.CANCELLED,
+                detail=f"cancelled during iteration {self.iteration} "
+                       f"({self._committed_iterations} committed)"))
+            self.stop()
+        elif isinstance(msg, TaskDone):
+            if (self._cancelled or msg.task.iteration != self.iteration
+                    or self.collector is None):
                 return  # straggler from an already-committed iteration
             if msg.error is not None:
                 # count errored client as a dropped (distinct-hash) result
@@ -347,16 +363,22 @@ class AssignmentHandler(Actor):
             ok = all(r.payload == "installed" for r in outcome.accepted)
             total = len(outcome.accepted)
             done = (ok and total == self.collector.n_clients)
-            self.send(self.cloud, AssignmentDone(
+            assert self.spec.code is not None
+            self.send(self.cloud, DeployEvent(
+                self.spec.assignment_id, self.spec.code.slot,
+                self.spec.code.md5, self.spec.code.version,
+                self.spec.target, n_installed=total if ok else 0,
+                n_targets=self.collector.n_clients))
+            self.send(self.cloud, DoneEvent(
                 self.spec.assignment_id,
                 Status.DONE if done else Status.FAILED,
                 detail=f"{total}/{self.collector.n_clients} clients installed "
-                       f"{self.spec.code.md5 if self.spec.code else '?'}"))
+                       f"{self.spec.code.md5}"))
             self.stop()
             return
 
         value = self.cloud_app.aggregate(self.spec, outcome.accepted)
-        self.send(self.cloud, IterationResult(
+        self.send(self.cloud, IterationEvent(
             assignment_id=self.spec.assignment_id,
             iteration=self.iteration,
             value=value,
@@ -368,8 +390,8 @@ class AssignmentHandler(Actor):
         self._committed_iterations += 1
         self.collector = None
         if self._committed_iterations >= self.spec.iterations:
-            self.send(self.cloud, AssignmentDone(self.spec.assignment_id,
-                                                 Status.DONE))
+            self.send(self.cloud, DoneEvent(self.spec.assignment_id,
+                                            Status.DONE))
             self.stop()
         else:
             self.iteration += 1
@@ -382,45 +404,235 @@ class AssignmentHandler(Actor):
 
 class CloudNode(Actor):
     """Permanent central node (OODIDA's b). Routes user assignments to
-    fresh AssignmentHandlers and streams results back to user queues."""
+    fresh AssignmentHandlers and streams typed events back to the
+    per-assignment handle queues.
+
+    ``max_concurrent_assignments`` is the backpressure knob: beyond it,
+    submissions queue FIFO inside the cloud node and are admitted as
+    running handlers finish — many simultaneous handles are the expected
+    usage, an unbounded handler explosion is not.
+    """
 
     def __init__(self, name: str, client_nodes: Dict[str, str],
-                 cloud_app: CloudApp, policy: QuorumPolicy):
+                 cloud_app: CloudApp, policy: QuorumPolicy,
+                 max_concurrent_assignments: Optional[int] = None):
         super().__init__(name)
         self.client_nodes = client_nodes
         self.cloud_app = cloud_app
         self.policy = policy
+        self.max_concurrent = max_concurrent_assignments
         self._user_queues: Dict[str, "queue.Queue[Any]"] = {}
         self._handler_seq = 0
+        self._handler_assignments: Dict[str, str] = {}   # actor -> asg id
+        self._assignment_handlers: Dict[str, str] = {}   # asg id -> actor
+        self._pending: "deque[SubmitAssignment]" = deque()
 
+    # -- helpers ----------------------------------------------------------------
+    def _emit(self, ev: AssignmentEvent) -> None:
+        """Round-trip the event through the wire codec (bytes in, bytes
+        out — same discipline as assignment submission), then hand it to
+        the owning handle's queue."""
+        q = self._user_queues.get(ev.assignment_id)
+        if q is None:
+            return
+        q.put(event_from_wire(ev.to_wire()))
+        if isinstance(ev, DoneEvent):
+            self._user_queues.pop(ev.assignment_id, None)
+
+    def _spawn_handler(self, msg: SubmitAssignment) -> None:
+        spec = msg.spec
+        self._user_queues[spec.assignment_id] = msg.reply_to
+        self._handler_seq += 1
+        name = f"{self.name}.asg{self._handler_seq}"
+        handler = AssignmentHandler(
+            name, spec, self.client_nodes, self.cloud_app, self.name,
+            self.policy,
+            straggler_grace_s=float(spec.params.get("straggler_grace_s",
+                                                    0.25)))
+        assert self._system is not None
+        self._system.spawn(handler)
+        self._system.monitor(self.name, name)
+        self._handler_assignments[name] = spec.assignment_id
+        self._assignment_handlers[spec.assignment_id] = name
+
+    def _admit_pending(self) -> None:
+        while self._pending and (
+                self.max_concurrent is None
+                or len(self._handler_assignments) < self.max_concurrent):
+            self._spawn_handler(self._pending.popleft())
+
+    # -- message loop -------------------------------------------------------------
     def handle(self, sender, msg) -> None:
         if isinstance(msg, SubmitAssignment):
-            spec = msg.spec
-            self._user_queues[spec.assignment_id] = msg.reply_to
-            self._handler_seq += 1
-            name = f"{self.name}.asg{self._handler_seq}"
-            handler = AssignmentHandler(
-                name, spec, self.client_nodes, self.cloud_app, self.name,
-                self.policy,
-                straggler_grace_s=float(spec.params.get("straggler_grace_s",
-                                                        0.25)))
-            assert self._system is not None
-            self._system.spawn(handler)
-            self._system.monitor(self.name, name)
-            self._handler_assignments = getattr(self, "_handler_assignments", {})
-            self._handler_assignments[name] = spec.assignment_id
-        elif isinstance(msg, (IterationResult, AssignmentDone)):
-            q = self._user_queues.get(msg.assignment_id)
-            if q is not None:
-                q.put(msg)
-                if isinstance(msg, AssignmentDone):
-                    self._user_queues.pop(msg.assignment_id, None)
+            if (self.max_concurrent is not None
+                    and len(self._handler_assignments) >= self.max_concurrent):
+                self._pending.append(msg)
+            else:
+                self._spawn_handler(msg)
+        elif isinstance(msg, CancelAssignment):
+            handler = self._assignment_handlers.get(msg.assignment_id)
+            if handler is not None:
+                self.send(handler, msg)
+                return
+            # still queued behind the backpressure gate: cancel in place
+            for pend in list(self._pending):
+                if pend.spec.assignment_id == msg.assignment_id:
+                    self._pending.remove(pend)
+                    self._user_queues[msg.assignment_id] = pend.reply_to
+                    self._emit(DoneEvent(msg.assignment_id, Status.CANCELLED,
+                                         detail="cancelled while queued"))
+                    break
+        elif isinstance(msg, (IterationEvent, DeployEvent, DoneEvent)):
+            self._emit(msg)
         elif isinstance(msg, Down):
-            if msg.reason is not None:   # handler crashed: fail the assignment
-                asg = getattr(self, "_handler_assignments", {}).get(msg.actor)
-                if asg and asg in self._user_queues:
-                    self._user_queues.pop(asg).put(AssignmentDone(
-                        asg, Status.FAILED, detail=f"handler crash: {msg.reason}"))
+            asg = self._handler_assignments.pop(msg.actor, None)
+            if asg is not None:
+                self._assignment_handlers.pop(asg, None)
+                if msg.reason is not None and asg in self._user_queues:
+                    # handler crashed before its DoneEvent: fail the handle
+                    self._emit(DoneEvent(
+                        asg, Status.FAILED,
+                        detail=f"handler crash: {msg.reason}"))
+            self._admit_pending()
+
+
+# ---------------------------------------------------------------------------
+# Assignment handles: the unified control-plane surface
+# ---------------------------------------------------------------------------
+
+
+class AssignmentHandle:
+    """Live handle to one submitted assignment — the single way results
+    come back, whatever the submission path (analytics, code deployment,
+    federated rounds, serving swaps).
+
+    * ``events()`` — iterate the typed event stream (``IterationEvent``,
+      ``DeployEvent``) until the terminal ``DoneEvent``;
+    * ``result(timeout)`` — block until done, return
+      ``(iteration_events, done_event)``;
+    * ``status`` — PENDING / RUNNING / DONE / FAILED / CANCELLED;
+    * ``cancel()`` — stop an in-flight assignment cleanly mid-iteration.
+
+    Events already consumed are kept in ``history``; ``events()`` always
+    replays them first, so a handle can be iterated more than once.
+    """
+
+    def __init__(self, spec: AssignmentSpec, system: ActorSystem, cloud: str):
+        self.spec = spec
+        self.system = system
+        self.cloud = cloud
+        self.history: List[AssignmentEvent] = []
+        self._queue: "queue.Queue[AssignmentEvent]" = queue.Queue()
+        self._done: Optional[DoneEvent] = None
+        self._status = Status.PENDING
+
+    # -- identity -----------------------------------------------------------
+    @property
+    def assignment_id(self) -> str:
+        return self.spec.assignment_id
+
+    def __repr__(self) -> str:
+        return (f"<{type(self).__name__} {self.assignment_id} "
+                f"{self._status.value}>")
+
+    # -- event stream -------------------------------------------------------
+    def _absorb(self, ev: AssignmentEvent) -> AssignmentEvent:
+        self.history.append(ev)
+        if isinstance(ev, DoneEvent):
+            self._done = ev
+            self._status = ev.status
+        else:
+            self._status = Status.RUNNING
+        return ev
+
+    def _next(self, timeout: float) -> AssignmentEvent:
+        return self._absorb(self._queue.get(timeout=timeout))
+
+    def events(self, timeout: float = 30.0):
+        """Yield the assignment's typed events; ``timeout`` bounds the
+        wait for each *next* event, not the whole stream."""
+        # Replay by history index rather than yielding what *this*
+        # iterator drains: status/result()/another events() call may
+        # absorb queue events between our yields, and those must still
+        # be delivered here.
+        i = 0
+        while True:
+            while i < len(self.history):
+                ev = self.history[i]
+                i += 1
+                yield ev
+            if self._done is not None:
+                return
+            self._next(timeout)
+
+    def result(self, timeout: float = 30.0
+               ) -> Tuple[List[IterationEvent], DoneEvent]:
+        """Drain the stream to completion; returns the committed
+        iterations plus the terminal event."""
+        deadline = time.time() + timeout
+        while self._done is None:
+            self._next(timeout=max(0.01, deadline - time.time()))
+        iters = [e for e in self.history if isinstance(e, IterationEvent)]
+        return iters, self._done
+
+    # -- state --------------------------------------------------------------
+    @property
+    def status(self) -> Status:
+        # opportunistically drain without blocking so status is fresh
+        while self._done is None:
+            try:
+                self._absorb(self._queue.get_nowait())
+            except queue.Empty:
+                break
+        return self._status
+
+    @property
+    def done(self) -> bool:
+        return self.status.terminal
+
+    # -- control ------------------------------------------------------------
+    def cancel(self) -> None:
+        """Request clean mid-iteration termination; the terminal
+        ``DoneEvent`` (status CANCELLED) arrives on the stream."""
+        self.system.send(self.cloud, CancelAssignment(self.assignment_id))
+
+
+class Deployment(AssignmentHandle):
+    """Handle to a versioned code deployment: a ``deploy_code`` call.
+
+    Exposes the registry identity of what was shipped (``slot``,
+    ``version``, ``md5``) and ``rollback()``, which re-deploys the
+    previous registry version fleet-wide and returns the new
+    ``Deployment`` — iterative A/B testing as a two-call workflow."""
+
+    def __init__(self, spec: AssignmentSpec, system: ActorSystem, cloud: str,
+                 *, frontend: "UserFrontend", module: ActiveModule,
+                 client_ids: Tuple[str, ...] = ()):
+        super().__init__(spec, system, cloud)
+        self.frontend = frontend
+        self.module = module
+        self.client_ids = client_ids
+
+    @property
+    def slot(self) -> str:
+        return self.module.slot
+
+    @property
+    def version(self) -> int:
+        return self.module.version
+
+    @property
+    def md5(self) -> str:
+        return self.module.md5
+
+    @property
+    def target(self) -> Target:
+        return self.spec.target
+
+    def rollback(self) -> "Deployment":
+        """Re-activate and re-ship the version deployed before this one
+        (instant on every target: the compiled module is still cached)."""
+        return self.frontend.rollback(self)
 
 
 # ---------------------------------------------------------------------------
@@ -430,7 +642,7 @@ class CloudNode(Actor):
 
 class UserFrontend:
     """The analyst's Python library (OODIDA's f): validates code before
-    ingestion, submits assignments, iterates results."""
+    ingestion, submits assignments, returns handles."""
 
     def __init__(self, user_id: str, system: ActorSystem, cloud: str,
                  slot_specs: Sequence[SlotSpec] = ()):
@@ -440,55 +652,51 @@ class UserFrontend:
         self._frontend_registry = ActiveCodeRegistry()  # for validation only
         for s in slot_specs:
             self._frontend_registry.declare_slot(s)
-        self._queues: Dict[str, "queue.Queue[Any]"] = {}
 
     # -- code deployment (active-code replacement) ----------------------------
     def deploy_code(self, slot: str, source: str,
                     target: Target = Target.CLIENTS,
-                    client_ids: Sequence[str] = ()) -> AssignmentSpec:
-        """Validate (front-end checks) then ship as a special assignment."""
-        # raises ValidationError before anything is sent — the paper's gate
+                    client_ids: Sequence[str] = ()) -> Deployment:
+        """Validate (front-end checks) then ship as a special assignment.
+        Raises ValidationError before anything is sent — the paper's gate."""
         self._frontend_registry.deploy(self.user_id, slot, source)
         mod = self._frontend_registry.versions(self.user_id, slot)[-1]
+        return self._ship_module(mod, target, tuple(client_ids))
+
+    def rollback(self, deployment: Deployment) -> Deployment:
+        """Fleet-wide re-deploy of the version preceding ``deployment``."""
+        prev = self._frontend_registry.rollback_prior(
+            self.user_id, deployment.slot, deployment.version)
+        return self._ship_module(prev, deployment.target,
+                                 deployment.client_ids)
+
+    def _ship_module(self, mod: ActiveModule, target: Target,
+                     client_ids: Tuple[str, ...]) -> Deployment:
         spec = AssignmentSpec.new(
             self.user_id, AssignmentKind.CODE_REPLACEMENT, target,
-            client_ids=client_ids, code=mod, method=slot)
-        return self._submit(spec)
+            client_ids=client_ids, code=mod, method=mod.slot)
+        spec = AssignmentSpec.from_wire(spec.to_wire())
+        handle = Deployment(spec, self.system, self.cloud, frontend=self,
+                            module=mod, client_ids=client_ids)
+        self.system.send(self.cloud, SubmitAssignment(spec, handle._queue))
+        return handle
 
     # -- analytics assignments --------------------------------------------------
     def submit_analytics(self, method: str, *, iterations: int = 1,
                          client_ids: Sequence[str] = (),
-                         params: Optional[Dict[str, Any]] = None) -> AssignmentSpec:
+                         params: Optional[Dict[str, Any]] = None
+                         ) -> AssignmentHandle:
         p = dict(params or {})
         p.setdefault("code_user", self.user_id)
         spec = AssignmentSpec.new(
             self.user_id, AssignmentKind.ANALYTICS, Target.CLIENTS,
             client_ids=client_ids, iterations=iterations, params=p,
             method=method)
-        return self._submit(spec)
-
-    def _submit(self, spec: AssignmentSpec) -> AssignmentSpec:
-        q: "queue.Queue[Any]" = queue.Queue()
-        self._queues[spec.assignment_id] = q
         # exercise the wire codec on every submission (bytes in, bytes out)
         spec = AssignmentSpec.from_wire(spec.to_wire())
-        self.system.send(self.cloud, SubmitAssignment(spec, q))
-        return spec
-
-    # -- results ------------------------------------------------------------------
-    def next_event(self, spec: AssignmentSpec, timeout: float = 10.0) -> Any:
-        return self._queues[spec.assignment_id].get(timeout=timeout)
-
-    def wait_done(self, spec: AssignmentSpec, timeout: float = 30.0
-                  ) -> Tuple[List[IterationResult], AssignmentDone]:
-        results: List[IterationResult] = []
-        deadline = time.time() + timeout
-        while True:
-            ev = self._queues[spec.assignment_id].get(
-                timeout=max(0.01, deadline - time.time()))
-            if isinstance(ev, AssignmentDone):
-                return results, ev
-            results.append(ev)
+        handle = AssignmentHandle(spec, self.system, self.cloud)
+        self.system.send(self.cloud, SubmitAssignment(spec, handle._queue))
+        return handle
 
 
 @dataclass
@@ -506,7 +714,8 @@ class Fleet:
                slot_specs: Sequence[SlotSpec] = (),
                data_per_client: int = 4096,
                delay_fns: Optional[Dict[str, Callable]] = None,
-               store_root: Optional[str] = None) -> "Fleet":
+               store_root: Optional[str] = None,
+               max_concurrent_assignments: Optional[int] = None) -> "Fleet":
         rng = np.random.default_rng(seed)
         system = ActorSystem()
         client_nodes: Dict[str, str] = {}
@@ -533,7 +742,8 @@ class Fleet:
             cloud_reg.declare_slot(s)
         cloud_app = CloudApp(cloud_reg)
         cloud = CloudNode("cloud", client_nodes, cloud_app,
-                          policy or QuorumPolicy())
+                          policy or QuorumPolicy(),
+                          max_concurrent_assignments=max_concurrent_assignments)
         system.spawn(cloud)
         return Fleet(system=system, cloud_name=cloud.name,
                      cloud_app=cloud_app, client_apps=client_apps)

@@ -53,6 +53,46 @@ class Binding:
             fn=self.default, md5="builtin", version=0, slot=self.slot,
             is_default=True)
 
+    def deploy(self, source: str) -> "LocalDeployment":
+        """Versioned deploy into this binding's slot; same two-call
+        deploy/rollback workflow as the fleet's ``UserFrontend`` but for
+        a single in-process registry (train step, serve engine)."""
+        mod = self.registry.deploy(self.user_id, self.slot, source)
+        return LocalDeployment(registry=self.registry, module=mod)
+
+
+@dataclass(frozen=True)
+class LocalDeployment:
+    """Versioned deployment handle over one in-process registry —
+    the single-node counterpart of ``repro.core.fleet.Deployment``
+    (same surface: ``version``, ``md5``, ``rollback()``)."""
+
+    registry: "ActiveCodeRegistry"
+    module: ActiveModule
+
+    @property
+    def slot(self) -> str:
+        return self.module.slot
+
+    @property
+    def user_id(self) -> str:
+        return self.module.user_id
+
+    @property
+    def version(self) -> int:
+        return self.module.version
+
+    @property
+    def md5(self) -> str:
+        return self.module.md5
+
+    def rollback(self) -> "LocalDeployment":
+        """Re-activate the version deployed before this one (instant:
+        compiled modules stay cached by content hash)."""
+        prev = self.registry.rollback_prior(self.user_id, self.slot,
+                                            self.version)
+        return LocalDeployment(registry=self.registry, module=prev)
+
 
 class ActiveCodeRegistry:
     def __init__(self, store_root: Optional[str] = None):
@@ -147,6 +187,19 @@ class ActiveCodeRegistry:
                     self._epoch += 1
                     return mod
         raise KeyError(f"no version {md5} for {user_id}/{slot}")
+
+    def rollback_prior(self, user_id: str, slot: str,
+                       version: int) -> ActiveModule:
+        """Re-activate the newest version older than ``version`` — the
+        shared find-prior step behind every ``Deployment.rollback()``."""
+        with self._lock:
+            older = [m for m in self._modules.get((user_id, slot), ())
+                     if m.version < version]
+        if not older:
+            raise ValueError(
+                f"no version of {user_id}/{slot} older than "
+                f"v{version} to roll back to")
+        return self.rollback(user_id, slot, older[-1].md5)
 
     def active_hash(self, user_id: str, slot: str) -> Optional[str]:
         with self._lock:

@@ -22,7 +22,6 @@ milliseconds; the pod-scale LM path lives in train/ and launch/.
 """
 from __future__ import annotations
 
-import queue
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -136,12 +135,15 @@ class FederatedSession:
     # -- round loop ----------------------------------------------------------
     def run_rounds(self, frontend, n_rounds: int,
                    client_ids: Sequence[str] = ()) -> np.ndarray:
+        """Each round is one assignment driven through its handle; the
+        per-round handle is the same control surface every other
+        submission path uses (cancel/status/typed events included)."""
         for r in range(n_rounds):
-            spec = frontend.submit_analytics(
+            handle = frontend.submit_analytics(
                 "federated_round", iterations=1, client_ids=client_ids,
                 params={"weights": self.w.tolist(), "n_values": 64,
                         "code_user": self.user_id})
-            results, done = frontend.wait_done(spec, timeout=30.0)
+            results, done = handle.result(timeout=30.0)
             (it,) = results
             stacked = np.asarray(it.value)   # aggregated by cloud slot
             if stacked.ndim == 2:            # raw per-client list: aggregate

@@ -1,4 +1,6 @@
-"""Serving driver: batched generation with a hot-swappable sampler.
+"""Serving driver: batched generation with a hot-swappable sampler,
+swapped mid-generation through the versioned deployment API (deploy ->
+generate -> rollback).
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b \
         --reduced --tokens 32
@@ -26,6 +28,9 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--tokens", type=int, default=32)
+    ap.add_argument("--swap-temp", type=float, default=0.0,
+                    help="deploy a temperature sampler mid-generation "
+                         "(0 = stay greedy), then roll it back")
     args = ap.parse_args()
 
     run = make_run_config(args.arch, args.shape)
@@ -47,13 +52,42 @@ def main() -> None:
     if run.model.is_encoder_decoder:
         frames = jnp.zeros((args.batch, run.model.encoder_seq,
                             run.model.d_model), jnp.dtype(run.model.dtype))
+    on_token = None
+    swapped = []
+    if args.swap_temp > 0:
+        # v1: explicit greedy sampler, so rollback has a version to target
+        v1 = engine.deploy_sampler(
+            "import jax.numpy as jnp\n"
+            "def run(logits, key):\n"
+            "    return jnp.argmax(logits, axis=-1).astype('int32')\n")
+        swap_at = max(1, args.tokens // 2 - 1)
+
+        def on_token(i, tok):
+            if i == swap_at and not swapped:
+                dep = engine.deploy_sampler(
+                    "import jax\n"
+                    "def run(logits, key):\n"
+                    f"    return jax.random.categorical(key, logits / "
+                    f"{args.swap_temp}).astype('int32')\n")
+                swapped.append(dep)
+                print(f"  [token {swap_at + 1}] deployed sampler "
+                      f"v{dep.version} ({dep.md5[:8]}): greedy -> "
+                      f"temp={args.swap_temp}")
+
     t0 = time.time()
-    toks, info = engine.generate(params, prompt, args.tokens, frames=frames)
+    toks, info = engine.generate(params, prompt, args.tokens, frames=frames,
+                                 on_token=on_token)
     dt = time.time() - t0
     print(f"generated {toks.shape} in {dt:.2f}s "
           f"({args.batch * args.tokens / dt:.1f} tok/s); "
           f"sampler rebuilds: {info['rebuilds']}")
     print("first sequence:", toks[0, :16].tolist())
+    if swapped:
+        # versioned rollback: next generation is greedy again, no re-jit
+        restored = swapped[-1].rollback()
+        engine.generate(params, prompt, 4, frames=frames)
+        print(f"rolled back to sampler v{restored.version}; "
+              f"rebuilds still {engine.rebuilds}")
 
 
 if __name__ == "__main__":

@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import RunConfig
-from repro.core.registry import Binding
+from repro.core.registry import Binding, LocalDeployment
 from repro.models.blocks import ModelCtx
 from repro.train.step import build_ctx
 
@@ -63,6 +63,15 @@ class ServeEngine:
         self.rebuilds = 0
 
     # ------------------------------------------------------------------
+    def deploy_sampler(self, source: str) -> LocalDeployment:
+        """Versioned sampler swap between decode steps of an ongoing
+        generation — same deployment surface as the fleet's
+        ``deploy_code`` (``version``/``md5``/``rollback()``), backed by
+        this engine's sampler binding."""
+        if self.sampler_binding is None:
+            raise RuntimeError("engine has no sampler binding to deploy into")
+        return self.sampler_binding.deploy(source)
+
     def _resolve_sampler(self) -> Tuple[Tuple, Callable, str]:
         b = self.sampler_binding
         if b is None or (b.default is None

@@ -3,6 +3,9 @@ consistency invariant: an iteration's accepted set is never mixed-version."""
 import string
 
 import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need the hypothesis package")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.consistency import (

@@ -37,9 +37,9 @@ def fleet():
 
 def test_builtin_analytics_whole_fleet(fleet):
     fe = fleet.frontend("u1")
-    spec = fe.submit_analytics("mean", iterations=2,
-                               params={"n_values": 32})
-    results, done = fe.wait_done(spec)
+    handle = fe.submit_analytics("mean", iterations=2,
+                                 params={"n_values": 32})
+    results, done = handle.result()
     assert done.status == Status.DONE
     assert len(results) == 2
     assert all(r.n_accepted == 4 for r in results)
@@ -48,21 +48,21 @@ def test_builtin_analytics_whole_fleet(fleet):
 
 def test_subset_targeting(fleet):
     fe = fleet.frontend("u1")
-    spec = fe.submit_analytics("max", client_ids=["c000", "c002"],
-                               params={"n_values": 8})
-    results, done = fe.wait_done(spec)
+    handle = fe.submit_analytics("max", client_ids=["c000", "c002"],
+                                 params={"n_values": 8})
+    results, done = handle.result()
     assert results[0].n_accepted == 2
 
 
 def test_code_replacement_then_custom_method(fleet):
     fe = fleet.frontend("u1")
     dep = fe.deploy_code("my_mean", MEAN_X2)
-    _, done = fe.wait_done(dep)
+    _, done = dep.result()
     assert done.status == Status.DONE and "4/4" in done.detail
 
-    spec = fe.submit_analytics("my_mean", iterations=1,
-                               params={"n_values": 64})
-    results, done = fe.wait_done(spec)
+    handle = fe.submit_analytics("my_mean", iterations=1,
+                                 params={"n_values": 64})
+    results, done = handle.result()
     assert done.status == Status.DONE
     # every client executed the same version (hash majority = unanimity)
     assert results[0].n_dropped == 0
@@ -76,12 +76,12 @@ import jax.numpy as jnp
 def run(values):
     return jnp.max(values) - jnp.min(values)
 """, target=Target.CLOUD)
-    _, done = fe.wait_done(dep)
+    _, done = dep.result()
     assert done.status == Status.DONE
-    spec = fe.submit_analytics("mean", iterations=1,
-                               params={"n_values": 32,
-                                       "cloud_method": "agg_spread"})
-    results, done = fe.wait_done(spec)
+    handle = fe.submit_analytics("mean", iterations=1,
+                                 params={"n_values": 32,
+                                         "cloud_method": "agg_spread"})
+    results, done = handle.result()
     assert np.isscalar(results[0].value) or results[0].value is not None
 
 
@@ -89,16 +89,17 @@ def test_mid_assignment_swap_changes_next_iteration(fleet):
     """The paper's headline: deploy between iterations of an ongoing
     assignment; subsequent iterations use the new module, no restart."""
     fe = fleet.frontend("u1")
-    _, d = fe.wait_done(fe.deploy_code("my_mean", MEAN_X2))
+    _, d = fe.deploy_code("my_mean", MEAN_X2).result()
     assert d.status == Status.DONE
 
-    spec = fe.submit_analytics("my_mean", iterations=6,
-                               params={"n_values": 16})
-    first = fe.next_event(spec)
+    handle = fe.submit_analytics("my_mean", iterations=6,
+                                 params={"n_values": 16})
+    first = next(handle.events())
     md5_a = first.winning_md5
-    _, d2 = fe.wait_done(fe.deploy_code("my_mean", MEAN_X4))
+    _, d2 = fe.deploy_code("my_mean", MEAN_X4).result()
     assert d2.status == Status.DONE
-    results, done = fe.wait_done(spec)
+    results, done = handle.result()
+    results = results[1:]              # drop the already-seen first event
     assert done.status == Status.DONE
     md5s = [r.winning_md5 for r in results]
     assert md5s[-1] != md5_a          # later iterations ran the new code
@@ -110,12 +111,12 @@ def test_mid_assignment_swap_changes_next_iteration(fleet):
 def test_user_isolation_across_frontends(fleet):
     fa = fleet.frontend("alice")
     fb = fleet.frontend("bob")
-    fe_events = fa.wait_done(fa.deploy_code("m", MEAN_X2))
-    fb_events = fb.wait_done(fb.deploy_code("m", MEAN_X4))
+    fa.deploy_code("m", MEAN_X2).result()
+    fb.deploy_code("m", MEAN_X4).result()
     sa = fa.submit_analytics("m", params={"n_values": 16})
     sb = fb.submit_analytics("m", params={"n_values": 16})
-    ra, _ = fa.wait_done(sa)
-    rb, _ = fb.wait_done(sb)
+    ra, _ = sa.result()
+    rb, _ = sb.result()
     assert ra[0].winning_md5 != rb[0].winning_md5
 
 
@@ -128,10 +129,10 @@ def test_straggler_quorum_commit():
     try:
         fe = f.frontend("u1")
         t0 = time.time()
-        spec = fe.submit_analytics("mean", iterations=1,
-                                   params={"n_values": 8,
-                                           "straggler_grace_s": 0.05})
-        results, done = fe.wait_done(spec)
+        handle = fe.submit_analytics("mean", iterations=1,
+                                     params={"n_values": 8,
+                                             "straggler_grace_s": 0.05})
+        results, done = handle.result()
         elapsed = time.time() - t0
         assert done.status == Status.DONE
         assert results[0].n_accepted == 3
@@ -150,13 +151,13 @@ def test_failed_validation_never_ships(fleet):
 
 def test_client_error_reported_not_fatal(fleet):
     fe = fleet.frontend("u1")
-    _, d = fe.wait_done(fe.deploy_code("div", """
+    _, d = fe.deploy_code("div", """
 def run(xs):
     return 1.0 / 0.0
-"""))
+""").result()
     assert d.status == Status.DONE
-    spec = fe.submit_analytics("div", params={"n_values": 4})
-    results, done = fe.wait_done(spec)
+    handle = fe.submit_analytics("div", params={"n_values": 4})
+    results, done = handle.result()
     # all clients errored -> majority hash is an error tag; assignment
     # still completes (the fleet survives bad user code)
     assert done.status == Status.DONE

@@ -1,0 +1,289 @@
+"""The unified assignment-handle control plane: typed event streams,
+cancellation, versioned deployments with rollback, and the cloud node's
+concurrent-assignment backpressure gate."""
+import time
+
+import pytest
+
+from repro.core import (
+    DeployEvent,
+    DoneEvent,
+    IterationEvent,
+    Status,
+    Target,
+    event_from_wire,
+)
+from repro.core.fleet import AssignmentHandle, Deployment, Fleet
+from repro.core.registry import ActiveCodeRegistry
+
+MEAN_X2 = """
+import jax.numpy as jnp
+def run(xs):
+    return jnp.mean(xs) * 2.0
+"""
+
+MEAN_X4 = """
+import jax.numpy as jnp
+def run(xs):
+    return jnp.mean(xs) * 4.0
+"""
+
+
+@pytest.fixture()
+def fleet():
+    f = Fleet.create(4, seed=7)
+    yield f
+    f.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# Typed events on the wire
+# ---------------------------------------------------------------------------
+
+
+def test_every_event_type_round_trips_through_wire_codec():
+    events = [
+        IterationEvent("asg-1", 3, [1.5, 2.0], "abcd1234", 4, 1, 0),
+        IterationEvent("asg-2", 0, 7.25, None, 2, 0, 2),
+        DeployEvent("asg-3", "my_slot", "ff00" * 8, 2, Target.CLIENTS, 4, 4),
+        DeployEvent("asg-4", "agg", "00ff" * 8, 1, Target.CLOUD, 1, 1),
+        DoneEvent("asg-5", Status.DONE, "ok"),
+        DoneEvent("asg-6", Status.CANCELLED, "cancelled during iteration 9"),
+        DoneEvent("asg-7", Status.FAILED, "handler crash"),
+    ]
+    for ev in events:
+        back = event_from_wire(ev.to_wire())
+        assert back == ev
+        assert type(back) is type(ev)
+
+
+def test_unknown_event_tag_rejected():
+    with pytest.raises(ValueError, match="unknown event"):
+        event_from_wire(b'{"event": "bogus"}')
+
+
+def test_stream_events_are_wire_round_tripped_instances(fleet):
+    """What arrives on a handle's stream went through bytes: enums come
+    back as enums, payloads as plain JSON types."""
+    fe = fleet.frontend("u1")
+    handle = fe.submit_analytics("mean", iterations=1,
+                                 params={"n_values": 8})
+    results, done = handle.result()
+    assert isinstance(results[0], IterationEvent)
+    assert isinstance(results[0].value, list)
+    assert isinstance(done, DoneEvent)
+    assert done.status is Status.DONE
+
+
+# ---------------------------------------------------------------------------
+# Handle surface
+# ---------------------------------------------------------------------------
+
+
+def test_handle_status_lifecycle(fleet):
+    fe = fleet.frontend("u1")
+    handle = fe.submit_analytics("mean", iterations=2,
+                                 params={"n_values": 8})
+    assert isinstance(handle, AssignmentHandle)
+    results, done = handle.result()
+    assert handle.status == Status.DONE
+    assert handle.done
+    assert len(results) == 2
+    assert [e.iteration for e in results] == [0, 1]
+
+
+def test_events_iterator_survives_concurrent_draining(fleet):
+    """A live events() iterator must deliver events that other handle
+    methods (status polls, result()) drained into history between its
+    yields — no event is lost to mixed-style consumption."""
+    fe = fleet.frontend("u1")
+    handle = fe.submit_analytics("mean", iterations=4,
+                                 params={"n_values": 8})
+    stream = handle.events()
+    first = next(stream)
+    assert first.iteration == 0
+    handle.result()                 # drains everything behind the iterator
+    rest = list(stream)
+    iters = [e for e in rest if isinstance(e, IterationEvent)]
+    assert [e.iteration for e in iters] == [1, 2, 3]
+    assert isinstance(rest[-1], DoneEvent)
+
+
+def test_events_replay_after_result(fleet):
+    """A drained handle can be iterated again: history is replayed."""
+    fe = fleet.frontend("u1")
+    handle = fe.submit_analytics("mean", iterations=3,
+                                 params={"n_values": 8})
+    handle.result()
+    evs = list(handle.events())
+    assert len([e for e in evs if isinstance(e, IterationEvent)]) == 3
+    assert isinstance(evs[-1], DoneEvent)
+
+
+def test_cancel_stops_100_iteration_assignment_early(fleet):
+    """The acceptance scenario: a 100-iteration assignment is cancelled
+    after a few commits; it stops cleanly mid-iteration instead of
+    running out the remaining ~95 iterations."""
+    fe = fleet.frontend("u1")
+    handle = fe.submit_analytics("mean", iterations=100,
+                                 params={"n_values": 8})
+    stream = handle.events()
+    seen = [next(stream) for _ in range(3)]      # let a few iterations commit
+    handle.cancel()
+    results, done = handle.result(timeout=10.0)
+    assert done.status == Status.CANCELLED
+    assert "cancelled during iteration" in done.detail
+    assert 3 <= len(results) < 100
+    assert handle.status == Status.CANCELLED
+    assert all(isinstance(e, IterationEvent) for e in seen)
+
+
+def test_cancel_already_done_assignment_is_noop(fleet):
+    fe = fleet.frontend("u1")
+    handle = fe.submit_analytics("mean", iterations=1,
+                                 params={"n_values": 8})
+    results, done = handle.result()
+    handle.cancel()                               # handler long gone
+    time.sleep(0.05)
+    assert handle.status == Status.DONE
+    assert len(results) == 1
+
+
+# ---------------------------------------------------------------------------
+# Versioned deployments + rollback
+# ---------------------------------------------------------------------------
+
+
+def test_deploy_emits_typed_deploy_event(fleet):
+    fe = fleet.frontend("u1")
+    dep = fe.deploy_code("my_mean", MEAN_X2)
+    evs = list(dep.events())
+    assert isinstance(dep, Deployment)
+    deploys = [e for e in evs if isinstance(e, DeployEvent)]
+    assert len(deploys) == 1
+    assert deploys[0].md5 == dep.md5
+    assert deploys[0].version == dep.version == 1
+    assert deploys[0].n_installed == deploys[0].n_targets == 4
+    assert isinstance(evs[-1], DoneEvent) and evs[-1].status == Status.DONE
+
+
+def test_rollback_restores_prior_version_on_all_clients(fleet):
+    fe = fleet.frontend("u1")
+    v1 = fe.deploy_code("my_mean", MEAN_X2)
+    v1.result()
+    v2 = fe.deploy_code("my_mean", MEAN_X4)
+    v2.result()
+    assert (v1.version, v2.version) == (1, 2)
+    for app in fleet.client_apps.values():
+        assert app.registry.active_hash("u1", "my_mean") == v2.md5
+
+    rb = v2.rollback()
+    _, done = rb.result()
+    assert done.status == Status.DONE
+    assert rb.version == 1 and rb.md5 == v1.md5
+    for app in fleet.client_apps.values():
+        assert app.registry.active_hash("u1", "my_mean") == v1.md5
+
+    # analytics now run the rolled-back version
+    results, _ = fe.submit_analytics("my_mean",
+                                     params={"n_values": 16}).result()
+    assert results[0].winning_md5 == v1.md5
+
+
+def test_rollback_without_prior_version_raises(fleet):
+    fe = fleet.frontend("u1")
+    dep = fe.deploy_code("my_mean", MEAN_X2)
+    dep.result()
+    with pytest.raises(ValueError, match="older than"):
+        dep.rollback()
+
+
+def test_rollback_reverts_mid_assignment_deploy_before_next_iteration():
+    """The acceptance scenario: v1 is live, a long assignment starts, v2
+    is deployed mid-assignment and then rolled back — later iterations
+    are back on v1, all without restarting the assignment."""
+    f = Fleet.create(4, seed=3)
+    try:
+        fe = f.frontend("u1")
+        v1 = fe.deploy_code("my_mean", MEAN_X2)
+        v1.result()
+
+        handle = fe.submit_analytics("my_mean", iterations=8,
+                                     params={"n_values": 16})
+        stream = handle.events()
+        first = next(stream)
+        assert first.winning_md5 == v1.md5
+
+        v2 = fe.deploy_code("my_mean", MEAN_X4)
+        v2.result()
+        rb = v2.rollback()
+        _, done = rb.result()
+        assert done.status == Status.DONE and rb.md5 == v1.md5
+
+        results, done = handle.result(timeout=30.0)
+        assert done.status == Status.DONE
+        # the final iterations (after the rollback ack) ran v1 again
+        assert results[-1].winning_md5 == v1.md5
+        # and no iteration ever mixed versions (paper's invariant)
+        assert all(r.n_dropped == 0 for r in results)
+    finally:
+        f.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# Backpressure
+# ---------------------------------------------------------------------------
+
+
+def test_max_concurrent_assignments_backpressure():
+    """With the gate at 1, three submissions still all complete — two
+    queue inside the cloud node and are admitted FIFO."""
+    f = Fleet.create(4, seed=0, max_concurrent_assignments=1)
+    try:
+        fe = f.frontend("u1")
+        handles = [fe.submit_analytics("mean", iterations=2,
+                                       params={"n_values": 8})
+                   for _ in range(3)]
+        for h in handles:
+            results, done = h.result(timeout=30.0)
+            assert done.status == Status.DONE
+            assert len(results) == 2
+    finally:
+        f.shutdown()
+
+
+def test_cancel_while_queued_behind_backpressure_gate():
+    f = Fleet.create(4, seed=0, max_concurrent_assignments=1)
+    try:
+        fe = f.frontend("u1")
+        running = fe.submit_analytics("mean", iterations=3,
+                                      params={"n_values": 8})
+        queued = fe.submit_analytics("mean", iterations=3,
+                                     params={"n_values": 8})
+        queued.cancel()
+        results, done = queued.result(timeout=10.0)
+        assert done.status == Status.CANCELLED
+        assert results == []
+        _, done = running.result(timeout=30.0)
+        assert done.status == Status.DONE
+    finally:
+        f.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# Registry-local deployments (train/serve path)
+# ---------------------------------------------------------------------------
+
+
+def test_local_deployment_versioning_and_rollback():
+    reg = ActiveCodeRegistry()
+    binding = reg.bind("u", "m")
+    d1 = binding.deploy(MEAN_X2)
+    d2 = binding.deploy(MEAN_X4)
+    assert (d1.version, d2.version) == (1, 2)
+    assert reg.active_hash("u", "m") == d2.md5
+    back = d2.rollback()
+    assert back.version == 1 and back.md5 == d1.md5
+    assert reg.active_hash("u", "m") == d1.md5
+    with pytest.raises(ValueError, match="older than"):
+        back.rollback()
