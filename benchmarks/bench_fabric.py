@@ -1,0 +1,92 @@
+"""Fabric round-trip latency and deploy-to-effect time, in-proc vs TCP.
+
+Quantifies what the transport boundary costs: the same
+submit -> fan-out -> collect -> commit round measured on the loopback
+(InProc) fabric and on real spawned-process TCP clients, plus the
+paper's headline metric — how long from ``deploy_code`` to the first
+committed iteration that runs the new version.
+"""
+from __future__ import annotations
+
+import time
+from statistics import mean, median
+
+from repro.core.fleet import Fleet
+
+_V1 = """
+import jax.numpy as jnp
+def run(xs):
+    return jnp.mean(xs) * 2.0
+"""
+
+_V2 = """
+import jax.numpy as jnp
+def run(xs):
+    return jnp.mean(xs) * 4.0
+"""
+
+
+def bench_roundtrip(topology: str, n_clients: int = 4, rounds: int = 30):
+    """One-iteration assignment latency: submit -> all clients compute ->
+    quorum commit -> DoneEvent back on the handle."""
+    fleet = Fleet.create(n_clients, topology=topology)
+    try:
+        fe = fleet.frontend("bench")
+        # warm up the path (first round pays task-spec jit etc.)
+        fe.submit_analytics("mean", iterations=1,
+                            params={"n_values": 16}).result(timeout=60.0)
+        lats = []
+        for _ in range(rounds):
+            t0 = time.perf_counter()
+            h = fe.submit_analytics("mean", iterations=1,
+                                    params={"n_values": 16})
+            h.result(timeout=60.0)
+            lats.append(time.perf_counter() - t0)
+        return median(lats), mean(lats)
+    finally:
+        fleet.shutdown()
+
+
+def bench_deploy_to_effect(topology: str, n_clients: int = 4,
+                           repeats: int = 5):
+    """Mid-assignment redeploy: time from ``deploy_code(v2)`` to the
+    first committed iteration whose winning hash is v2."""
+    fleet = Fleet.create(n_clients, topology=topology)
+    try:
+        fe = fleet.frontend("bench")
+        v1 = fe.deploy_code("fab_mean", _V1)
+        v1.result(timeout=60.0)
+        times = []
+        src_a, src_b = _V1, _V2
+        for _ in range(repeats):
+            handle = fe.submit_analytics("fab_mean", iterations=40,
+                                         params={"n_values": 16})
+            stream = handle.events()
+            next(stream)                       # assignment is live
+            t0 = time.perf_counter()
+            dep = fe.deploy_code("fab_mean", src_b)
+            dep.result(timeout=60.0)
+            for ev in stream:
+                if getattr(ev, "winning_md5", None) == dep.md5:
+                    times.append(time.perf_counter() - t0)
+                    break
+            handle.cancel()
+            handle.result(timeout=60.0)
+            src_a, src_b = src_b, src_a        # alternate versions
+        return median(times)
+    finally:
+        fleet.shutdown()
+
+
+def main(report) -> None:
+    for topology in ("inproc", "tcp"):
+        med, avg = bench_roundtrip(topology)
+        report(f"fabric_roundtrip_{topology}", med * 1e6,
+               f"median 1-iter round, 4 clients (mean {avg*1e3:.2f} ms)")
+        d2e = bench_deploy_to_effect(topology)
+        report(f"fabric_deploy_to_effect_{topology}", d2e * 1e6,
+               "deploy_code -> first committed iteration on new version")
+
+
+if __name__ == "__main__":
+    main(lambda n, us, d: print(f"{n},{us:.1f},{d}"))

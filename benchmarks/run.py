@@ -2,8 +2,11 @@
 
     PYTHONPATH=src python -m benchmarks.run [--only <name>]
 
-Prints ``name,us_per_call,derived`` CSV (plus a JSON mirror under
-experiments/bench.json).
+Prints ``name,us_per_call,derived`` CSV plus JSON mirrors under
+experiments/: the full run in ``bench.json`` and one
+``BENCH_<suite>.json`` per suite that ran (e.g. ``BENCH_fabric.json``
+for the transport-fabric numbers), so per-subsystem perf trajectories
+are diffable across PRs.
 """
 from __future__ import annotations
 
@@ -12,8 +15,8 @@ import importlib
 import json
 import os
 
-SUITES = ("bench_replacement", "bench_fleet", "bench_swap_overhead",
-          "bench_kernels")
+SUITES = ("bench_replacement", "bench_fleet", "bench_fabric",
+          "bench_swap_overhead", "bench_kernels")
 
 
 def main() -> None:
@@ -23,21 +26,31 @@ def main() -> None:
     args = ap.parse_args()
 
     rows = []
+    by_suite = {}
 
-    def report(name, us, derived=""):
-        rows.append({"name": name, "us_per_call": us, "derived": derived})
-        print(f"{name},{us:.1f},{derived}", flush=True)
+    def make_report(suite):
+        def report(name, us, derived=""):
+            row = {"name": name, "us_per_call": us, "derived": derived}
+            rows.append(row)
+            by_suite.setdefault(suite, []).append(row)
+            print(f"{name},{us:.1f},{derived}", flush=True)
+        return report
 
     print("name,us_per_call,derived")
     for suite in SUITES:
         if args.only and args.only not in suite:
             continue
         mod = importlib.import_module(f"benchmarks.{suite}")
-        mod.main(report)
+        mod.main(make_report(suite))
     if args.json:
-        os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
+        out_dir = os.path.dirname(args.json) or "."
+        os.makedirs(out_dir, exist_ok=True)
         with open(args.json, "w") as f:
             json.dump(rows, f, indent=1)
+        for suite, suite_rows in by_suite.items():
+            tag = suite.removeprefix("bench_")
+            with open(os.path.join(out_dir, f"BENCH_{tag}.json"), "w") as f:
+                json.dump(suite_rows, f, indent=1)
 
 
 if __name__ == "__main__":

@@ -11,10 +11,12 @@ the paper relies on:
   (one-for-one, bounded restarts);
 * graceful system shutdown.
 
-This is a single-process simulation of the distributed message fabric;
-on a real cluster the same message protocol rides on a transport (the
-codec layer is already bytes-first). The *compute* fan-out at pod scale
-is pjit/GSPMD — see launch/ — and does not go through actors.
+Distribution is layered on top, not baked in: a bare ``ActorSystem`` is
+purely local, and ``core/transport.py`` binds one to a ``Node`` so that
+``"actor@node"`` addresses route through a byte-moving transport
+(in-proc loopback or TCP to other processes) via the wire codec. The
+*compute* fan-out at pod scale is pjit/GSPMD — see launch/ — and does
+not go through actors.
 """
 from __future__ import annotations
 
@@ -117,6 +119,9 @@ class ActorSystem:
         self._supervised: Dict[str, Callable[[], Actor]] = {}
         self.max_restarts = 3
         self.dead_letters: List[Envelope] = []
+        # set by transport.Node when this system is bound to a node; a
+        # bare ActorSystem (no node) is purely local, as before
+        self.node: Optional[Any] = None
 
     # -- registry -----------------------------------------------------------
     def spawn(self, actor: Actor, *, supervised_factory:
@@ -140,6 +145,11 @@ class ActorSystem:
 
     # -- messaging ----------------------------------------------------------
     def send(self, target: str, msg: Any, sender: Optional[str] = None) -> None:
+        if self.node is not None and "@" in target:
+            # "actor@node" address: route through the node's transport
+            # fabric (crosses the wire codec, even for self-sends)
+            self.node.route(target, msg, sender=sender)
+            return
         a = self.whereis(target)
         if a is None or not a._alive:
             with self._lock:

@@ -74,7 +74,7 @@ class AssignmentSpec:
             user_id=user_id, kind=kind, target=target,
             client_ids=tuple(client_ids), **kw)
 
-    def to_wire(self) -> bytes:
+    def to_wire_dict(self) -> Dict[str, Any]:
         d: Dict[str, Any] = {
             "assignment_id": self.assignment_id,
             "user_id": self.user_id,
@@ -88,11 +88,17 @@ class AssignmentSpec:
         }
         if self.code is not None:
             d["code"] = self.code.to_wire()
-        return codec.to_wire(d)
+        return d
+
+    def to_wire(self) -> bytes:
+        return codec.to_wire(self.to_wire_dict())
 
     @staticmethod
     def from_wire(data: bytes) -> "AssignmentSpec":
-        d = codec.from_wire(data)
+        return AssignmentSpec.from_wire_dict(codec.from_wire(data))
+
+    @staticmethod
+    def from_wire_dict(d: Dict[str, Any]) -> "AssignmentSpec":
         return AssignmentSpec(
             assignment_id=d["assignment_id"],
             user_id=d["user_id"],
@@ -128,9 +134,8 @@ class IterationEvent:
     n_dropped: int
     n_stragglers: int
 
-    def to_wire(self) -> bytes:
-        return codec.to_wire({
-            "event": "iteration",
+    def to_wire_dict(self) -> Dict[str, Any]:
+        return {
             "assignment_id": self.assignment_id,
             "iteration": self.iteration,
             "value": self.value,
@@ -138,11 +143,17 @@ class IterationEvent:
             "n_accepted": self.n_accepted,
             "n_dropped": self.n_dropped,
             "n_stragglers": self.n_stragglers,
-        })
+        }
+
+    def to_wire(self) -> bytes:
+        return codec.to_wire({"event": "iteration", **self.to_wire_dict()})
 
     @staticmethod
     def from_wire(data: bytes) -> "IterationEvent":
-        d = codec.from_wire(data)
+        return IterationEvent.from_wire_dict(codec.from_wire(data))
+
+    @staticmethod
+    def from_wire_dict(d: Dict[str, Any]) -> "IterationEvent":
         return IterationEvent(
             assignment_id=d["assignment_id"],
             iteration=int(d["iteration"]),
@@ -167,9 +178,8 @@ class DeployEvent:
     n_installed: int
     n_targets: int
 
-    def to_wire(self) -> bytes:
-        return codec.to_wire({
-            "event": "deploy",
+    def to_wire_dict(self) -> Dict[str, Any]:
+        return {
             "assignment_id": self.assignment_id,
             "slot": self.slot,
             "md5": self.md5,
@@ -177,11 +187,17 @@ class DeployEvent:
             "target": self.target.value,
             "n_installed": self.n_installed,
             "n_targets": self.n_targets,
-        })
+        }
+
+    def to_wire(self) -> bytes:
+        return codec.to_wire({"event": "deploy", **self.to_wire_dict()})
 
     @staticmethod
     def from_wire(data: bytes) -> "DeployEvent":
-        d = codec.from_wire(data)
+        return DeployEvent.from_wire_dict(codec.from_wire(data))
+
+    @staticmethod
+    def from_wire_dict(d: Dict[str, Any]) -> "DeployEvent":
         return DeployEvent(
             assignment_id=d["assignment_id"],
             slot=d["slot"],
@@ -201,17 +217,22 @@ class DoneEvent:
     status: Status
     detail: str = ""
 
-    def to_wire(self) -> bytes:
-        return codec.to_wire({
-            "event": "done",
+    def to_wire_dict(self) -> Dict[str, Any]:
+        return {
             "assignment_id": self.assignment_id,
             "status": self.status.value,
             "detail": self.detail,
-        })
+        }
+
+    def to_wire(self) -> bytes:
+        return codec.to_wire({"event": "done", **self.to_wire_dict()})
 
     @staticmethod
     def from_wire(data: bytes) -> "DoneEvent":
-        d = codec.from_wire(data)
+        return DoneEvent.from_wire_dict(codec.from_wire(data))
+
+    @staticmethod
+    def from_wire_dict(d: Dict[str, Any]) -> "DoneEvent":
         return DoneEvent(
             assignment_id=d["assignment_id"],
             status=Status(d["status"]),
@@ -263,3 +284,38 @@ class TaskSpec:
             code=a.code,
             method=a.method,
         )
+
+    def to_wire_dict(self) -> Dict[str, Any]:
+        d: Dict[str, Any] = {
+            "task_id": self.task_id,
+            "assignment_id": self.assignment_id,
+            "client_id": self.client_id,
+            "kind": self.kind.value,
+            "iteration": self.iteration,
+            "params": self.params,
+            "method": self.method,
+        }
+        if self.code is not None:
+            d["code"] = self.code.to_wire()
+        return d
+
+    @staticmethod
+    def from_wire_dict(d: Dict[str, Any]) -> "TaskSpec":
+        return TaskSpec(
+            task_id=d["task_id"],
+            assignment_id=d["assignment_id"],
+            client_id=d["client_id"],
+            kind=AssignmentKind(d["kind"]),
+            iteration=int(d["iteration"]),
+            params=d["params"],
+            method=d["method"],
+            code=ActiveModule.from_wire(d["code"]) if "code" in d else None,
+        )
+
+
+# Fabric registrations: the typed events cross node boundaries (cloud ->
+# user sink) as tagged envelopes. Tags match the standalone event-stream
+# codec above so a mixed byte stream stays self-describing.
+codec.register_message("iteration", IterationEvent)
+codec.register_message("deploy", DeployEvent)
+codec.register_message("done", DoneEvent)

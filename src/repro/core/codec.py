@@ -7,6 +7,14 @@ and on arrival the module is re-materialized as a real ``.py`` file at a
 predefined path *tied to the user ID*:
 
     <store_root>/<user_id>/<slot>/<md5>.py
+
+This module also holds the **message-type registry**: every message that
+crosses a node boundary (``SubmitAssignment``, ``NewTask``, ``TaskDone``,
+the typed assignment events, ...) registers a tag plus encode/decode
+functions here, so a byte stream of mixed messages demultiplexes with no
+out-of-band information. ``envelope_to_wire``/``envelope_from_wire``
+wrap a registered message with its routing header — the unit a
+``Transport`` actually moves.
 """
 from __future__ import annotations
 
@@ -15,7 +23,7 @@ import hashlib
 import json
 import os
 import tempfile
-from typing import Any, Dict
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 
 def md5_of(source: str) -> str:
@@ -44,12 +52,118 @@ def from_wire(data: bytes) -> Dict[str, Any]:
 
 
 def _default(o: Any):
-    # numpy / jax scalars inside result payloads
+    # numpy / jax arrays and scalars inside result payloads: arrays
+    # (ndim >= 1) lower to nested lists, 0-d/scalars to Python numbers
+    if getattr(o, "ndim", 0) and hasattr(o, "tolist"):
+        return o.tolist()
     if hasattr(o, "item"):
         return o.item()
     if hasattr(o, "tolist"):
         return o.tolist()
     raise TypeError(f"not JSON serializable: {type(o)!r}")
+
+
+# ---------------------------------------------------------------------------
+# Message-type registry + dispatch
+# ---------------------------------------------------------------------------
+
+
+class UnknownWireTypeError(ValueError):
+    """Bytes arrived tagged with a type no codec is registered for."""
+
+
+class UnregisteredMessageError(TypeError):
+    """An object with no registered wire codec was asked to cross a node
+    boundary — the bug the in-proc transport exists to surface."""
+
+
+_ENCODERS: Dict[type, Tuple[str, Callable[[Any], Dict[str, Any]]]] = {}
+_DECODERS: Dict[str, Callable[[Dict[str, Any]], Any]] = {}
+_TAG_CLASSES: Dict[str, type] = {}
+
+
+def register_message(tag: str, cls: type,
+                     encode: Optional[Callable[[Any], Dict[str, Any]]] = None,
+                     decode: Optional[Callable[[Dict[str, Any]], Any]] = None,
+                     ) -> None:
+    """Register a message class under a wire tag.
+
+    ``encode`` (msg -> JSON-able dict) defaults to the class's
+    ``to_wire_dict`` method; ``decode`` (dict -> msg) to its
+    ``from_wire_dict``. Tags are a flat global namespace: registering the
+    same tag twice is an error unless it maps to the same logical class
+    — compared by module + qualname, so re-executing a module's
+    registrations (importlib.reload, src-layout vs installed import)
+    is tolerated while a genuine tag collision still fails loudly.
+    """
+    prev = _TAG_CLASSES.get(tag)
+    if prev is not None and (prev.__module__, prev.__qualname__) != \
+            (cls.__module__, cls.__qualname__):
+        raise ValueError(
+            f"wire tag {tag!r} already registered for "
+            f"{prev.__module__}.{prev.__qualname__}")
+    if encode is None:
+        encode = lambda m: m.to_wire_dict()  # noqa: E731
+    if decode is None:
+        decode = cls.from_wire_dict
+    _ENCODERS[cls] = (tag, encode)
+    _DECODERS[tag] = decode
+    _TAG_CLASSES[tag] = cls
+
+
+def registered_message_tags() -> List[str]:
+    return sorted(_DECODERS)
+
+
+def wire_tag_of(msg: Any) -> str:
+    entry = _ENCODERS.get(type(msg))
+    if entry is None:
+        raise UnregisteredMessageError(
+            f"no wire codec registered for {type(msg).__name__}; every "
+            f"inter-node message must register via codec.register_message")
+    return entry[0]
+
+
+def message_to_wire_dict(msg: Any) -> Dict[str, Any]:
+    """Encode one registered message as a tagged JSON-able dict."""
+    entry = _ENCODERS.get(type(msg))
+    if entry is None:
+        raise UnregisteredMessageError(
+            f"no wire codec registered for {type(msg).__name__}; every "
+            f"inter-node message must register via codec.register_message")
+    tag, encode = entry
+    return {"type": tag, "data": encode(msg)}
+
+
+def message_from_wire_dict(d: Dict[str, Any]) -> Any:
+    tag = d.get("type")
+    decode = _DECODERS.get(tag)
+    if decode is None:
+        raise UnknownWireTypeError(f"unknown message type on the wire: {tag!r}")
+    return decode(d["data"])
+
+
+def message_to_wire(msg: Any) -> bytes:
+    return to_wire(message_to_wire_dict(msg))
+
+
+def message_from_wire(data: bytes) -> Any:
+    return message_from_wire_dict(from_wire(data))
+
+
+def envelope_to_wire(to: str, sender: Optional[str], msg: Any) -> bytes:
+    """The routed unit a Transport moves: destination actor (node-local
+    name), sender address, and the tagged message payload."""
+    d = message_to_wire_dict(msg)
+    d["to"] = to
+    d["sender"] = sender
+    return to_wire(d)
+
+
+def envelope_from_wire(data: bytes) -> Tuple[str, Optional[str], Any]:
+    """Returns (to, sender, decoded message)."""
+    d = from_wire(data)
+    return d["to"], d.get("sender"), message_from_wire_dict(d)
 
 
 def module_path(store_root: str, user_id: str, slot: str, md5: str) -> str:

@@ -31,6 +31,27 @@ class TaggedResult:
     payload: Any = None
     compute_ms: float = 0.0
 
+    def to_wire_dict(self) -> Dict[str, Any]:
+        # payload must be JSON-able; numpy scalars/arrays are lowered by
+        # the codec's default hook (item()/tolist()) at encode time
+        return {
+            "client_id": self.client_id,
+            "iteration": self.iteration,
+            "code_md5": self.code_md5,
+            "payload": self.payload,
+            "compute_ms": self.compute_ms,
+        }
+
+    @staticmethod
+    def from_wire_dict(d: Dict[str, Any]) -> "TaggedResult":
+        return TaggedResult(
+            client_id=d["client_id"],
+            iteration=int(d["iteration"]),
+            code_md5=d["code_md5"],
+            payload=d["payload"],
+            compute_ms=float(d["compute_ms"]),
+        )
+
 
 @dataclass(frozen=True)
 class FilterOutcome:

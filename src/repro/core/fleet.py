@@ -18,6 +18,10 @@ Figure 1 of the paper, reproduced:
 * Clients re-resolve the custom module **every iteration** (paper's
   reload-per-iteration), so a mid-assignment deploy takes effect on the
   next iteration without any restart.
+* User, cloud, and client nodes are separate ``transport.Node``s: every
+  message between them crosses the wire codec as bytes — over an
+  in-process loopback hub by default, or real TCP to spawned client
+  processes (``Fleet.create(..., topology="tcp")``).
 """
 from __future__ import annotations
 
@@ -30,7 +34,8 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.actors import Actor, ActorSystem, Down
+from repro.core import codec
+from repro.core.actors import Actor, Down
 from repro.core.assignment import (
     AssignmentEvent,
     AssignmentKind,
@@ -41,7 +46,6 @@ from repro.core.assignment import (
     Status,
     Target,
     TaskSpec,
-    event_from_wire,
 )
 from repro.core.consistency import (
     FilterOutcome,
@@ -51,17 +55,34 @@ from repro.core.consistency import (
 )
 from repro.core.module import ActiveModule
 from repro.core.registry import ActiveCodeRegistry
+from repro.core.transport import (
+    InProcHub,
+    InProcTransport,
+    Node,
+    make_addr,
+)
 from repro.core.validation import SlotSpec, ValidationError
 
 # ---------------------------------------------------------------------------
-# Messages
+# Messages — every one of these crosses a node boundary, so every one has
+# a registered to_wire/from_wire codec (see the registrations at the end
+# of this block). Actor references in messages are *addresses*
+# ("actor@node"), never object handles.
 # ---------------------------------------------------------------------------
 
 
 @dataclass(frozen=True)
 class SubmitAssignment:
     spec: AssignmentSpec
-    reply_to: "queue.Queue[Any]"
+    reply_to: str          # address of the submitting handle's sink actor
+
+    def to_wire_dict(self) -> Dict[str, Any]:
+        return {"spec": self.spec.to_wire_dict(), "reply_to": self.reply_to}
+
+    @staticmethod
+    def from_wire_dict(d: Dict[str, Any]) -> "SubmitAssignment":
+        return SubmitAssignment(AssignmentSpec.from_wire_dict(d["spec"]),
+                                d["reply_to"])
 
 
 @dataclass(frozen=True)
@@ -71,11 +92,25 @@ class CancelAssignment:
 
     assignment_id: str
 
+    def to_wire_dict(self) -> Dict[str, Any]:
+        return {"assignment_id": self.assignment_id}
+
+    @staticmethod
+    def from_wire_dict(d: Dict[str, Any]) -> "CancelAssignment":
+        return CancelAssignment(d["assignment_id"])
+
 
 @dataclass(frozen=True)
 class NewTask:
     task: TaskSpec
-    handler: str           # assignment-handler actor name
+    handler: str           # assignment-handler address ("actor@node")
+
+    def to_wire_dict(self) -> Dict[str, Any]:
+        return {"task": self.task.to_wire_dict(), "handler": self.handler}
+
+    @staticmethod
+    def from_wire_dict(d: Dict[str, Any]) -> "NewTask":
+        return NewTask(TaskSpec.from_wire_dict(d["task"]), d["handler"])
 
 
 @dataclass(frozen=True)
@@ -84,10 +119,68 @@ class TaskDone:
     result: TaggedResult
     error: Optional[str] = None
 
+    def to_wire_dict(self) -> Dict[str, Any]:
+        return {"task": self.task.to_wire_dict(),
+                "result": self.result.to_wire_dict(),
+                "error": self.error}
+
+    @staticmethod
+    def from_wire_dict(d: Dict[str, Any]) -> "TaskDone":
+        return TaskDone(TaskSpec.from_wire_dict(d["task"]),
+                        TaggedResult.from_wire_dict(d["result"]),
+                        d.get("error"))
+
 
 @dataclass(frozen=True)
 class Deadline:
     iteration: int
+
+    def to_wire_dict(self) -> Dict[str, Any]:
+        return {"iteration": self.iteration}
+
+    @staticmethod
+    def from_wire_dict(d: Dict[str, Any]) -> "Deadline":
+        return Deadline(int(d["iteration"]))
+
+
+@dataclass(frozen=True)
+class RegisterClient:
+    """A client node announcing itself to the cloud (the TCP topology's
+    join handshake; carries the endpoint the cloud should dial back)."""
+
+    client_id: str
+    node_id: str
+    endpoint: Optional[str] = None   # "host:port"; None for in-proc hubs
+
+    def to_wire_dict(self) -> Dict[str, Any]:
+        return {"client_id": self.client_id, "node_id": self.node_id,
+                "endpoint": self.endpoint}
+
+    @staticmethod
+    def from_wire_dict(d: Dict[str, Any]) -> "RegisterClient":
+        return RegisterClient(d["client_id"], d["node_id"], d.get("endpoint"))
+
+
+@dataclass(frozen=True)
+class StopNode:
+    """Fleet shutdown: tells a (possibly remote) client node to stop its
+    process cleanly."""
+
+    def to_wire_dict(self) -> Dict[str, Any]:
+        return {}
+
+    @staticmethod
+    def from_wire_dict(d: Dict[str, Any]) -> "StopNode":
+        return StopNode()
+
+
+codec.register_message("submit_assignment", SubmitAssignment)
+codec.register_message("cancel_assignment", CancelAssignment)
+codec.register_message("new_task", NewTask)
+codec.register_message("task_done", TaskDone)
+codec.register_message("deadline", Deadline)
+codec.register_message("register_client", RegisterClient)
+codec.register_message("stop_node", StopNode)
 
 
 # ---------------------------------------------------------------------------
@@ -236,11 +329,17 @@ class TaskHandler(Actor):
 
 
 class ClientNode(Actor):
-    """Permanent per-client Erlang node (OODIDA's x, y, z)."""
+    """Permanent per-client client-node actor (OODIDA's x, y, z).
 
-    def __init__(self, name: str, app: ClientApp):
+    ``stop_event`` is set when a ``StopNode`` arrives — the hook the
+    multi-process launcher's child main blocks on.
+    """
+
+    def __init__(self, name: str, app: ClientApp,
+                 stop_event: Optional[threading.Event] = None):
         super().__init__(name)
         self.app = app
+        self.stop_event = stop_event
         self._task_seq = 0
 
     def handle(self, sender, msg) -> None:
@@ -250,6 +349,10 @@ class ClientNode(Actor):
             assert self._system is not None
             self._system.spawn(TaskHandler(handler_name, self.app, msg.task,
                                            msg.handler))
+        elif isinstance(msg, StopNode):
+            if self.stop_event is not None:
+                self.stop_event.set()
+            self.stop()
 
 
 class AssignmentHandler(Actor):
@@ -304,17 +407,24 @@ class AssignmentHandler(Actor):
         self.collector = IterationCollector(
             iteration=self.iteration, n_clients=len(targets),
             policy=self.policy)
+        # clients reply across the fabric: hand them our full address
+        assert self._system is not None
+        reply_to = (self._system.node.address(self.name)
+                    if self._system.node is not None else self.name)
         for cid in targets:
             task = TaskSpec.for_client(self.spec, cid, self.iteration)
-            self.send(self.client_nodes[cid], NewTask(task, self.name))
+            self.send(self.client_nodes[cid], NewTask(task, reply_to))
 
     def _arm_deadline(self) -> None:
         if self._timer is None:
             it = self.iteration
             sys_ = self._system
-            name = self.name
+            # qualified self-address: the Deadline crosses the wire codec
+            # (loopback), the same discipline as every fabric message
+            addr = (sys_.node.address(self.name) if sys_.node is not None
+                    else self.name)
             self._timer = threading.Timer(
-                self.grace, lambda: sys_.send(name, Deadline(it)))
+                self.grace, lambda: sys_.send(addr, Deadline(it)))
             self._timer.daemon = True
             self._timer.start()
 
@@ -404,8 +514,12 @@ class AssignmentHandler(Actor):
 
 class CloudNode(Actor):
     """Permanent central node (OODIDA's b). Routes user assignments to
-    fresh AssignmentHandlers and streams typed events back to the
-    per-assignment handle queues.
+    fresh AssignmentHandlers and streams typed events back over the
+    fabric to the per-assignment sink actors on the user's node.
+
+    ``client_nodes`` maps client_id -> client-node *address*; it can be
+    pre-populated (in-proc topology) or filled dynamically by
+    ``RegisterClient`` handshakes (spawned-process TCP topology).
 
     ``max_concurrent_assignments`` is the backpressure knob: beyond it,
     submissions queue FIFO inside the cloud node and are admitted as
@@ -417,35 +531,42 @@ class CloudNode(Actor):
                  cloud_app: CloudApp, policy: QuorumPolicy,
                  max_concurrent_assignments: Optional[int] = None):
         super().__init__(name)
-        self.client_nodes = client_nodes
+        self.client_nodes = dict(client_nodes)
         self.cloud_app = cloud_app
         self.policy = policy
         self.max_concurrent = max_concurrent_assignments
-        self._user_queues: Dict[str, "queue.Queue[Any]"] = {}
+        self._user_sinks: Dict[str, str] = {}            # asg id -> address
         self._handler_seq = 0
         self._handler_assignments: Dict[str, str] = {}   # actor -> asg id
         self._assignment_handlers: Dict[str, str] = {}   # asg id -> actor
         self._pending: "deque[SubmitAssignment]" = deque()
 
     # -- helpers ----------------------------------------------------------------
+    @property
+    def n_clients(self) -> int:
+        """Registered-client count (read by launchers polling readiness;
+        a plain len() is safe to read from other threads)."""
+        return len(self.client_nodes)
+
     def _emit(self, ev: AssignmentEvent) -> None:
-        """Round-trip the event through the wire codec (bytes in, bytes
-        out — same discipline as assignment submission), then hand it to
-        the owning handle's queue."""
-        q = self._user_queues.get(ev.assignment_id)
-        if q is None:
+        """Send the event over the fabric to the owning handle's sink
+        actor (bytes in, bytes out — the transport enforces the codec)."""
+        sink = self._user_sinks.get(ev.assignment_id)
+        if sink is None:
             return
-        q.put(event_from_wire(ev.to_wire()))
+        self.send(sink, ev)
         if isinstance(ev, DoneEvent):
-            self._user_queues.pop(ev.assignment_id, None)
+            self._user_sinks.pop(ev.assignment_id, None)
 
     def _spawn_handler(self, msg: SubmitAssignment) -> None:
         spec = msg.spec
-        self._user_queues[spec.assignment_id] = msg.reply_to
         self._handler_seq += 1
         name = f"{self.name}.asg{self._handler_seq}"
+        # snapshot: the assignment's target set is fixed at admission, and
+        # the handler thread must not iterate a dict a later
+        # RegisterClient (cloud thread) could resize under it
         handler = AssignmentHandler(
-            name, spec, self.client_nodes, self.cloud_app, self.name,
+            name, spec, dict(self.client_nodes), self.cloud_app, self.name,
             self.policy,
             straggler_grace_s=float(spec.params.get("straggler_grace_s",
                                                     0.25)))
@@ -464,11 +585,21 @@ class CloudNode(Actor):
     # -- message loop -------------------------------------------------------------
     def handle(self, sender, msg) -> None:
         if isinstance(msg, SubmitAssignment):
+            self._user_sinks[msg.spec.assignment_id] = msg.reply_to
             if (self.max_concurrent is not None
                     and len(self._handler_assignments) >= self.max_concurrent):
                 self._pending.append(msg)
             else:
                 self._spawn_handler(msg)
+        elif isinstance(msg, RegisterClient):
+            # TCP join handshake: learn how to dial the client back, then
+            # make it targetable by assignments
+            if msg.endpoint and self._system is not None \
+                    and self._system.node is not None:
+                self._system.node.transport.add_peer(msg.node_id,
+                                                     msg.endpoint)
+            self.client_nodes[msg.client_id] = make_addr(
+                f"client.{msg.client_id}", msg.node_id)
         elif isinstance(msg, CancelAssignment):
             handler = self._assignment_handlers.get(msg.assignment_id)
             if handler is not None:
@@ -478,7 +609,6 @@ class CloudNode(Actor):
             for pend in list(self._pending):
                 if pend.spec.assignment_id == msg.assignment_id:
                     self._pending.remove(pend)
-                    self._user_queues[msg.assignment_id] = pend.reply_to
                     self._emit(DoneEvent(msg.assignment_id, Status.CANCELLED,
                                          detail="cancelled while queued"))
                     break
@@ -488,7 +618,7 @@ class CloudNode(Actor):
             asg = self._handler_assignments.pop(msg.actor, None)
             if asg is not None:
                 self._assignment_handlers.pop(asg, None)
-                if msg.reason is not None and asg in self._user_queues:
+                if msg.reason is not None and asg in self._user_sinks:
                     # handler crashed before its DoneEvent: fail the handle
                     self._emit(DoneEvent(
                         asg, Status.FAILED,
@@ -499,6 +629,22 @@ class CloudNode(Actor):
 # ---------------------------------------------------------------------------
 # Assignment handles: the unified control-plane surface
 # ---------------------------------------------------------------------------
+
+
+class HandleSink(Actor):
+    """Terminal of one assignment's event stream on the *user's* node:
+    absorbs wire-decoded events into the handle's local queue, stops on
+    the terminal DoneEvent (OODIDA's f-side temporary)."""
+
+    def __init__(self, name: str, out: "queue.Queue[AssignmentEvent]"):
+        super().__init__(name)
+        self.out = out
+
+    def handle(self, sender, msg) -> None:
+        if isinstance(msg, (IterationEvent, DeployEvent, DoneEvent)):
+            self.out.put(msg)
+            if isinstance(msg, DoneEvent):
+                self.stop()
 
 
 class AssignmentHandle:
@@ -517,10 +663,10 @@ class AssignmentHandle:
     replays them first, so a handle can be iterated more than once.
     """
 
-    def __init__(self, spec: AssignmentSpec, system: ActorSystem, cloud: str):
+    def __init__(self, spec: AssignmentSpec, node: Node, cloud: str):
         self.spec = spec
-        self.system = system
-        self.cloud = cloud
+        self.node = node
+        self.cloud = cloud             # cloud actor address ("cloud@node")
         self.history: List[AssignmentEvent] = []
         self._queue: "queue.Queue[AssignmentEvent]" = queue.Queue()
         self._done: Optional[DoneEvent] = None
@@ -594,7 +740,7 @@ class AssignmentHandle:
     def cancel(self) -> None:
         """Request clean mid-iteration termination; the terminal
         ``DoneEvent`` (status CANCELLED) arrives on the stream."""
-        self.system.send(self.cloud, CancelAssignment(self.assignment_id))
+        self.node.route(self.cloud, CancelAssignment(self.assignment_id))
 
 
 class Deployment(AssignmentHandle):
@@ -605,10 +751,10 @@ class Deployment(AssignmentHandle):
     previous registry version fleet-wide and returns the new
     ``Deployment`` — iterative A/B testing as a two-call workflow."""
 
-    def __init__(self, spec: AssignmentSpec, system: ActorSystem, cloud: str,
+    def __init__(self, spec: AssignmentSpec, node: Node, cloud: str,
                  *, frontend: "UserFrontend", module: ActiveModule,
                  client_ids: Tuple[str, ...] = ()):
-        super().__init__(spec, system, cloud)
+        super().__init__(spec, node, cloud)
         self.frontend = frontend
         self.module = module
         self.client_ids = client_ids
@@ -642,13 +788,18 @@ class Deployment(AssignmentHandle):
 
 class UserFrontend:
     """The analyst's Python library (OODIDA's f): validates code before
-    ingestion, submits assignments, returns handles."""
+    ingestion, submits assignments over the fabric, returns handles.
 
-    def __init__(self, user_id: str, system: ActorSystem, cloud: str,
+    Lives on the *user node*; every submission spawns a per-assignment
+    ``HandleSink`` there and ships a ``SubmitAssignment`` to the cloud
+    address as bytes.
+    """
+
+    def __init__(self, user_id: str, node: Node, cloud: str,
                  slot_specs: Sequence[SlotSpec] = ()):
         self.user_id = user_id
-        self.system = system
-        self.cloud = cloud
+        self.node = node
+        self.cloud = cloud             # cloud actor address ("cloud@node")
         self._frontend_registry = ActiveCodeRegistry()  # for validation only
         for s in slot_specs:
             self._frontend_registry.declare_slot(s)
@@ -670,15 +821,20 @@ class UserFrontend:
         return self._ship_module(prev, deployment.target,
                                  deployment.client_ids)
 
+    def _submit(self, spec: AssignmentSpec, handle: AssignmentHandle) -> None:
+        sink = HandleSink(f"sink.{spec.assignment_id}", handle._queue)
+        self.node.spawn(sink)
+        self.node.route(self.cloud, SubmitAssignment(
+            spec, self.node.address(sink.name)))
+
     def _ship_module(self, mod: ActiveModule, target: Target,
                      client_ids: Tuple[str, ...]) -> Deployment:
         spec = AssignmentSpec.new(
             self.user_id, AssignmentKind.CODE_REPLACEMENT, target,
             client_ids=client_ids, code=mod, method=mod.slot)
-        spec = AssignmentSpec.from_wire(spec.to_wire())
-        handle = Deployment(spec, self.system, self.cloud, frontend=self,
+        handle = Deployment(spec, self.node, self.cloud, frontend=self,
                             module=mod, client_ids=client_ids)
-        self.system.send(self.cloud, SubmitAssignment(spec, handle._queue))
+        self._submit(spec, handle)
         return handle
 
     # -- analytics assignments --------------------------------------------------
@@ -692,33 +848,66 @@ class UserFrontend:
             self.user_id, AssignmentKind.ANALYTICS, Target.CLIENTS,
             client_ids=client_ids, iterations=iterations, params=p,
             method=method)
-        # exercise the wire codec on every submission (bytes in, bytes out)
-        spec = AssignmentSpec.from_wire(spec.to_wire())
-        handle = AssignmentHandle(spec, self.system, self.cloud)
-        self.system.send(self.cloud, SubmitAssignment(spec, handle._queue))
+        handle = AssignmentHandle(spec, self.node, self.cloud)
+        self._submit(spec, handle)
         return handle
 
 
 @dataclass
 class Fleet:
-    """A simulated OODIDA deployment: one cloud + n clients."""
+    """An OODIDA deployment: one user node + one cloud node + n client
+    nodes, every pair connected only by a byte-moving transport.
 
-    system: ActorSystem
-    cloud_name: str
-    cloud_app: CloudApp
+    Topologies (``Fleet.create(..., topology=...)``):
+
+    * ``"inproc"`` (default) — every node lives in this process on an
+      ``InProcHub``; messages still encode/decode, so the codec layer is
+      exercised end to end;
+    * ``"tcp"`` — each client node is a **spawned child process** talking
+      length-prefixed frames over TCP (see ``repro.launch.fleet_proc``);
+      ``client_apps`` is empty in that topology (client state is remote,
+      exactly like production).
+    """
+
+    user_node: Node
+    cloud_node: Node
+    cloud_addr: str                    # cloud actor address ("cloud@cloud")
+    cloud_app: Optional[CloudApp]
     client_apps: Dict[str, ClientApp]
+    client_nodes: List[Node] = field(default_factory=list)
+    client_addrs: Dict[str, str] = field(default_factory=dict)
+    hub: Optional[InProcHub] = None
+    procs: List[Any] = field(default_factory=list)   # child processes (tcp)
+    topology: str = "inproc"
 
     @staticmethod
-    def create(n_clients: int, *, seed: int = 0,
+    def create(n_clients: int, *, topology: str = "inproc", seed: int = 0,
                policy: Optional[QuorumPolicy] = None,
                slot_specs: Sequence[SlotSpec] = (),
                data_per_client: int = 4096,
                delay_fns: Optional[Dict[str, Callable]] = None,
                store_root: Optional[str] = None,
                max_concurrent_assignments: Optional[int] = None) -> "Fleet":
+        if topology == "tcp":
+            if slot_specs or delay_fns:
+                raise ValueError(
+                    "tcp topology spawns client processes; slot_specs and "
+                    "delay_fns hold callables that cannot cross a process "
+                    "boundary — configure clients via fleet_proc instead")
+            from repro.launch.fleet_proc import spawn_tcp_fleet
+            return spawn_tcp_fleet(
+                n_clients, seed=seed, policy=policy,
+                data_per_client=data_per_client, store_root=store_root,
+                max_concurrent_assignments=max_concurrent_assignments)
+        if topology != "inproc":
+            raise ValueError(f"unknown topology {topology!r}")
+
         rng = np.random.default_rng(seed)
-        system = ActorSystem()
-        client_nodes: Dict[str, str] = {}
+        hub = InProcHub()
+        user_node = Node("user", InProcTransport(hub))
+        cloud_node = Node("cloud", InProcTransport(hub))
+        client_nodes: List[Node] = []
+        client_addrs: Dict[str, str] = {}
         client_apps: Dict[str, ClientApp] = {}
         for i in range(n_clients):
             cid = f"c{i:03d}"
@@ -732,25 +921,42 @@ class Fleet:
                 registry=reg,
                 delay_fn=(delay_fns or {}).get(cid),
             )
-            node = ClientNode(f"client.{cid}", app)
-            system.spawn(node)
-            client_nodes[cid] = node.name
+            cnode = Node(cid, InProcTransport(hub))
+            actor = ClientNode(f"client.{cid}", app)
+            cnode.spawn(actor)
+            client_nodes.append(cnode)
+            client_addrs[cid] = cnode.address(actor.name)
             client_apps[cid] = app
         cloud_reg = ActiveCodeRegistry(
             store_root=f"{store_root}/cloud" if store_root else None)
         for s in slot_specs:
             cloud_reg.declare_slot(s)
         cloud_app = CloudApp(cloud_reg)
-        cloud = CloudNode("cloud", client_nodes, cloud_app,
+        cloud = CloudNode("cloud", client_addrs, cloud_app,
                           policy or QuorumPolicy(),
                           max_concurrent_assignments=max_concurrent_assignments)
-        system.spawn(cloud)
-        return Fleet(system=system, cloud_name=cloud.name,
-                     cloud_app=cloud_app, client_apps=client_apps)
+        cloud_node.spawn(cloud)
+        return Fleet(user_node=user_node, cloud_node=cloud_node,
+                     cloud_addr=cloud_node.address(cloud.name),
+                     cloud_app=cloud_app, client_apps=client_apps,
+                     client_nodes=client_nodes, client_addrs=client_addrs,
+                     hub=hub, topology="inproc")
 
     def frontend(self, user_id: str,
                  slot_specs: Sequence[SlotSpec] = ()) -> UserFrontend:
-        return UserFrontend(user_id, self.system, self.cloud_name, slot_specs)
+        return UserFrontend(user_id, self.user_node, self.cloud_addr,
+                            slot_specs)
 
-    def shutdown(self) -> None:
-        self.system.shutdown()
+    def shutdown(self, timeout: float = 5.0) -> None:
+        # stop remote/child client nodes first (the cloud's transport
+        # knows how to reach them), then the in-process node graph
+        for cid, addr in self.client_addrs.items():
+            self.cloud_node.route(addr, StopNode())
+        for p in self.procs:
+            p.join(timeout=timeout)
+            if p.is_alive():
+                p.terminate()
+        for n in self.client_nodes:
+            n.close(timeout)
+        self.cloud_node.close(timeout)
+        self.user_node.close(timeout)

@@ -142,8 +142,22 @@ class ActiveCodeRegistry:
         """Target-side path: install a module that arrived over the wire.
 
         Clients re-run validation (defense in depth); version numbers come
-        from the sender so A/B comparisons line up across the fleet.
+        from the sender so A/B comparisons line up across the fleet. The
+        sender-supplied hashes are re-derived from the received source
+        first — a module tampered with in transit (or a buggy codec) is
+        rejected before any code is compiled or stored (the paper's
+        signature check on arrival).
         """
+        got_md5 = codec.md5_of(mod.source)
+        if got_md5 != mod.md5:
+            raise ValidationError([
+                f"integrity check failed for {mod.user_id}/{mod.slot} "
+                f"v{mod.version}: announced md5 {mod.md5} but received "
+                f"source hashes to {got_md5}"])
+        if codec.sha256_of(mod.source) != mod.sha256:
+            raise ValidationError([
+                f"integrity check failed for {mod.user_id}/{mod.slot} "
+                f"v{mod.version}: sha256 mismatch on arrival"])
         with self._lock:
             key = (mod.user_id, mod.slot)
             spec = self._slot_specs.get(mod.slot) if validate else None

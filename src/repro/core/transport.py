@@ -1,0 +1,388 @@
+"""The pluggable wire-transport fabric under the OODIDA node graph.
+
+OODIDA's process tree is distributed Erlang: every message between the
+cloud node (b) and a client node (x, y, z) crosses a real network as
+encoded bytes. This module makes our reproduction honest about that
+boundary:
+
+* ``Transport`` — moves opaque byte frames between named nodes;
+* ``InProcTransport`` — loopback over a shared in-process hub. Zero-copy
+  fast path (the encoded ``bytes`` object is handed to the receiver
+  as-is, no socket, no memcpy) but the envelope codec still runs on
+  both sides, so a message that cannot survive serialization fails in
+  unit tests, not in production;
+* ``TcpTransport`` — length-prefixed frames over TCP sockets with
+  cached outbound connections and reconnect-on-drop;
+* ``Node`` — one addressable OODIDA node: an ``ActorSystem`` bound to a
+  transport. Actors address remote peers as ``"actor@node"``.
+
+Routing rule: a plain actor name is a same-node send (mailbox reference,
+like an Erlang local send); an ``@``-qualified address **always** goes
+through ``codec.envelope_to_wire``/``envelope_from_wire`` — even when
+the destination is this very node (the deadline-timer loopback path) —
+so every inter-node message is exercised as bytes on every topology.
+"""
+from __future__ import annotations
+
+import socket
+import struct
+import threading
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.core import codec
+from repro.core.actors import ActorSystem, Envelope
+
+# ---------------------------------------------------------------------------
+# Addresses
+# ---------------------------------------------------------------------------
+
+
+def make_addr(actor: str, node_id: str) -> str:
+    return f"{actor}@{node_id}"
+
+
+def split_addr(addr: str) -> Tuple[str, Optional[str]]:
+    """``"actor@node"`` -> (actor, node); plain names -> (name, None)."""
+    if "@" in addr:
+        name, _, node_id = addr.rpartition("@")
+        return name, node_id
+    return addr, None
+
+
+class TransportError(RuntimeError):
+    """A frame could not be moved (unknown peer, connection exhausted)."""
+
+
+# ---------------------------------------------------------------------------
+# Transport interface
+# ---------------------------------------------------------------------------
+
+
+class Transport:
+    """Moves opaque byte frames between named nodes.
+
+    One transport instance serves exactly one node (mirroring one
+    Erlang distribution port per node). ``start`` binds the node and its
+    delivery callback; ``send`` moves a frame to a peer node.
+    """
+
+    def start(self, node_id: str, deliver: Callable[[bytes], None]) -> None:
+        raise NotImplementedError
+
+    def send(self, dest_node: str, data: bytes) -> None:
+        raise NotImplementedError
+
+    @property
+    def endpoint(self) -> Optional[str]:
+        """Dialable address of this node ("host:port"), None if not dialable."""
+        return None
+
+    def add_peer(self, node_id: str, endpoint: str) -> None:
+        """Teach the transport where a peer listens (TCP only; no-op here)."""
+
+    def close(self) -> None:
+        pass
+
+
+# ---------------------------------------------------------------------------
+# In-process loopback
+# ---------------------------------------------------------------------------
+
+
+class InProcHub:
+    """The shared 'network' connecting InProcTransports in one process."""
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._nodes: Dict[str, Callable[[bytes], None]] = {}
+        self.dropped: List[Tuple[str, bytes]] = []   # frames to unknown nodes
+
+    def attach(self, node_id: str, deliver: Callable[[bytes], None]) -> None:
+        with self._lock:
+            if node_id in self._nodes:
+                raise ValueError(f"node {node_id!r} already on this hub")
+            self._nodes[node_id] = deliver
+
+    def detach(self, node_id: str) -> None:
+        with self._lock:
+            self._nodes.pop(node_id, None)
+
+    def send(self, dest_node: str, data: bytes) -> None:
+        with self._lock:
+            deliver = self._nodes.get(dest_node)
+        if deliver is None:
+            with self._lock:
+                self.dropped.append((dest_node, data))
+            return
+        deliver(data)
+
+
+class InProcTransport(Transport):
+    """Loopback transport over an ``InProcHub``.
+
+    The receiver gets the sender's encoded ``bytes`` object directly
+    (zero-copy), but encode/decode still runs end to end — the point is
+    that serialization bugs cannot hide in a single-process topology.
+    """
+
+    def __init__(self, hub: InProcHub):
+        self.hub = hub
+        self.node_id: Optional[str] = None
+
+    def start(self, node_id: str, deliver: Callable[[bytes], None]) -> None:
+        self.node_id = node_id
+        self.hub.attach(node_id, deliver)
+
+    def send(self, dest_node: str, data: bytes) -> None:
+        self.hub.send(dest_node, data)
+
+    def close(self) -> None:
+        if self.node_id is not None:
+            self.hub.detach(self.node_id)
+            self.node_id = None
+
+
+# ---------------------------------------------------------------------------
+# TCP
+# ---------------------------------------------------------------------------
+
+_FRAME = struct.Struct(">I")          # 4-byte big-endian payload length
+MAX_FRAME_BYTES = 64 * 1024 * 1024   # sanity bound on a single message
+
+
+def _recv_exact(sock: socket.socket, n: int) -> Optional[bytes]:
+    buf = bytearray()
+    while len(buf) < n:
+        chunk = sock.recv(n - len(buf))
+        if not chunk:
+            return None
+        buf.extend(chunk)
+    return bytes(buf)
+
+
+class TcpTransport(Transport):
+    """Length-prefixed frames over TCP, one listener per node.
+
+    * outbound connections are cached per peer and serialized by a
+      per-peer lock (frames from one node arrive in send order);
+    * on a send error the connection is re-established with bounded
+      retries/backoff and the frame is re-sent (reconnect-on-drop);
+    * inbound: an accept loop plus one reader thread per connection.
+    """
+
+    def __init__(self, host: str = "127.0.0.1", port: int = 0, *,
+                 reconnect_attempts: int = 20,
+                 reconnect_delay_s: float = 0.05,
+                 connect_timeout_s: float = 5.0):
+        self._host = host
+        self._requested_port = port
+        self._reconnect_attempts = reconnect_attempts
+        self._reconnect_delay_s = reconnect_delay_s
+        self._connect_timeout_s = connect_timeout_s
+        self._deliver: Optional[Callable[[bytes], None]] = None
+        self._server: Optional[socket.socket] = None
+        self._port: Optional[int] = None
+        self._peers: Dict[str, Tuple[str, int]] = {}
+        self._conns: Dict[str, socket.socket] = {}
+        self._send_locks: Dict[str, threading.Lock] = {}
+        self._lock = threading.Lock()
+        self._closed = False
+        self.node_id: Optional[str] = None
+
+    # -- lifecycle ----------------------------------------------------------
+    def start(self, node_id: str, deliver: Callable[[bytes], None]) -> None:
+        self.node_id = node_id
+        self._deliver = deliver
+        self._server = socket.create_server((self._host, self._requested_port))
+        self._port = self._server.getsockname()[1]
+        t = threading.Thread(target=self._accept_loop,
+                             name=f"tcp-accept:{node_id}", daemon=True)
+        t.start()
+
+    @property
+    def endpoint(self) -> Optional[str]:
+        if self._port is None:
+            return None
+        return f"{self._host}:{self._port}"
+
+    def add_peer(self, node_id: str, endpoint: str) -> None:
+        host, _, port = endpoint.rpartition(":")
+        with self._lock:
+            self._peers[node_id] = (host, int(port))
+            self._send_locks.setdefault(node_id, threading.Lock())
+
+    # -- inbound ------------------------------------------------------------
+    def _accept_loop(self) -> None:
+        assert self._server is not None
+        while not self._closed:
+            try:
+                conn, _ = self._server.accept()
+            except OSError:
+                return                 # listener closed
+            threading.Thread(target=self._read_loop, args=(conn,),
+                             name=f"tcp-read:{self.node_id}",
+                             daemon=True).start()
+
+    def _read_loop(self, conn: socket.socket) -> None:
+        try:
+            while not self._closed:
+                header = _recv_exact(conn, _FRAME.size)
+                if header is None:
+                    return
+                (length,) = _FRAME.unpack(header)
+                if length > MAX_FRAME_BYTES:
+                    return             # corrupted stream: drop the connection
+                payload = _recv_exact(conn, length)
+                if payload is None:
+                    return
+                assert self._deliver is not None
+                self._deliver(payload)
+        except OSError:
+            return
+        finally:
+            try:
+                conn.close()
+            except OSError:
+                pass
+
+    # -- outbound -----------------------------------------------------------
+    def _connect(self, dest_node: str) -> socket.socket:
+        with self._lock:
+            peer = self._peers.get(dest_node)
+        if peer is None:
+            raise TransportError(
+                f"{self.node_id}: no endpoint known for node {dest_node!r}")
+        last: Optional[Exception] = None
+        for attempt in range(self._reconnect_attempts):
+            if self._closed:
+                raise TransportError(f"{self.node_id}: transport closed")
+            try:
+                sock = socket.create_connection(
+                    peer, timeout=self._connect_timeout_s)
+                sock.settimeout(None)
+                sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+                return sock
+            except OSError as e:
+                last = e
+                time.sleep(self._reconnect_delay_s * (1 + attempt))
+        raise TransportError(
+            f"{self.node_id}: cannot connect to {dest_node!r} at "
+            f"{peer[0]}:{peer[1]} after {self._reconnect_attempts} "
+            f"attempts: {last}")
+
+    def send(self, dest_node: str, data: bytes) -> None:
+        if self._closed:
+            raise TransportError(f"{self.node_id}: transport closed")
+        frame = _FRAME.pack(len(data)) + data
+        with self._lock:
+            lock = self._send_locks.setdefault(dest_node, threading.Lock())
+        with lock:
+            sock = self._conns.get(dest_node)
+            if sock is not None:
+                try:
+                    sock.sendall(frame)
+                    return
+                except OSError:
+                    try:
+                        sock.close()
+                    except OSError:
+                        pass
+                    self._conns.pop(dest_node, None)
+            # no live connection (first send, or the drop path): redial
+            sock = self._connect(dest_node)
+            self._conns[dest_node] = sock
+            try:
+                sock.sendall(frame)
+            except OSError as e:
+                self._conns.pop(dest_node, None)
+                raise TransportError(
+                    f"{self.node_id}: send to {dest_node!r} failed after "
+                    f"reconnect: {e}") from e
+
+    # -- chaos / teardown ---------------------------------------------------
+    def drop_connections(self) -> None:
+        """Forcibly close all cached outbound connections (test hook for
+        the reconnect path; a real drop looks identical to the sender)."""
+        with self._lock:
+            conns = list(self._conns.values())
+            self._conns.clear()
+        for sock in conns:
+            try:
+                sock.close()
+            except OSError:
+                pass
+
+    def close(self) -> None:
+        self._closed = True
+        if self._server is not None:
+            try:
+                self._server.close()
+            except OSError:
+                pass
+        self.drop_connections()
+
+
+# ---------------------------------------------------------------------------
+# Node: ActorSystem + Transport
+# ---------------------------------------------------------------------------
+
+
+class Node:
+    """One addressable OODIDA node: an actor system bound to a transport.
+
+    ``route`` is the single choke point every ``@``-addressed send goes
+    through: encode the envelope, move bytes (or loop back through the
+    codec for self-addressed sends), decode on arrival, deliver to the
+    local mailbox. Remote sends that fail at the transport layer land in
+    the local system's dead letters, like sends to dead local actors.
+    """
+
+    def __init__(self, node_id: str, transport: Transport,
+                 system: Optional[ActorSystem] = None):
+        self.node_id = node_id
+        self.system = system or ActorSystem()
+        self.system.node = self
+        self.transport = transport
+        transport.start(node_id, self._deliver)
+
+    # -- helpers ------------------------------------------------------------
+    def address(self, actor_name: str) -> str:
+        return make_addr(actor_name, self.node_id)
+
+    def spawn(self, actor, **kw):
+        return self.system.spawn(actor, **kw)
+
+    # -- routing ------------------------------------------------------------
+    def route(self, target: str, msg, sender: Optional[str] = None) -> None:
+        name, node_id = split_addr(target)
+        if node_id is None:
+            self.system.send(name, msg, sender=sender)
+            return
+        if sender is not None and "@" not in sender:
+            sender = make_addr(sender, self.node_id)
+        data = codec.envelope_to_wire(name, sender, msg)
+        if node_id == self.node_id:
+            self._deliver(data)        # loopback: still crosses the codec
+            return
+        try:
+            self.transport.send(node_id, data)
+        except TransportError:
+            with self.system._lock:
+                self.system.dead_letters.append(Envelope(sender, msg))
+
+    def _deliver(self, data: bytes) -> None:
+        try:
+            to, sender, msg = codec.envelope_from_wire(data)
+        except Exception:  # noqa: BLE001 - a poisoned frame must not kill
+            # the transport's reader thread (and with it every frame
+            # queued behind this one): dead-letter the raw bytes instead
+            with self.system._lock:
+                self.system.dead_letters.append(Envelope(None, data))
+            return
+        self.system.send(to, msg, sender=sender)
+
+    # -- teardown -----------------------------------------------------------
+    def close(self, timeout: float = 5.0) -> None:
+        self.system.shutdown(timeout)
+        self.transport.close()

@@ -1,0 +1,15 @@
+"""Version compatibility for the Pallas TPU API surface.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams``
+(and deprecated the old name) across 0.4.x -> 0.5.x; our kernels are
+written against the new name. Resolve whichever this jax provides once,
+here, so every kernel stays version-agnostic.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")
+
+__all__ = ["CompilerParams"]

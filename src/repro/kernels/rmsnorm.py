@@ -13,7 +13,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from jax.experimental.pallas import tpu as pltpu  # noqa: F401 - dtype/memory enums
+from repro.kernels.pallas_compat import CompilerParams
 
 
 def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float):
@@ -45,7 +46,7 @@ def rmsnorm_pallas(x: jax.Array, w: jax.Array, *, eps: float = 1e-5,
         ],
         out_specs=pl.BlockSpec((block_rows, d), lambda r: (r, 0)),
         out_shape=jax.ShapeDtypeStruct((rows, d), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(x2, w)

@@ -1,0 +1,222 @@
+"""Multi-process OODIDA fleet launcher: real processes, real sockets.
+
+The paper's deployment is one Erlang node per machine; this launcher is
+the closest a laptop gets: the user frontend and cloud node stay in the
+calling process, and **every client node is a spawned child process**
+speaking length-prefixed TCP frames to the cloud. Nothing is shared —
+code modules, tasks, and results exist on a client only after crossing
+the wire, exactly like production.
+
+Two entry points:
+
+* ``spawn_tcp_fleet(n)`` — programmatic; what
+  ``Fleet.create(n, topology="tcp")`` calls;
+* ``python -m repro.launch.fleet_proc --clients 3`` — CLI smoke: one
+  deploy -> iterate -> redeploy -> rollback round across child
+  processes, exit code 0 on success (the CI job).
+
+Children are started with the multiprocessing *spawn* context (never
+fork: the parent runs dozens of actor threads) and are daemonic, so an
+abandoned parent cannot leak them.
+"""
+from __future__ import annotations
+
+import argparse
+import multiprocessing as mp
+import sys
+import threading
+import time
+from typing import Any, Dict, Optional
+
+# ---------------------------------------------------------------------------
+# Child process entry point
+# ---------------------------------------------------------------------------
+
+
+def _client_main(cfg: Dict[str, Any]) -> None:
+    """Runs inside the spawned client process: build the client app,
+    listen on TCP, register with the cloud, serve tasks until StopNode."""
+    import numpy as np
+
+    from repro.core.fleet import ClientApp, ClientNode, RegisterClient
+    from repro.core.registry import ActiveCodeRegistry
+    from repro.core.transport import Node, TcpTransport
+
+    rng = np.random.default_rng(cfg["seed"])
+    data = rng.normal(loc=cfg["loc"], scale=1.0, size=cfg["n_values"])
+    registry = ActiveCodeRegistry(store_root=cfg.get("store_root"))
+    app = ClientApp(cfg["client_id"], data, registry=registry)
+
+    transport = TcpTransport()
+    node = Node(cfg["node_id"], transport)
+    transport.add_peer(cfg["cloud_node_id"], cfg["cloud_endpoint"])
+
+    stop = threading.Event()
+    actor = ClientNode(f"client.{cfg['client_id']}", app, stop_event=stop)
+    node.spawn(actor)
+    node.route(cfg["cloud_addr"],
+               RegisterClient(cfg["client_id"], cfg["node_id"],
+                              transport.endpoint),
+               sender=actor.name)
+    stop.wait()
+    node.close()
+
+
+# ---------------------------------------------------------------------------
+# Parent-side launcher
+# ---------------------------------------------------------------------------
+
+
+def spawn_tcp_fleet(n_clients: int, *, seed: int = 0,
+                    policy: Optional[Any] = None,
+                    data_per_client: int = 4096,
+                    store_root: Optional[str] = None,
+                    max_concurrent_assignments: Optional[int] = None,
+                    ready_timeout_s: float = 120.0):
+    """Build a ``Fleet`` whose client nodes are child processes on TCP.
+
+    Blocks until all clients complete the ``RegisterClient`` handshake
+    (children pay their interpreter + jax import on this path) or raises
+    ``TimeoutError`` after ``ready_timeout_s``, cleaning up the children.
+    """
+    from repro.core.consistency import QuorumPolicy
+    from repro.core.fleet import CloudApp, CloudNode, Fleet
+    from repro.core.registry import ActiveCodeRegistry
+    from repro.core.transport import Node, TcpTransport
+
+    user_transport = TcpTransport()
+    user_node = Node("user", user_transport)
+    cloud_transport = TcpTransport()
+    cloud_node = Node("cloud", cloud_transport)
+    user_transport.add_peer("cloud", cloud_transport.endpoint)
+    cloud_transport.add_peer("user", user_transport.endpoint)
+
+    cloud_reg = ActiveCodeRegistry(
+        store_root=f"{store_root}/cloud" if store_root else None)
+    cloud_app = CloudApp(cloud_reg)
+    cloud = CloudNode("cloud", {}, cloud_app, policy or QuorumPolicy(),
+                      max_concurrent_assignments=max_concurrent_assignments)
+    cloud_node.spawn(cloud)
+
+    ctx = mp.get_context("spawn")
+    procs = []
+    for i in range(n_clients):
+        cid = f"c{i:03d}"
+        cfg = {
+            "client_id": cid,
+            "node_id": cid,
+            "seed": [seed, i],
+            "loc": float(i),
+            "n_values": data_per_client,
+            "store_root": f"{store_root}/{cid}" if store_root else None,
+            "cloud_node_id": "cloud",
+            "cloud_endpoint": cloud_transport.endpoint,
+            "cloud_addr": cloud_node.address(cloud.name),
+        }
+        p = ctx.Process(target=_client_main, args=(cfg,), daemon=True,
+                        name=f"fleet-client-{cid}")
+        p.start()
+        procs.append(p)
+
+    deadline = time.time() + ready_timeout_s
+    while cloud.n_clients < n_clients:
+        if time.time() > deadline:
+            for p in procs:
+                p.terminate()
+            cloud_node.close()
+            user_node.close()
+            raise TimeoutError(
+                f"only {cloud.n_clients}/{n_clients} clients registered "
+                f"within {ready_timeout_s:.0f}s")
+        if any(p.exitcode not in (None, 0) for p in procs):
+            for p in procs:
+                p.terminate()
+            cloud_node.close()
+            user_node.close()
+            raise RuntimeError("a client process died during startup")
+        time.sleep(0.02)
+
+    return Fleet(user_node=user_node, cloud_node=cloud_node,
+                 cloud_addr=cloud_node.address(cloud.name),
+                 cloud_app=cloud_app, client_apps={},
+                 client_nodes=[], client_addrs=dict(cloud.client_nodes),
+                 procs=procs, topology="tcp")
+
+
+# ---------------------------------------------------------------------------
+# CLI smoke: deploy -> iterate -> mid-assignment redeploy -> rollback
+# ---------------------------------------------------------------------------
+
+_V1 = """
+import jax.numpy as jnp
+def run(xs):
+    return jnp.mean(xs) * 2.0
+"""
+
+_V2 = """
+import jax.numpy as jnp
+def run(xs):
+    return jnp.mean(xs) * 4.0
+"""
+
+
+def run_smoke(n_clients: int = 3, iterations: int = 3,
+              verbose: bool = True) -> int:
+    """One full active-code round over spawned processes; returns 0 on
+    success (the CI smoke contract)."""
+    from repro.core.assignment import Status
+
+    def say(msg: str) -> None:
+        if verbose:
+            print(f"[fleet_proc] {msg}", flush=True)
+
+    fleet = spawn_tcp_fleet(n_clients)
+    say(f"{n_clients} client processes registered")
+    try:
+        fe = fleet.frontend("ci")
+        v1 = fe.deploy_code("smoke_mean", _V1)
+        _, done = v1.result(timeout=120.0)
+        assert done.status == Status.DONE, f"deploy failed: {done.detail}"
+        assert f"{n_clients}/{n_clients}" in done.detail, done.detail
+        say(f"deployed v1 ({v1.md5[:8]}) to {n_clients} processes")
+
+        handle = fe.submit_analytics("smoke_mean", iterations=iterations,
+                                     params={"n_values": 16})
+        results, done = handle.result(timeout=120.0)
+        assert done.status == Status.DONE, f"analytics failed: {done.detail}"
+        assert len(results) == iterations
+        assert all(r.winning_md5 == v1.md5 for r in results)
+        say(f"{iterations} iterations committed on v1")
+
+        v2 = fe.deploy_code("smoke_mean", _V2)
+        _, done = v2.result(timeout=120.0)
+        assert done.status == Status.DONE, f"redeploy failed: {done.detail}"
+        rb = v2.rollback()
+        _, done = rb.result(timeout=120.0)
+        assert done.status == Status.DONE, f"rollback failed: {done.detail}"
+        assert rb.md5 == v1.md5
+
+        results, done = fe.submit_analytics(
+            "smoke_mean", iterations=1,
+            params={"n_values": 16}).result(timeout=120.0)
+        assert done.status == Status.DONE
+        assert results[0].winning_md5 == v1.md5, \
+            "post-rollback iteration did not run v1"
+        say("redeploy + rollback verified across processes: PASS")
+        return 0
+    finally:
+        fleet.shutdown()
+
+
+def main(argv: Optional[list] = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Spawn a multi-process TCP fleet and run one "
+                    "deploy -> iterate -> redeploy -> rollback round.")
+    ap.add_argument("--clients", type=int, default=3)
+    ap.add_argument("--iterations", type=int, default=3)
+    args = ap.parse_args(argv)
+    return run_smoke(args.clients, args.iterations)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -99,3 +99,30 @@ def test_wire_tamper_detected():
     wire["code_b64"] = wire["code_b64"][:-4] + "AAA="
     with pytest.raises(ValueError, match="md5 mismatch"):
         ActiveModule.from_wire(wire)
+
+
+def test_install_rejects_tampered_module():
+    """Defense in depth: even a module object whose source was swapped
+    after hashing (bypassing the codec's own check) is rejected at
+    install time — the receiving registry re-derives both hashes."""
+    from repro.core.codec import sha256_of
+    from repro.core.validation import ValidationError
+
+    good = ActiveModule.create("u", "slot", V1, version=1)
+    tampered = ActiveModule(
+        slot=good.slot, user_id=good.user_id,
+        source=V2,                       # swapped payload
+        md5=good.md5, sha256=good.sha256,  # stale announced hashes
+        version=good.version, created_at=good.created_at)
+    receiver = ActiveCodeRegistry()
+    with pytest.raises(ValidationError, match="integrity check failed"):
+        receiver.install(tampered)
+    assert receiver.resolve("u", "slot") is None  # nothing was stored
+
+    # md5 forged to match, sha256 stale: the second hash still catches it
+    forged = ActiveModule(
+        slot=good.slot, user_id=good.user_id, source=V2,
+        md5=md5_of(V2), sha256=sha256_of(V1),
+        version=good.version, created_at=good.created_at)
+    with pytest.raises(ValidationError, match="sha256 mismatch"):
+        receiver.install(forged)

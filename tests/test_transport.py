@@ -1,0 +1,275 @@
+"""The wire-transport fabric: in-proc hub, TCP frames, reconnect-on-drop,
+and node routing (plain names local, '@'-addresses through the codec)."""
+import queue
+from dataclasses import dataclass
+from typing import Any, Dict
+
+import pytest
+
+from repro.core import codec
+from repro.core.actors import Actor
+from repro.core.fleet import Deadline
+from repro.core.transport import (
+    InProcHub,
+    InProcTransport,
+    Node,
+    TcpTransport,
+    TransportError,
+    make_addr,
+    split_addr,
+)
+
+
+# a registered message type private to this suite
+@dataclass(frozen=True)
+class Ping:
+    n: int
+
+    def to_wire_dict(self) -> Dict[str, Any]:
+        return {"n": self.n}
+
+    @staticmethod
+    def from_wire_dict(d: Dict[str, Any]) -> "Ping":
+        return Ping(int(d["n"]))
+
+
+codec.register_message("test_ping", Ping)
+
+
+class Collector(Actor):
+    def __init__(self, name):
+        super().__init__(name)
+        self.got: "queue.Queue[Any]" = queue.Queue()
+
+    def handle(self, sender, msg):
+        self.got.put((sender, msg))
+
+
+# ---------------------------------------------------------------------------
+# Addresses
+# ---------------------------------------------------------------------------
+
+
+def test_address_split_and_make():
+    assert split_addr("cloud") == ("cloud", None)
+    assert split_addr("cloud@node1") == ("cloud", "node1")
+    # actor names may contain dots; only the last @ splits
+    assert split_addr("cloud.asg1@cloud") == ("cloud.asg1", "cloud")
+    assert make_addr("a", "n") == "a@n"
+
+
+# ---------------------------------------------------------------------------
+# InProc hub
+# ---------------------------------------------------------------------------
+
+
+def test_inproc_hub_delivers_bytes():
+    hub = InProcHub()
+    got = []
+    a = InProcTransport(hub)
+    a.start("a", got.append)
+    b = InProcTransport(hub)
+    b.start("b", lambda d: None)
+    b.send("a", b"hello")
+    assert got == [b"hello"]
+
+
+def test_inproc_unknown_node_recorded_not_raised():
+    hub = InProcHub()
+    t = InProcTransport(hub)
+    t.start("a", lambda d: None)
+    t.send("ghost", b"x")
+    assert hub.dropped == [("ghost", b"x")]
+
+
+def test_inproc_detach_on_close():
+    hub = InProcHub()
+    t = InProcTransport(hub)
+    t.start("a", lambda d: None)
+    t.close()
+    t2 = InProcTransport(hub)
+    t2.start("a", lambda d: None)   # name is free again
+
+
+# ---------------------------------------------------------------------------
+# TCP
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture()
+def tcp_pair():
+    got_a, got_b = queue.Queue(), queue.Queue()
+    a, b = TcpTransport(), TcpTransport()
+    a.start("a", got_a.put)
+    b.start("b", got_b.put)
+    a.add_peer("b", b.endpoint)
+    b.add_peer("a", a.endpoint)
+    yield a, b, got_a, got_b
+    a.close()
+    b.close()
+
+
+def test_tcp_frames_both_ways(tcp_pair):
+    a, b, got_a, got_b = tcp_pair
+    a.send("b", b"from-a")
+    b.send("a", b"from-b")
+    assert got_b.get(timeout=5.0) == b"from-a"
+    assert got_a.get(timeout=5.0) == b"from-b"
+
+
+def test_tcp_many_frames_in_order(tcp_pair):
+    a, b, _, got_b = tcp_pair
+    payloads = [f"frame-{i}".encode() * (i + 1) for i in range(50)]
+    for p in payloads:
+        a.send("b", p)
+    assert [got_b.get(timeout=5.0) for _ in payloads] == payloads
+
+
+def test_tcp_reconnect_after_drop(tcp_pair):
+    a, b, _, got_b = tcp_pair
+    a.send("b", b"one")
+    assert got_b.get(timeout=5.0) == b"one"
+    a.drop_connections()               # the wire went away under us
+    a.send("b", b"two")                # must redial transparently
+    assert got_b.get(timeout=5.0) == b"two"
+
+
+def test_tcp_unknown_peer_raises():
+    t = TcpTransport()
+    t.start("a", lambda d: None)
+    try:
+        with pytest.raises(TransportError, match="no endpoint"):
+            t.send("ghost", b"x")
+    finally:
+        t.close()
+
+
+def test_tcp_unreachable_peer_raises_after_retries():
+    t = TcpTransport(reconnect_attempts=2, reconnect_delay_s=0.01)
+    t.start("a", lambda d: None)
+    t.add_peer("dead", "127.0.0.1:1")   # nothing listens on port 1
+    try:
+        with pytest.raises(TransportError, match="cannot connect"):
+            t.send("dead", b"x")
+    finally:
+        t.close()
+
+
+# ---------------------------------------------------------------------------
+# Node routing
+# ---------------------------------------------------------------------------
+
+
+def test_node_routes_across_hub_through_codec():
+    hub = InProcHub()
+    n1 = Node("n1", InProcTransport(hub))
+    n2 = Node("n2", InProcTransport(hub))
+    try:
+        sink = Collector("sink")
+        n2.spawn(sink)
+        n1.route("sink@n2", Ping(42), sender="someone")
+        sender, msg = sink.got.get(timeout=5.0)
+        assert msg == Ping(42)
+        assert sender == "someone@n1"  # senders are qualified in transit
+    finally:
+        n1.close()
+        n2.close()
+
+
+def test_node_local_plain_name_stays_object_reference():
+    hub = InProcHub()
+    n = Node("n1", InProcTransport(hub))
+    try:
+        sink = Collector("sink")
+        n.spawn(sink)
+        marker = object()               # not serializable on purpose
+        n.route("sink", (marker,))      # plain name: no codec involved
+        _, msg = sink.got.get(timeout=5.0)
+        assert msg[0] is marker
+    finally:
+        n.close()
+
+
+def test_node_self_addressed_send_still_crosses_codec():
+    """The loopback discipline: an '@'-qualified send to *this* node
+    encodes and decodes — so an unserializable message fails loudly
+    instead of riding an object reference."""
+    hub = InProcHub()
+    n = Node("n1", InProcTransport(hub))
+    try:
+        sink = Collector("sink")
+        n.spawn(sink)
+        orig = Deadline(3)
+        n.route("sink@n1", orig)
+        _, msg = sink.got.get(timeout=5.0)
+        assert msg == orig
+        assert msg is not orig           # a decoded copy, not a reference
+
+        class Opaque:
+            pass
+
+        with pytest.raises(codec.UnregisteredMessageError):
+            n.route("sink@n1", Opaque())
+    finally:
+        n.close()
+
+
+def test_poisoned_frame_dead_lettered_connection_survives():
+    """A frame that fails to decode must not kill the reader: it lands
+    in dead letters and later frames on the same connection still flow."""
+    got = queue.Queue()
+    a, b = TcpTransport(), TcpTransport()
+    n2 = Node("b", b)
+
+    class Sink(Actor):
+        def handle(self, sender, msg):
+            got.put(msg)
+
+    try:
+        a.start("a", lambda d: None)
+        a.add_peer("b", b.endpoint)
+        n2.spawn(Sink("sink"))
+        a.send("b", b"not json at all")                       # poisoned
+        a.send("b", codec.envelope_to_wire("sink", None, Ping(9)))
+        assert got.get(timeout=5.0) == Ping(9)                # still alive
+        assert len(n2.system.dead_letters) == 1
+        assert n2.system.dead_letters[0].msg == b"not json at all"
+    finally:
+        a.close()
+        n2.close()
+
+
+def test_node_remote_failure_lands_in_dead_letters():
+    t = TcpTransport(reconnect_attempts=1, reconnect_delay_s=0.01)
+    n = Node("n1", t)
+    try:
+        n.route("sink@nowhere", Ping(1), sender="me")
+        assert len(n.system.dead_letters) == 1
+        assert n.system.dead_letters[0].msg == Ping(1)
+    finally:
+        n.close()
+
+
+def test_actor_send_uses_node_routing():
+    """Actor.send('name@node', ...) goes through the fabric without the
+    actor knowing anything about transports."""
+    hub = InProcHub()
+    n1 = Node("n1", InProcTransport(hub))
+    n2 = Node("n2", InProcTransport(hub))
+
+    class Echo(Actor):
+        def handle(self, sender, msg):
+            self.send(sender, Ping(msg.n + 1))
+
+    try:
+        echo = Echo("echo")
+        n2.spawn(echo)
+        sink = Collector("sink")
+        n1.spawn(sink)
+        n1.route("echo@n2", Ping(1), sender="sink")
+        sender, msg = sink.got.get(timeout=5.0)
+        assert msg == Ping(2)
+        assert sender == "echo@n2"
+    finally:
+        n1.close()
+        n2.close()
