@@ -1,10 +1,12 @@
-"""Fabric round-trip latency and deploy-to-effect time, in-proc vs TCP.
+"""Fabric round-trip latency and deploy-to-effect time, in-proc vs TCP,
+plus the shard-count scaling curve.
 
 Quantifies what the transport boundary costs: the same
 submit -> fan-out -> collect -> commit round measured on the loopback
 (InProc) fabric and on real spawned-process TCP clients, plus the
 paper's headline metric — how long from ``deploy_code`` to the first
-committed iteration that runs the new version.
+committed iteration that runs the new version — and what the sharded
+topology's router fan-in adds to it at k = 1, 2, 4 shards.
 """
 from __future__ import annotations
 
@@ -48,10 +50,10 @@ def bench_roundtrip(topology: str, n_clients: int = 4, rounds: int = 30):
 
 
 def bench_deploy_to_effect(topology: str, n_clients: int = 4,
-                           repeats: int = 5):
+                           repeats: int = 5, shards: int = 1):
     """Mid-assignment redeploy: time from ``deploy_code(v2)`` to the
     first committed iteration whose winning hash is v2."""
-    fleet = Fleet.create(n_clients, topology=topology)
+    fleet = Fleet.create(n_clients, topology=topology, shards=shards)
     try:
         fe = fleet.frontend("bench")
         v1 = fe.deploy_code("fab_mean", _V1)
@@ -86,6 +88,16 @@ def main(report) -> None:
         d2e = bench_deploy_to_effect(topology)
         report(f"fabric_deploy_to_effect_{topology}", d2e * 1e6,
                "deploy_code -> first committed iteration on new version")
+    # shard-count scaling: what the router fan-in + per-assignment
+    # aggregation add to deploy-to-effect as the cloud scales out.
+    # k=1 is the *unsharded* topology (no router), so the k1->k2 delta
+    # is router+aggregator insertion, k2->k4 is marginal shard cost.
+    for k in (1, 2, 4):
+        d2e = bench_deploy_to_effect("inproc", n_clients=8, shards=k)
+        label = ("unsharded baseline, no router" if k == 1
+                 else f"{k} shards behind the router")
+        report(f"fabric_deploy_to_effect_shards_k{k}", d2e * 1e6,
+               f"deploy-to-effect, 8 in-proc clients, {label}")
 
 
 if __name__ == "__main__":

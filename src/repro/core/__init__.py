@@ -3,6 +3,20 @@
 Public API surface of the OODIDA-style layer: versioned hot-swappable
 code modules, front-end validation, the assignment/task actor fabric,
 and the md5-majority consistency rule.
+
+Start here:
+
+* ``Fleet.create(n, topology=..., shards=...)`` — build a running
+  deployment (in-proc, spawned-process TCP, optionally sharded behind
+  a ``RouterNode``), then ``fleet.frontend(user_id)`` for the analyst
+  API.
+* ``UserFrontend.deploy_code(...)`` / ``submit_analytics(...)`` —
+  every submission returns an ``AssignmentHandle`` (``Deployment`` for
+  code), the single control surface: ``events()``, ``result()``,
+  ``status``, ``cancel()``, and ``rollback()`` on deployments.
+* ``Transport`` / ``Node`` — the byte-moving fabric underneath; see
+  ``docs/protocol.md`` for the wire format and ``docs/architecture.md``
+  for topology diagrams and the assignment lifecycle.
 """
 from repro.core.assignment import (
     AssignmentEvent,
@@ -32,9 +46,16 @@ from repro.core.fleet import (
     CloudApp,
     CloudNode,
     Deployment,
+    Evicted,
     Fleet,
     HandleSink,
+    Heartbeat,
+    RegisterAck,
     RegisterClient,
+    RegisterShard,
+    RouterNode,
+    ShardAggregator,
+    ShardRing,
     StopNode,
     UserFrontend,
 )
@@ -72,9 +93,11 @@ __all__ = [
     "DeployEvent",
     "Deployment",
     "DoneEvent",
+    "Evicted",
     "FilterOutcome",
     "Fleet",
     "HandleSink",
+    "Heartbeat",
     "InProcHub",
     "InProcTransport",
     "IterationCollector",
@@ -82,8 +105,13 @@ __all__ = [
     "LocalDeployment",
     "Node",
     "QuorumPolicy",
+    "RegisterAck",
     "RegisterClient",
+    "RegisterShard",
     "ResolvedModule",
+    "RouterNode",
+    "ShardAggregator",
+    "ShardRing",
     "SlotSpec",
     "Status",
     "StopNode",

@@ -22,15 +22,31 @@ Figure 1 of the paper, reproduced:
   message between them crosses the wire codec as bytes — over an
   in-process loopback hub by default, or real TCP to spawned client
   processes (``Fleet.create(..., topology="tcp")``).
+* The cloud scales horizontally: ``Fleet.create(..., shards=k)`` puts a
+  thin ``RouterNode`` in front of *k* ``CloudNode`` shards. Clients are
+  partitioned by consistent hashing on ``client_id`` (``ShardRing``),
+  shards own disjoint peer tables, and a per-assignment
+  ``ShardAggregator`` merges shard-level events back into the one
+  handle stream — the control-plane API is unchanged.
+* Churn is survivable: clients heartbeat their owning cloud/shard,
+  silent clients are evicted and become permanent stragglers for
+  in-flight assignments, and re-registration (idempotent) re-delivers
+  the currently deployed modules so a returning client catches up.
+
+The wire protocol these messages follow is specified in
+``docs/protocol.md`` (kept in lockstep with the codec registry by
+``tests/test_docs.py``); the topologies and the assignment lifecycle
+are diagrammed in ``docs/architecture.md``.
 """
 from __future__ import annotations
 
+import bisect
 import queue
 import threading
 import time
-from collections import deque
-from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from collections import Counter, deque
+from dataclasses import dataclass, field, replace
+from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
@@ -60,6 +76,7 @@ from repro.core.transport import (
     InProcTransport,
     Node,
     make_addr,
+    split_addr,
 )
 from repro.core.validation import SlotSpec, ValidationError
 
@@ -164,7 +181,8 @@ class RegisterClient:
 @dataclass(frozen=True)
 class StopNode:
     """Fleet shutdown: tells a (possibly remote) client node to stop its
-    process cleanly."""
+    process cleanly. A sharded cloud node that receives it broadcasts it
+    to every client it owns before stopping itself."""
 
     def to_wire_dict(self) -> Dict[str, Any]:
         return {}
@@ -174,13 +192,110 @@ class StopNode:
         return StopNode()
 
 
+@dataclass(frozen=True)
+class RegisterAck:
+    """Cloud/shard reply to ``RegisterClient``: tells the client where its
+    owning cloud node lives (heartbeat target + dial-back endpoint) and
+    re-delivers the currently deployed modules so a reconnecting client
+    catches up on code it missed while away."""
+
+    client_id: str
+    cloud_addr: str                # owning cloud actor ("cloud@shard0")
+    endpoint: Optional[str] = None # owning node's "host:port"; None in-proc
+    modules: Tuple[ActiveModule, ...] = ()
+
+    def to_wire_dict(self) -> Dict[str, Any]:
+        return {"client_id": self.client_id, "cloud_addr": self.cloud_addr,
+                "endpoint": self.endpoint,
+                "modules": [m.to_wire() for m in self.modules]}
+
+    @staticmethod
+    def from_wire_dict(d: Dict[str, Any]) -> "RegisterAck":
+        return RegisterAck(
+            d["client_id"], d["cloud_addr"], d.get("endpoint"),
+            tuple(ActiveModule.from_wire(m) for m in d.get("modules", ())))
+
+
+@dataclass(frozen=True)
+class Heartbeat:
+    """Periodic client -> owning-shard liveness beacon. A shard that gets
+    a heartbeat from a client it does not know (evicted, or the shard
+    restarted) replies ``Evicted`` so the client re-registers."""
+
+    client_id: str
+    node_id: str
+
+    def to_wire_dict(self) -> Dict[str, Any]:
+        return {"client_id": self.client_id, "node_id": self.node_id}
+
+    @staticmethod
+    def from_wire_dict(d: Dict[str, Any]) -> "Heartbeat":
+        return Heartbeat(d["client_id"], d["node_id"])
+
+
+@dataclass(frozen=True)
+class Evicted:
+    """A client was dropped from a cloud node's peer table (missed
+    heartbeats, or it was never registered). Fanned to live assignment
+    handlers (mark the client a permanent straggler), to the router
+    (forget the shard mapping), and to the client itself (re-register
+    if it is actually alive)."""
+
+    client_id: str
+    reason: str = ""
+
+    def to_wire_dict(self) -> Dict[str, Any]:
+        return {"client_id": self.client_id, "reason": self.reason}
+
+    @staticmethod
+    def from_wire_dict(d: Dict[str, Any]) -> "Evicted":
+        return Evicted(d["client_id"], d.get("reason", ""))
+
+
+@dataclass(frozen=True)
+class RegisterShard:
+    """A CloudNode shard announcing itself to the RouterNode (the sharded
+    topology's server-side join handshake, mirroring RegisterClient)."""
+
+    shard_id: str                  # the shard's node id
+    cloud_addr: str                # shard cloud actor ("cloud@shard0")
+    endpoint: Optional[str] = None
+
+    def to_wire_dict(self) -> Dict[str, Any]:
+        return {"shard_id": self.shard_id, "cloud_addr": self.cloud_addr,
+                "endpoint": self.endpoint}
+
+    @staticmethod
+    def from_wire_dict(d: Dict[str, Any]) -> "RegisterShard":
+        return RegisterShard(d["shard_id"], d["cloud_addr"], d.get("endpoint"))
+
+
 codec.register_message("submit_assignment", SubmitAssignment)
 codec.register_message("cancel_assignment", CancelAssignment)
 codec.register_message("new_task", NewTask)
 codec.register_message("task_done", TaskDone)
 codec.register_message("deadline", Deadline)
 codec.register_message("register_client", RegisterClient)
+codec.register_message("register_ack", RegisterAck)
+codec.register_message("heartbeat", Heartbeat)
+codec.register_message("evicted", Evicted)
+codec.register_message("register_shard", RegisterShard)
 codec.register_message("stop_node", StopNode)
+
+
+# Internal self-scheduling ticks: delivered by plain (node-local) actor
+# name straight to the owner's mailbox, so they never cross a node
+# boundary and deliberately have no wire codec.
+
+
+@dataclass(frozen=True)
+class _HeartbeatTick:
+    pass
+
+
+@dataclass(frozen=True)
+class _EvictionTick:
+    pass
 
 
 # ---------------------------------------------------------------------------
@@ -333,14 +448,60 @@ class ClientNode(Actor):
 
     ``stop_event`` is set when a ``StopNode`` arrives — the hook the
     multi-process launcher's child main blocks on.
+
+    Churn behaviour: when ``register_with`` is set the actor announces
+    itself on start (``RegisterClient``, idempotent — re-sending after a
+    drop is the reconnect path). The ``RegisterAck`` reply names the
+    owning cloud/shard and re-delivers the currently deployed modules;
+    from then on the client heartbeats that address every
+    ``heartbeat_interval_s``. An ``Evicted`` notice (the shard forgot
+    us) simply triggers re-registration.
     """
 
     def __init__(self, name: str, app: ClientApp,
-                 stop_event: Optional[threading.Event] = None):
+                 stop_event: Optional[threading.Event] = None, *,
+                 register_with: Optional[str] = None,
+                 endpoint: Optional[str] = None,
+                 heartbeat_interval_s: Optional[float] = None):
         super().__init__(name)
         self.app = app
         self.stop_event = stop_event
+        self.register_with = register_with
+        self.endpoint = endpoint
+        self.hb_interval = heartbeat_interval_s
+        self._cloud_addr: Optional[str] = None   # learned from RegisterAck
+        self._hb_timer: Optional[threading.Timer] = None
         self._task_seq = 0
+
+    def _node_id(self) -> str:
+        sys_ = self._system
+        if sys_ is not None and sys_.node is not None:
+            return sys_.node.node_id
+        return self.app.client_id
+
+    def _register(self) -> None:
+        if self.register_with:
+            self.send(self.register_with,
+                      RegisterClient(self.app.client_id, self._node_id(),
+                                     self.endpoint))
+
+    def on_start(self) -> None:
+        self._register()
+
+    def _schedule_heartbeat(self) -> None:
+        if self.hb_interval is None:
+            return
+        if self._hb_timer is not None:
+            self._hb_timer.cancel()
+        sys_ = self._system
+        assert sys_ is not None
+        # tick lands in our own mailbox, so the Heartbeat send below runs
+        # on the actor thread, not the timer thread
+        self._hb_timer = threading.Timer(
+            self.hb_interval,
+            lambda: sys_.send(self.name, _HeartbeatTick()))
+        self._hb_timer.daemon = True
+        self._hb_timer.start()
 
     def handle(self, sender, msg) -> None:
         if isinstance(msg, NewTask):
@@ -349,10 +510,49 @@ class ClientNode(Actor):
             assert self._system is not None
             self._system.spawn(TaskHandler(handler_name, self.app, msg.task,
                                            msg.handler))
+        elif isinstance(msg, RegisterAck):
+            sys_ = self._system
+            cloud_node = split_addr(msg.cloud_addr)[1]
+            if (msg.endpoint and cloud_node and sys_ is not None
+                    and sys_.node is not None):
+                sys_.node.transport.add_peer(cloud_node, msg.endpoint)
+            self._cloud_addr = msg.cloud_addr
+            for mod in msg.modules:       # catch up on missed deployments
+                try:
+                    self.app.registry.install(mod)
+                except ValidationError:
+                    # a module this client's slot specs reject must not
+                    # take the whole node down mid-handshake
+                    pass
+            self._schedule_heartbeat()
+        elif isinstance(msg, _HeartbeatTick):
+            if self._cloud_addr is not None:
+                self.send(self._cloud_addr,
+                          Heartbeat(self.app.client_id, self._node_id()))
+            self._schedule_heartbeat()
+        elif isinstance(msg, Evicted):
+            self._register()              # shard forgot us: rejoin
         elif isinstance(msg, StopNode):
             if self.stop_event is not None:
                 self.stop_event.set()
             self.stop()
+
+    def on_stop(self) -> None:
+        if self._hb_timer is not None:
+            self._hb_timer.cancel()
+
+
+def _cloud_deploy_events(spec: AssignmentSpec) -> Tuple[DeployEvent,
+                                                        DoneEvent]:
+    """The event pair acknowledging a cloud-target code deployment —
+    shared by the unsharded handler and the router so the two
+    topologies cannot drift apart."""
+    assert spec.code is not None
+    return (DeployEvent(spec.assignment_id, spec.code.slot, spec.code.md5,
+                        spec.code.version, Target.CLOUD,
+                        n_installed=1, n_targets=1),
+            DoneEvent(spec.assignment_id, Status.DONE,
+                      detail=f"cloud code {spec.code.md5} deployed"))
 
 
 class AssignmentHandler(Actor):
@@ -374,6 +574,7 @@ class AssignmentHandler(Actor):
         self._timer: Optional[threading.Timer] = None
         self._committed_iterations = 0
         self._cancelled = False
+        self._current_targets: List[str] = []
 
     # -- helpers ----------------------------------------------------------------
     def _targets(self) -> List[str]:
@@ -386,13 +587,8 @@ class AssignmentHandler(Actor):
             assert self.spec.code is not None
             self.cloud_app.install(self.spec.code)
             if self.spec.target == Target.CLOUD:
-                self.send(self.cloud, DeployEvent(
-                    self.spec.assignment_id, self.spec.code.slot,
-                    self.spec.code.md5, self.spec.code.version,
-                    Target.CLOUD, n_installed=1, n_targets=1))
-                self.send(self.cloud, DoneEvent(
-                    self.spec.assignment_id, Status.DONE,
-                    detail=f"cloud code {self.spec.code.md5} deployed"))
+                for ev in _cloud_deploy_events(self.spec):
+                    self.send(self.cloud, ev)
                 self.stop()
                 return
         self._start_iteration()
@@ -400,10 +596,26 @@ class AssignmentHandler(Actor):
     def _start_iteration(self) -> None:
         targets = self._targets()
         if not targets:
-            self.send(self.cloud, DoneEvent(
-                self.spec.assignment_id, Status.FAILED, detail="no clients"))
+            if self.spec.kind == AssignmentKind.CODE_REPLACEMENT:
+                # vacuous deploy (e.g. a shard that owns no clients right
+                # now): nothing to install is success, not failure — the
+                # cloud node already recorded the module, so clients that
+                # join later catch up via RegisterAck
+                assert self.spec.code is not None
+                self.send(self.cloud, DeployEvent(
+                    self.spec.assignment_id, self.spec.code.slot,
+                    self.spec.code.md5, self.spec.code.version,
+                    self.spec.target, n_installed=0, n_targets=0))
+                self.send(self.cloud, DoneEvent(
+                    self.spec.assignment_id, Status.DONE,
+                    detail=f"0/0 clients installed {self.spec.code.md5}"))
+            else:
+                self.send(self.cloud, DoneEvent(
+                    self.spec.assignment_id, Status.FAILED,
+                    detail="no clients"))
             self.stop()
             return
+        self._current_targets = list(targets)
         self.collector = IterationCollector(
             iteration=self.iteration, n_clients=len(targets),
             policy=self.policy)
@@ -460,6 +672,31 @@ class AssignmentHandler(Actor):
         elif isinstance(msg, Deadline):
             if msg.iteration == self.iteration and self.collector is not None:
                 self._commit()
+        elif isinstance(msg, Evicted):
+            self._client_departed(msg.client_id)
+
+    def _client_departed(self, client_id: str) -> None:
+        """Churn rule: an evicted client becomes a *permanent* straggler —
+        future iterations never target it, and the current iteration stops
+        counting it toward quorum instead of eating the full deadline."""
+        self.client_nodes.pop(client_id, None)
+        if (self.collector is None or self._cancelled
+                or client_id not in self._current_targets):
+            return
+        if any(r.client_id == client_id for r in self.collector.results):
+            return                     # its result already landed; keep it
+        self._current_targets.remove(client_id)
+        self.collector.n_clients -= 1
+        if self.collector.n_clients <= 0:
+            self.send(self.cloud, DoneEvent(
+                self.spec.assignment_id, Status.FAILED,
+                detail=f"all clients departed during iteration "
+                       f"{self.iteration}"))
+            self.stop()
+        elif self.collector.complete():
+            self._commit()
+        elif self.collector.ready():
+            self._arm_deadline()
 
     def _commit(self) -> None:
         if self._timer is not None:
@@ -515,26 +752,50 @@ class AssignmentHandler(Actor):
 class CloudNode(Actor):
     """Permanent central node (OODIDA's b). Routes user assignments to
     fresh AssignmentHandlers and streams typed events back over the
-    fabric to the per-assignment sink actors on the user's node.
+    fabric to the per-assignment sink actors on the user's node. In the
+    sharded topology the same class runs as one of *k* shards behind a
+    ``RouterNode``, owning a disjoint subset of the fleet.
 
     ``client_nodes`` maps client_id -> client-node *address*; it can be
     pre-populated (in-proc topology) or filled dynamically by
-    ``RegisterClient`` handshakes (spawned-process TCP topology).
+    ``RegisterClient`` handshakes (spawned-process TCP topology and the
+    sharded topology). Registration is acknowledged with ``RegisterAck``
+    carrying the currently deployed modules, so registration after a
+    drop doubles as catch-up.
 
     ``max_concurrent_assignments`` is the backpressure knob: beyond it,
     submissions queue FIFO inside the cloud node and are admitted as
     running handlers finish — many simultaneous handles are the expected
     usage, an unbounded handler explosion is not.
+
+    ``heartbeat_timeout_s`` arms churn handling: a client whose last
+    heartbeat (or registration) is older than the timeout is evicted —
+    dropped from the peer table, reported to live assignment handlers
+    (permanent straggler), to the router if one fronts this shard, and
+    to the client itself (a live client re-registers).
     """
 
     def __init__(self, name: str, client_nodes: Dict[str, str],
                  cloud_app: CloudApp, policy: QuorumPolicy,
-                 max_concurrent_assignments: Optional[int] = None):
+                 max_concurrent_assignments: Optional[int] = None, *,
+                 heartbeat_timeout_s: Optional[float] = None,
+                 sweep_interval_s: Optional[float] = None,
+                 router_addr: Optional[str] = None,
+                 stop_event: Optional[threading.Event] = None):
         super().__init__(name)
         self.client_nodes = dict(client_nodes)
         self.cloud_app = cloud_app
         self.policy = policy
         self.max_concurrent = max_concurrent_assignments
+        self.heartbeat_timeout = heartbeat_timeout_s
+        self.router_addr = router_addr
+        self.stop_event = stop_event
+        self._sweep_interval = sweep_interval_s or (
+            heartbeat_timeout_s / 4 if heartbeat_timeout_s else None)
+        self._sweep_timer: Optional[threading.Timer] = None
+        self._last_seen: Dict[str, float] = {
+            c: time.time() for c in self.client_nodes}
+        self._deployed: Dict[Tuple[str, str], ActiveModule] = {}
         self._user_sinks: Dict[str, str] = {}            # asg id -> address
         self._handler_seq = 0
         self._handler_assignments: Dict[str, str] = {}   # actor -> asg id
@@ -582,24 +843,104 @@ class CloudNode(Actor):
                 or len(self._handler_assignments) < self.max_concurrent):
             self._spawn_handler(self._pending.popleft())
 
+    # -- churn: heartbeats + eviction ---------------------------------------------
+    def on_start(self) -> None:
+        self._schedule_sweep()
+
+    def _schedule_sweep(self) -> None:
+        if self._sweep_interval is None or self.heartbeat_timeout is None:
+            return
+        sys_ = self._system
+        assert sys_ is not None
+        self._sweep_timer = threading.Timer(
+            self._sweep_interval,
+            lambda: sys_.send(self.name, _EvictionTick()))
+        self._sweep_timer.daemon = True
+        self._sweep_timer.start()
+
+    def _sweep(self) -> None:
+        now = time.time()
+        assert self.heartbeat_timeout is not None
+        stale = [c for c, t in self._last_seen.items()
+                 if now - t > self.heartbeat_timeout]
+        for cid in stale:
+            self._evict(cid, f"no heartbeat for {now - self._last_seen[cid]:.2f}s "
+                             f"(timeout {self.heartbeat_timeout:.2f}s)")
+
+    def _evict(self, client_id: str, reason: str) -> None:
+        addr = self.client_nodes.pop(client_id, None)
+        self._last_seen.pop(client_id, None)
+        if addr is None:
+            return
+        ev = Evicted(client_id, reason)
+        for handler in list(self._handler_assignments):
+            self.send(handler, ev)         # mark permanent straggler
+        if self.router_addr is not None:
+            self.send(self.router_addr, ev)
+        # the evictee is usually genuinely dead: notify it from a
+        # throwaway thread so a slow TCP redial to a gone peer cannot
+        # stall this cloud node's message loop (a live client still gets
+        # the notice and re-registers; a failed send dead-letters)
+        sys_ = self._system
+        if sys_ is not None:
+            threading.Thread(
+                target=lambda: sys_.send(addr, ev, sender=self.name),
+                name=f"evict-notify:{client_id}", daemon=True).start()
+
     # -- message loop -------------------------------------------------------------
     def handle(self, sender, msg) -> None:
         if isinstance(msg, SubmitAssignment):
-            self._user_sinks[msg.spec.assignment_id] = msg.reply_to
+            # remember the newest client-targeted deployment per (user,
+            # slot) so RegisterAck can catch up reconnecting clients
+            spec = msg.spec
+            if (spec.kind == AssignmentKind.CODE_REPLACEMENT
+                    and spec.code is not None
+                    and spec.target in (Target.CLIENTS, Target.BOTH)):
+                self._deployed[(spec.user_id, spec.code.slot)] = spec.code
+            self._user_sinks[spec.assignment_id] = msg.reply_to
             if (self.max_concurrent is not None
                     and len(self._handler_assignments) >= self.max_concurrent):
                 self._pending.append(msg)
             else:
                 self._spawn_handler(msg)
         elif isinstance(msg, RegisterClient):
-            # TCP join handshake: learn how to dial the client back, then
-            # make it targetable by assignments
-            if msg.endpoint and self._system is not None \
-                    and self._system.node is not None:
-                self._system.node.transport.add_peer(msg.node_id,
-                                                     msg.endpoint)
-            self.client_nodes[msg.client_id] = make_addr(
-                f"client.{msg.client_id}", msg.node_id)
+            # join handshake (idempotent — re-registering after a drop is
+            # the reconnect path): learn how to dial the client back, make
+            # it targetable, and ack with the current code so it catches up
+            my_node = (self._system.node if self._system is not None
+                       else None)
+            if msg.endpoint and my_node is not None:
+                my_node.transport.add_peer(msg.node_id, msg.endpoint)
+            addr = make_addr(f"client.{msg.client_id}", msg.node_id)
+            self.client_nodes[msg.client_id] = addr
+            self._last_seen[msg.client_id] = time.time()
+            self.send(addr, RegisterAck(
+                msg.client_id,
+                cloud_addr=(my_node.address(self.name) if my_node is not None
+                            else self.name),
+                endpoint=(my_node.transport.endpoint if my_node is not None
+                          else None),
+                modules=tuple(self._deployed.values())))
+        elif isinstance(msg, Heartbeat):
+            if msg.client_id in self.client_nodes:
+                self._last_seen[msg.client_id] = time.time()
+            else:
+                # heartbeat from a client we evicted (or never knew):
+                # tell it to re-register
+                self.send(make_addr(f"client.{msg.client_id}", msg.node_id),
+                          Evicted(msg.client_id,
+                                  "unknown to this cloud node; re-register"))
+        elif isinstance(msg, _EvictionTick):
+            self._sweep()
+            self._schedule_sweep()
+        elif isinstance(msg, StopNode):
+            # sharded shutdown: fan the stop out to every owned client,
+            # then stop this shard (and its hosting process, if any)
+            for addr in self.client_nodes.values():
+                self.send(addr, StopNode())
+            if self.stop_event is not None:
+                self.stop_event.set()
+            self.stop()
         elif isinstance(msg, CancelAssignment):
             handler = self._assignment_handlers.get(msg.assignment_id)
             if handler is not None:
@@ -624,6 +965,324 @@ class CloudNode(Actor):
                         asg, Status.FAILED,
                         detail=f"handler crash: {msg.reason}"))
             self._admit_pending()
+
+    def on_stop(self) -> None:
+        if self._sweep_timer is not None:
+            self._sweep_timer.cancel()
+
+
+# ---------------------------------------------------------------------------
+# Sharding: consistent hashing + router fan-in
+# ---------------------------------------------------------------------------
+
+
+class ShardRing:
+    """Consistent-hash ring mapping ``client_id`` -> shard node id.
+
+    Classic ring with virtual nodes: each shard contributes ``vnodes``
+    points hashed from ``"{shard_id}#{i}"``; a client maps to the first
+    point clockwise from the hash of its id. Adding or removing one
+    shard only remaps the ~1/k of clients whose arcs it owned, so a
+    resize does not reshuffle the whole fleet.
+    """
+
+    def __init__(self, shard_ids: Sequence[str] = (), vnodes: int = 64):
+        self._vnodes = vnodes
+        self._ring: List[Tuple[int, str]] = []
+        self._hashes: List[int] = []
+        self._shards: Set[str] = set()
+        for s in shard_ids:
+            self.add(s)
+
+    @staticmethod
+    def _hash(key: str) -> int:
+        return int(codec.md5_of(key)[:16], 16)
+
+    @property
+    def shard_ids(self) -> Set[str]:
+        return set(self._shards)
+
+    def add(self, shard_id: str) -> None:
+        if shard_id in self._shards:
+            return
+        self._shards.add(shard_id)
+        for v in range(self._vnodes):
+            self._ring.append((self._hash(f"{shard_id}#{v}"), shard_id))
+        self._ring.sort()
+        self._hashes = [h for h, _ in self._ring]
+
+    def remove(self, shard_id: str) -> None:
+        if shard_id not in self._shards:
+            return
+        self._shards.discard(shard_id)
+        self._ring = [(h, s) for h, s in self._ring if s != shard_id]
+        self._hashes = [h for h, _ in self._ring]
+
+    def lookup(self, client_id: str) -> Optional[str]:
+        if not self._ring:
+            return None
+        i = bisect.bisect_right(self._hashes, self._hash(client_id))
+        if i == len(self._ring):
+            i = 0                              # wrap around the ring
+        return self._ring[i][1]
+
+
+class ShardAggregator(Actor):
+    """Temporary per-assignment fan-in on the router node: merges the
+    shard-level event streams of one assignment back into the single
+    typed stream the submitting ``AssignmentHandle`` expects.
+
+    Each shard runs its own ``AssignmentHandler`` over its disjoint
+    client subset with the shard-local quorum rule and reports raw
+    accepted payloads per iteration (the router strips ``cloud_method``
+    from the fanned-out specs). This actor:
+
+    * applies the md5-majority rule **hierarchically**: each shard has
+      already committed its local plurality hash, and the merge picks
+      among the *shard winners*, weighted by their accepted counts
+      (ties broken by smallest md5, as in
+      ``consistency.majority_filter``). Agreeing shards' payloads are
+      concatenated; dissenting shards' accepted results count as
+      dropped. A merged iteration is therefore always single-version —
+      the paper's invariant — but during cross-shard version skew (a
+      deploy landing between shard commits) the hierarchical winner can
+      differ from what a single global filter over all raw results
+      would pick, because a hash that lost its shard-local vote is not
+      visible to the merge;
+    * runs the user's cloud aggregation once, at the router, over the
+      merged accepted set;
+    * emits iterations in order, a single merged ``DeployEvent`` for
+      code replacements, and one terminal ``DoneEvent`` whose status is
+      CANCELLED if any shard cancelled, FAILED if any shard failed,
+      DONE otherwise.
+    """
+
+    def __init__(self, name: str, spec: AssignmentSpec,
+                 expected_shards: Set[str], reply_to: str,
+                 cloud_app: CloudApp):
+        super().__init__(name)
+        self.spec = spec
+        self.expected = set(expected_shards)    # shard node ids
+        self.reply_to = reply_to
+        self.cloud_app = cloud_app
+        self._deploys: Dict[str, DeployEvent] = {}
+        self._iters: Dict[int, Dict[str, IterationEvent]] = {}
+        self._dones: Dict[str, DoneEvent] = {}
+        self._merged_deploy: Optional[DeployEvent] = None
+        self._next_emit = 0                     # next iteration to emit
+
+    def handle(self, sender, msg) -> None:
+        shard = split_addr(sender or "")[1]
+        if shard not in self.expected:
+            return                              # stray/late frame: ignore
+        if isinstance(msg, DeployEvent):
+            self._deploys[shard] = msg
+        elif isinstance(msg, IterationEvent):
+            self._iters.setdefault(msg.iteration, {})[shard] = msg
+        elif isinstance(msg, DoneEvent):
+            self._dones[shard] = msg
+        else:
+            return
+        self._flush()
+
+    # -- merging --------------------------------------------------------------
+    def _shard_settled(self, shard: str, iteration: Dict[str, Any]) -> bool:
+        return shard in iteration or shard in self._dones
+
+    def _flush(self) -> None:
+        if self._merged_deploy is None and self._deploys and all(
+                s in self._deploys or s in self._dones
+                for s in self.expected):
+            self._emit_deploy()
+        while (self._next_emit in self._iters
+               and all(self._shard_settled(s, self._iters[self._next_emit])
+                       for s in self.expected)):
+            self._emit_iteration(self._next_emit,
+                                 self._iters.pop(self._next_emit))
+            self._next_emit += 1
+        if len(self._dones) == len(self.expected):
+            self._emit_done()
+            self.stop()
+
+    def _emit_deploy(self) -> None:
+        n_installed = sum(d.n_installed for d in self._deploys.values())
+        n_targets = sum(d.n_targets for d in self._deploys.values())
+        any_d = next(iter(self._deploys.values()))
+        self._merged_deploy = DeployEvent(
+            self.spec.assignment_id, any_d.slot, any_d.md5, any_d.version,
+            self.spec.target, n_installed=n_installed, n_targets=n_targets)
+        self.send(self.reply_to, self._merged_deploy)
+
+    def _emit_iteration(self, it: int,
+                        got: Dict[str, IterationEvent]) -> None:
+        if not got:
+            return                              # every shard finished early
+        # fleet-wide md5-majority across the shard winners (ties broken by
+        # smallest md5, same rule as consistency.majority_filter)
+        counts: Counter = Counter()
+        for ev in got.values():
+            if ev.winning_md5 is not None:
+                counts[ev.winning_md5] += ev.n_accepted
+        winner = (min(counts.items(), key=lambda kv: (-kv[1], kv[0]))[0]
+                  if counts else None)
+        payloads: List[Any] = []
+        n_accepted = n_dropped = n_stragglers = 0
+        for shard in sorted(got):
+            ev = got[shard]
+            n_stragglers += ev.n_stragglers
+            if winner is not None and ev.winning_md5 == winner:
+                vals = ev.value if isinstance(ev.value, list) else [ev.value]
+                payloads.extend(vals)
+                n_accepted += ev.n_accepted
+                n_dropped += ev.n_dropped
+            else:
+                n_dropped += ev.n_dropped + ev.n_accepted
+        value = self.cloud_app.aggregate(
+            self.spec,
+            [TaggedResult("", it, winner or "", payload=p) for p in payloads])
+        self.send(self.reply_to, IterationEvent(
+            assignment_id=self.spec.assignment_id, iteration=it, value=value,
+            winning_md5=winner, n_accepted=n_accepted, n_dropped=n_dropped,
+            n_stragglers=n_stragglers))
+
+    def _emit_done(self) -> None:
+        statuses = {d.status for d in self._dones.values()}
+        if Status.CANCELLED in statuses:
+            status = Status.CANCELLED
+        elif statuses & {Status.FAILED, Status.TIMEOUT}:
+            status = Status.FAILED
+        else:
+            status = Status.DONE
+        if self._merged_deploy is not None:
+            d = self._merged_deploy
+            detail = (f"{d.n_installed}/{d.n_targets} clients installed "
+                      f"{d.md5}")
+        else:
+            parts = [f"{shard}: {d.detail}"
+                     for shard, d in sorted(self._dones.items()) if d.detail]
+            detail = "; ".join(parts)
+        self.send(self.reply_to,
+                  DoneEvent(self.spec.assignment_id, status, detail=detail))
+
+
+class RouterNode(Actor):
+    """Thin front for *k* ``CloudNode`` shards (the horizontally scaled
+    cloud). Clients register here and are assigned to a shard by
+    consistent hashing on ``client_id``; shards own disjoint peer tables
+    and dial their clients directly, so the router never touches task
+    traffic — only registrations, submissions, and cancellations.
+
+    Submissions fan out to every shard that owns targeted clients (spec
+    narrowed to that shard's clients, ``cloud_method`` stripped so
+    aggregation happens once, at the router) and a per-assignment
+    ``ShardAggregator`` merges the shard streams back into the handle's
+    event stream — the control-plane API is byte-for-byte the same as
+    the unsharded topology.
+
+    Cloud-target code replacements install into the *router's*
+    ``CloudApp``, which is the single place user aggregation runs in a
+    sharded fleet.
+    """
+
+    def __init__(self, name: str, shard_addrs: Dict[str, str],
+                 cloud_app: CloudApp, vnodes: int = 64):
+        super().__init__(name)
+        self.shard_addrs = dict(shard_addrs)   # shard node id -> cloud addr
+        self.cloud_app = cloud_app
+        self.ring = ShardRing(self.shard_addrs, vnodes=vnodes)
+        self.clients: Dict[str, str] = {}      # client_id -> shard node id
+        self._agg_seq = 0
+        self._assignment_shards: Dict[str, List[str]] = {}
+        self._aggregators: Dict[str, Tuple[str, str]] = {}  # actor -> (asg, sink)
+
+    # -- readiness polling (plain len() reads are thread-safe) -----------------
+    @property
+    def n_clients(self) -> int:
+        return len(self.clients)
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.shard_addrs)
+
+    # -- message loop -----------------------------------------------------------
+    def handle(self, sender, msg) -> None:
+        if isinstance(msg, RegisterShard):
+            my_node = (self._system.node if self._system is not None
+                       else None)
+            if msg.endpoint and my_node is not None:
+                my_node.transport.add_peer(msg.shard_id, msg.endpoint)
+            self.shard_addrs[msg.shard_id] = msg.cloud_addr
+            self.ring.add(msg.shard_id)
+        elif isinstance(msg, RegisterClient):
+            shard = self.ring.lookup(msg.client_id)
+            if shard is None:
+                return                      # no shards yet: client retries
+            self.clients[msg.client_id] = shard
+            self.send(self.shard_addrs[shard], msg)   # shard acks the client
+        elif isinstance(msg, Evicted):
+            self.clients.pop(msg.client_id, None)
+        elif isinstance(msg, SubmitAssignment):
+            self._submit(msg)
+        elif isinstance(msg, CancelAssignment):
+            for addr in self._assignment_shards.get(
+                    msg.assignment_id, list(self.shard_addrs.values())):
+                self.send(addr, msg)
+        elif isinstance(msg, Down):
+            entry = self._aggregators.pop(msg.actor, None)
+            if entry is not None:
+                asg, sink = entry
+                self._assignment_shards.pop(asg, None)
+                if msg.reason is not None:
+                    self.send(sink, DoneEvent(
+                        asg, Status.FAILED,
+                        detail=f"aggregator crash: {msg.reason}"))
+
+    # -- fan-out ------------------------------------------------------------------
+    def _submit(self, msg: SubmitAssignment) -> None:
+        spec = msg.spec
+        if spec.kind == AssignmentKind.CODE_REPLACEMENT \
+                and spec.target in (Target.CLOUD, Target.BOTH):
+            assert spec.code is not None
+            self.cloud_app.install(spec.code)
+            if spec.target == Target.CLOUD:
+                for ev in _cloud_deploy_events(spec):
+                    self.send(msg.reply_to, ev)
+                return
+        targets = list(spec.client_ids) or list(self.clients)
+        groups: Dict[str, List[str]] = {}
+        for cid in targets:
+            shard = self.clients.get(cid)
+            if shard is not None:
+                groups.setdefault(shard, []).append(cid)
+        if spec.kind == AssignmentKind.CODE_REPLACEMENT \
+                and not spec.client_ids:
+            # fleet-wide deploy: include shards owning no clients right
+            # now, so they too record the module and can catch up clients
+            # that join them later (their handler reports a vacuous 0/0)
+            for shard in self.shard_addrs:
+                groups.setdefault(shard, [])
+        if not groups:
+            self.send(msg.reply_to, DoneEvent(
+                spec.assignment_id, Status.FAILED, detail="no clients"))
+            return
+        self._agg_seq += 1
+        agg_name = f"{self.name}.agg{self._agg_seq}"
+        agg = ShardAggregator(agg_name, spec, set(groups), msg.reply_to,
+                              self.cloud_app)
+        assert self._system is not None
+        self._system.spawn(agg)
+        self._system.monitor(self.name, agg_name)
+        self._aggregators[agg_name] = (spec.assignment_id, msg.reply_to)
+        agg_addr = (self._system.node.address(agg_name)
+                    if self._system.node is not None else agg_name)
+        # shards report raw accepted payloads; the router aggregates once
+        shard_params = {k: v for k, v in spec.params.items()
+                        if k != "cloud_method"}
+        self._assignment_shards[spec.assignment_id] = [
+            self.shard_addrs[s] for s in groups]
+        for shard, cids in groups.items():
+            sub = replace(spec, client_ids=tuple(cids), params=shard_params)
+            self.send(self.shard_addrs[shard], SubmitAssignment(sub, agg_addr))
 
 
 # ---------------------------------------------------------------------------
@@ -842,6 +1501,16 @@ class UserFrontend:
                          client_ids: Sequence[str] = (),
                          params: Optional[Dict[str, Any]] = None
                          ) -> AssignmentHandle:
+        """Submit an iterative analytics assignment to the fleet (or the
+        ``client_ids`` subset) and return its live handle.
+
+        ``method`` is a built-in (``mean``, ``variance``, ...) or the
+        slot name of previously deployed active code. Notable ``params``
+        keys: ``n_values`` (window size per iteration), ``cloud_method``
+        (server-side aggregation slot/built-in over the per-client
+        values), ``straggler_grace_s`` (per-iteration deadline once
+        quorum is reachable).
+        """
         p = dict(params or {})
         p.setdefault("code_user", self.user_id)
         spec = AssignmentSpec.new(
@@ -855,10 +1524,11 @@ class UserFrontend:
 
 @dataclass
 class Fleet:
-    """An OODIDA deployment: one user node + one cloud node + n client
-    nodes, every pair connected only by a byte-moving transport.
+    """An OODIDA deployment: one user node, a server side (one cloud
+    node, or a router fronting *k* cloud-node shards), and n client
+    nodes — every pair connected only by a byte-moving transport.
 
-    Topologies (``Fleet.create(..., topology=...)``):
+    Topologies (``Fleet.create(..., topology=..., shards=...)``):
 
     * ``"inproc"`` (default) — every node lives in this process on an
       ``InProcHub``; messages still encode/decode, so the codec layer is
@@ -866,28 +1536,59 @@ class Fleet:
     * ``"tcp"`` — each client node is a **spawned child process** talking
       length-prefixed frames over TCP (see ``repro.launch.fleet_proc``);
       ``client_apps`` is empty in that topology (client state is remote,
-      exactly like production).
+      exactly like production);
+    * ``shards=k`` (either topology) — k ``CloudNode`` shards behind a
+      ``RouterNode``; clients are partitioned by consistent hashing on
+      ``client_id`` and the handle API is unchanged. Under ``"tcp"``
+      each shard is itself a spawned child process.
+
+    Churn knobs: ``heartbeat_interval_s`` makes clients heartbeat their
+    owning cloud/shard; ``eviction_timeout_s`` makes cloud nodes evict
+    clients whose heartbeats stop (departed clients become permanent
+    stragglers for in-flight assignments, and a returning client
+    re-registers and catches up on deployed code).
     """
 
     user_node: Node
-    cloud_node: Node
-    cloud_addr: str                    # cloud actor address ("cloud@cloud")
+    cloud_node: Node       # server-side entry node (the router when sharded)
+    cloud_addr: str        # entry actor address ("cloud@cloud" / "router@router")
     cloud_app: Optional[CloudApp]
     client_apps: Dict[str, ClientApp]
     client_nodes: List[Node] = field(default_factory=list)
     client_addrs: Dict[str, str] = field(default_factory=dict)
     hub: Optional[InProcHub] = None
-    procs: List[Any] = field(default_factory=list)   # child processes (tcp)
+    procs: List[Any] = field(default_factory=list)   # client processes (tcp)
     topology: str = "inproc"
+    shards: int = 1
+    shard_nodes: List[Node] = field(default_factory=list)     # in-proc shards
+    shard_addrs: Dict[str, str] = field(default_factory=dict)  # node id -> addr
+    shard_procs: List[Any] = field(default_factory=list)      # shard processes
+    server: Optional[Actor] = None     # CloudNode/RouterNode actor (if local)
+    shard_clouds: List[Any] = field(default_factory=list)     # CloudNode actors
 
     @staticmethod
-    def create(n_clients: int, *, topology: str = "inproc", seed: int = 0,
+    def create(n_clients: int, *, topology: str = "inproc", shards: int = 1,
+               seed: int = 0,
                policy: Optional[QuorumPolicy] = None,
                slot_specs: Sequence[SlotSpec] = (),
                data_per_client: int = 4096,
                delay_fns: Optional[Dict[str, Callable]] = None,
                store_root: Optional[str] = None,
-               max_concurrent_assignments: Optional[int] = None) -> "Fleet":
+               max_concurrent_assignments: Optional[int] = None,
+               heartbeat_interval_s: Optional[float] = None,
+               eviction_timeout_s: Optional[float] = None) -> "Fleet":
+        """Build and start a fleet; see the class docstring for the
+        topology/sharding/churn knobs. Returns only when every client
+        is registered and targetable."""
+        if shards < 1:
+            raise ValueError(f"shards must be >= 1, got {shards}")
+        if eviction_timeout_s is not None and (
+                heartbeat_interval_s is None
+                or heartbeat_interval_s >= eviction_timeout_s):
+            raise ValueError(
+                "eviction_timeout_s requires heartbeat_interval_s smaller "
+                "than the timeout (clients must beat faster than they are "
+                "evicted)")
         if topology == "tcp":
             if slot_specs or delay_fns:
                 raise ValueError(
@@ -896,67 +1597,146 @@ class Fleet:
                     "boundary — configure clients via fleet_proc instead")
             from repro.launch.fleet_proc import spawn_tcp_fleet
             return spawn_tcp_fleet(
-                n_clients, seed=seed, policy=policy,
+                n_clients, shards=shards, seed=seed, policy=policy,
                 data_per_client=data_per_client, store_root=store_root,
-                max_concurrent_assignments=max_concurrent_assignments)
+                max_concurrent_assignments=max_concurrent_assignments,
+                heartbeat_interval_s=heartbeat_interval_s,
+                eviction_timeout_s=eviction_timeout_s)
         if topology != "inproc":
             raise ValueError(f"unknown topology {topology!r}")
 
         rng = np.random.default_rng(seed)
         hub = InProcHub()
         user_node = Node("user", InProcTransport(hub))
-        cloud_node = Node("cloud", InProcTransport(hub))
-        client_nodes: List[Node] = []
-        client_addrs: Dict[str, str] = {}
-        client_apps: Dict[str, ClientApp] = {}
-        for i in range(n_clients):
-            cid = f"c{i:03d}"
+
+        def make_registry(owner: str) -> ActiveCodeRegistry:
             reg = ActiveCodeRegistry(
-                store_root=f"{store_root}/{cid}" if store_root else None)
+                store_root=f"{store_root}/{owner}" if store_root else None)
             for s in slot_specs:
                 reg.declare_slot(s)
-            app = ClientApp(
+            return reg
+
+        def make_app(i: int) -> ClientApp:
+            cid = f"c{i:03d}"
+            return ClientApp(
                 cid,
-                data=rng.normal(loc=float(i), scale=1.0, size=data_per_client),
-                registry=reg,
+                data=rng.normal(loc=float(i), scale=1.0,
+                                size=data_per_client),
+                registry=make_registry(cid),
                 delay_fn=(delay_fns or {}).get(cid),
             )
+
+        if shards == 1:
+            # single cloud node; client addresses are deterministic, so the
+            # cloud's peer table is pre-populated and the RegisterClient
+            # handshake (still performed) is a no-op re-registration
+            client_addrs = {f"c{i:03d}": make_addr(f"client.c{i:03d}",
+                                                   f"c{i:03d}")
+                            for i in range(n_clients)}
+            cloud_node = Node("cloud", InProcTransport(hub))
+            cloud_app = CloudApp(make_registry("cloud"))
+            cloud = CloudNode(
+                "cloud", client_addrs, cloud_app, policy or QuorumPolicy(),
+                max_concurrent_assignments=max_concurrent_assignments,
+                heartbeat_timeout_s=eviction_timeout_s)
+            cloud_node.spawn(cloud)
+            entry_node, entry_addr = cloud_node, cloud_node.address("cloud")
+            server: Actor = cloud
+            shard_nodes: List[Node] = []
+            shard_addrs: Dict[str, str] = {}
+            shard_clouds: List[Any] = []
+        else:
+            # router + k shards; clients join through the router and are
+            # partitioned onto shards by the consistent-hash ring
+            router_node = Node("router", InProcTransport(hub))
+            router_addr = router_node.address("router")
+            cloud_app = CloudApp(make_registry("router"))
+            shard_nodes, shard_addrs, shard_clouds = [], {}, []
+            for j in range(shards):
+                sid = f"shard{j}"
+                snode = Node(sid, InProcTransport(hub))
+                scloud = CloudNode(
+                    "cloud", {}, CloudApp(make_registry(sid)),
+                    policy or QuorumPolicy(),
+                    max_concurrent_assignments=max_concurrent_assignments,
+                    heartbeat_timeout_s=eviction_timeout_s,
+                    router_addr=router_addr)
+                snode.spawn(scloud)
+                shard_nodes.append(snode)
+                shard_addrs[sid] = snode.address("cloud")
+                shard_clouds.append(scloud)
+            router = RouterNode("router", shard_addrs, cloud_app)
+            router_node.spawn(router)
+            entry_node, entry_addr = router_node, router_addr
+            server = router
+            client_addrs = {}
+
+        client_nodes: List[Node] = []
+        client_apps: Dict[str, ClientApp] = {}
+        for i in range(n_clients):
+            app = make_app(i)
+            cid = app.client_id
             cnode = Node(cid, InProcTransport(hub))
-            actor = ClientNode(f"client.{cid}", app)
+            actor = ClientNode(f"client.{cid}", app,
+                               register_with=entry_addr,
+                               heartbeat_interval_s=heartbeat_interval_s)
             cnode.spawn(actor)
             client_nodes.append(cnode)
             client_addrs[cid] = cnode.address(actor.name)
             client_apps[cid] = app
-        cloud_reg = ActiveCodeRegistry(
-            store_root=f"{store_root}/cloud" if store_root else None)
-        for s in slot_specs:
-            cloud_reg.declare_slot(s)
-        cloud_app = CloudApp(cloud_reg)
-        cloud = CloudNode("cloud", client_addrs, cloud_app,
-                          policy or QuorumPolicy(),
-                          max_concurrent_assignments=max_concurrent_assignments)
-        cloud_node.spawn(cloud)
-        return Fleet(user_node=user_node, cloud_node=cloud_node,
-                     cloud_addr=cloud_node.address(cloud.name),
+
+        if shards > 1:
+            # registrations propagate asynchronously through the router;
+            # wait until every shard owns its clients before returning
+            deadline = time.time() + 15.0
+            while (server.n_clients < n_clients
+                   or sum(c.n_clients for c in shard_clouds) < n_clients):
+                if time.time() > deadline:
+                    raise TimeoutError(
+                        f"only {server.n_clients}/{n_clients} clients "
+                        f"registered across {shards} shards within 15s")
+                time.sleep(0.002)
+
+        return Fleet(user_node=user_node, cloud_node=entry_node,
+                     cloud_addr=entry_addr,
                      cloud_app=cloud_app, client_apps=client_apps,
                      client_nodes=client_nodes, client_addrs=client_addrs,
-                     hub=hub, topology="inproc")
+                     hub=hub, topology="inproc", shards=shards,
+                     shard_nodes=shard_nodes, shard_addrs=shard_addrs,
+                     server=server, shard_clouds=shard_clouds)
 
     def frontend(self, user_id: str,
                  slot_specs: Sequence[SlotSpec] = ()) -> UserFrontend:
+        """Create an analyst frontend bound to this fleet's server-side
+        entry point (the cloud node, or the router when sharded)."""
         return UserFrontend(user_id, self.user_node, self.cloud_addr,
                             slot_specs)
 
     def shutdown(self, timeout: float = 5.0) -> None:
-        # stop remote/child client nodes first (the cloud's transport
-        # knows how to reach them), then the in-process node graph
+        """Stop everything: clients first (their owning shard or the cloud
+        knows how to reach them), then shards, then the local node graph.
+        Idempotent per node — a StopNode to an already-stopped actor just
+        lands in dead letters."""
+        live: Optional[Set[str]] = None
+        if self.server is not None:
+            owned = getattr(self.server, "client_nodes", None)
+            if owned is not None:
+                live = set(owned)
         for cid, addr in self.client_addrs.items():
+            # skip clients the cloud already evicted: over TCP a StopNode
+            # to a dead peer would block shutdown in reconnect backoff
+            if live is not None and cid not in live:
+                continue
             self.cloud_node.route(addr, StopNode())
-        for p in self.procs:
+        for addr in self.shard_addrs.values():
+            self.cloud_node.route(addr, StopNode())
+        for p in list(self.procs) + list(self.shard_procs):
             p.join(timeout=timeout)
             if p.is_alive():
                 p.terminate()
         for n in self.client_nodes:
+            n.close(timeout)
+        for n in self.shard_nodes:
             n.close(timeout)
         self.cloud_node.close(timeout)
         self.user_node.close(timeout)

@@ -24,6 +24,7 @@ so every inter-node message is exercised as bytes on every topology.
 """
 from __future__ import annotations
 
+import random
 import socket
 import struct
 import threading
@@ -167,18 +168,23 @@ class TcpTransport(Transport):
     * outbound connections are cached per peer and serialized by a
       per-peer lock (frames from one node arrive in send order);
     * on a send error the connection is re-established with bounded
-      retries/backoff and the frame is re-sent (reconnect-on-drop);
+      retries and the frame is re-sent (reconnect-on-drop). Retry
+      delays grow exponentially from ``reconnect_delay_s`` up to
+      ``reconnect_max_delay_s``, with jitter so a fleet of clients
+      re-dialling a restarted peer does not stampede it in lockstep;
     * inbound: an accept loop plus one reader thread per connection.
     """
 
     def __init__(self, host: str = "127.0.0.1", port: int = 0, *,
                  reconnect_attempts: int = 20,
                  reconnect_delay_s: float = 0.05,
+                 reconnect_max_delay_s: float = 2.0,
                  connect_timeout_s: float = 5.0):
         self._host = host
         self._requested_port = port
         self._reconnect_attempts = reconnect_attempts
         self._reconnect_delay_s = reconnect_delay_s
+        self._reconnect_max_delay_s = reconnect_max_delay_s
         self._connect_timeout_s = connect_timeout_s
         self._deliver: Optional[Callable[[bytes], None]] = None
         self._server: Optional[socket.socket] = None
@@ -247,6 +253,15 @@ class TcpTransport(Transport):
                 pass
 
     # -- outbound -----------------------------------------------------------
+    def _backoff_delay(self, attempt: int) -> float:
+        """Capped exponential backoff with jitter: the ceiling doubles per
+        attempt up to ``reconnect_max_delay_s``, and the actual sleep is
+        drawn uniformly from the upper half of that window so concurrent
+        reconnecting clients decorrelate instead of retrying in phase."""
+        ceiling = min(self._reconnect_max_delay_s,
+                      self._reconnect_delay_s * (2 ** attempt))
+        return ceiling * random.uniform(0.5, 1.0)
+
     def _connect(self, dest_node: str) -> socket.socket:
         with self._lock:
             peer = self._peers.get(dest_node)
@@ -265,7 +280,8 @@ class TcpTransport(Transport):
                 return sock
             except OSError as e:
                 last = e
-                time.sleep(self._reconnect_delay_s * (1 + attempt))
+                if attempt < self._reconnect_attempts - 1:
+                    time.sleep(self._backoff_delay(attempt))
         raise TransportError(
             f"{self.node_id}: cannot connect to {dest_node!r} at "
             f"{peer[0]}:{peer[1]} after {self._reconnect_attempts} "

@@ -1,19 +1,22 @@
 """Multi-process OODIDA fleet launcher: real processes, real sockets.
 
 The paper's deployment is one Erlang node per machine; this launcher is
-the closest a laptop gets: the user frontend and cloud node stay in the
-calling process, and **every client node is a spawned child process**
-speaking length-prefixed TCP frames to the cloud. Nothing is shared —
-code modules, tasks, and results exist on a client only after crossing
-the wire, exactly like production.
+the closest a laptop gets: the user frontend (and the router, when
+sharded) stay in the calling process, and **every client node — and
+every CloudNode shard — is a spawned child process** speaking
+length-prefixed TCP frames. Nothing is shared — code modules, tasks,
+and results exist on a client only after crossing the wire, exactly
+like production.
 
 Two entry points:
 
-* ``spawn_tcp_fleet(n)`` — programmatic; what
-  ``Fleet.create(n, topology="tcp")`` calls;
-* ``python -m repro.launch.fleet_proc --clients 3`` — CLI smoke: one
-  deploy -> iterate -> redeploy -> rollback round across child
-  processes, exit code 0 on success (the CI job).
+* ``spawn_tcp_fleet(n, shards=k)`` — programmatic; what
+  ``Fleet.create(n, topology="tcp", shards=k)`` calls;
+* ``python -m repro.launch.fleet_proc --clients 4 --shards 2 --churn``
+  — CLI smoke: one deploy -> iterate -> redeploy -> rollback round
+  across child processes, optionally killing one client mid-run to
+  exercise eviction + straggler handling; exit code 0 on success (the
+  CI jobs).
 
 Children are started with the multiprocessing *spawn* context (never
 fork: the parent runs dozens of actor threads) and are daemonic, so an
@@ -26,19 +29,21 @@ import multiprocessing as mp
 import sys
 import threading
 import time
-from typing import Any, Dict, Optional
+from typing import Any, Dict, List, Optional
 
 # ---------------------------------------------------------------------------
-# Child process entry point
+# Child process entry points
 # ---------------------------------------------------------------------------
 
 
 def _client_main(cfg: Dict[str, Any]) -> None:
-    """Runs inside the spawned client process: build the client app,
-    listen on TCP, register with the cloud, serve tasks until StopNode."""
+    """Runs inside a spawned client process: build the client app, listen
+    on TCP, register (the ClientNode actor does the handshake and, if
+    configured, heartbeats its owning cloud/shard), serve tasks until
+    StopNode."""
     import numpy as np
 
-    from repro.core.fleet import ClientApp, ClientNode, RegisterClient
+    from repro.core.fleet import ClientApp, ClientNode
     from repro.core.registry import ActiveCodeRegistry
     from repro.core.transport import Node, TcpTransport
 
@@ -52,12 +57,41 @@ def _client_main(cfg: Dict[str, Any]) -> None:
     transport.add_peer(cfg["cloud_node_id"], cfg["cloud_endpoint"])
 
     stop = threading.Event()
-    actor = ClientNode(f"client.{cfg['client_id']}", app, stop_event=stop)
+    actor = ClientNode(
+        f"client.{cfg['client_id']}", app, stop_event=stop,
+        register_with=cfg["cloud_addr"],
+        endpoint=transport.endpoint,
+        heartbeat_interval_s=cfg.get("heartbeat_interval_s"))
     node.spawn(actor)
-    node.route(cfg["cloud_addr"],
-               RegisterClient(cfg["client_id"], cfg["node_id"],
-                              transport.endpoint),
-               sender=actor.name)
+    stop.wait()
+    node.close()
+
+
+def _shard_main(cfg: Dict[str, Any]) -> None:
+    """Runs inside a spawned shard process: one CloudNode shard that
+    announces itself to the router, owns the clients the ring assigns it,
+    and evicts the ones whose heartbeats stop."""
+    from repro.core.fleet import CloudApp, CloudNode, RegisterShard
+    from repro.core.registry import ActiveCodeRegistry
+    from repro.core.transport import Node, TcpTransport
+
+    registry = ActiveCodeRegistry(store_root=cfg.get("store_root"))
+    transport = TcpTransport()
+    node = Node(cfg["shard_id"], transport)
+    transport.add_peer(cfg["router_node_id"], cfg["router_endpoint"])
+
+    stop = threading.Event()
+    cloud = CloudNode(
+        "cloud", {}, CloudApp(registry), cfg["policy"],
+        max_concurrent_assignments=cfg.get("max_concurrent_assignments"),
+        heartbeat_timeout_s=cfg.get("eviction_timeout_s"),
+        router_addr=cfg["router_addr"],
+        stop_event=stop)
+    node.spawn(cloud)
+    node.route(cfg["router_addr"],
+               RegisterShard(cfg["shard_id"], node.address("cloud"),
+                             transport.endpoint),
+               sender="cloud")
     stop.wait()
     node.close()
 
@@ -67,38 +101,98 @@ def _client_main(cfg: Dict[str, Any]) -> None:
 # ---------------------------------------------------------------------------
 
 
-def spawn_tcp_fleet(n_clients: int, *, seed: int = 0,
+def _fail_fast(procs: List[Any], nodes: List[Any], why: str,
+               exc: type = RuntimeError) -> None:
+    """Startup failed: reap every child, close the parent-side nodes,
+    raise. The single teardown path for all launcher failure modes."""
+    for p in procs:
+        p.terminate()
+    for n in nodes:
+        n.close()
+    raise exc(why)
+
+
+def spawn_tcp_fleet(n_clients: int, *, shards: int = 1, seed: int = 0,
                     policy: Optional[Any] = None,
                     data_per_client: int = 4096,
                     store_root: Optional[str] = None,
                     max_concurrent_assignments: Optional[int] = None,
+                    heartbeat_interval_s: Optional[float] = None,
+                    eviction_timeout_s: Optional[float] = None,
                     ready_timeout_s: float = 120.0):
-    """Build a ``Fleet`` whose client nodes are child processes on TCP.
+    """Build a ``Fleet`` whose client nodes — and, for ``shards > 1``,
+    whose CloudNode shards — are child processes on TCP.
 
-    Blocks until all clients complete the ``RegisterClient`` handshake
+    Blocks until every shard has completed the ``RegisterShard``
+    handshake and every client the ``RegisterClient`` handshake
     (children pay their interpreter + jax import on this path) or raises
     ``TimeoutError`` after ``ready_timeout_s``, cleaning up the children.
     """
     from repro.core.consistency import QuorumPolicy
-    from repro.core.fleet import CloudApp, CloudNode, Fleet
+    from repro.core.fleet import CloudApp, CloudNode, Fleet, RouterNode
     from repro.core.registry import ActiveCodeRegistry
     from repro.core.transport import Node, TcpTransport
 
+    policy = policy or QuorumPolicy()
+    ctx = mp.get_context("spawn")
+
     user_transport = TcpTransport()
     user_node = Node("user", user_transport)
-    cloud_transport = TcpTransport()
-    cloud_node = Node("cloud", cloud_transport)
-    user_transport.add_peer("cloud", cloud_transport.endpoint)
-    cloud_transport.add_peer("user", user_transport.endpoint)
 
-    cloud_reg = ActiveCodeRegistry(
-        store_root=f"{store_root}/cloud" if store_root else None)
-    cloud_app = CloudApp(cloud_reg)
-    cloud = CloudNode("cloud", {}, cloud_app, policy or QuorumPolicy(),
-                      max_concurrent_assignments=max_concurrent_assignments)
-    cloud_node.spawn(cloud)
+    if shards == 1:
+        server_transport = TcpTransport()
+        server_node = Node("cloud", server_transport)
+        cloud_reg = ActiveCodeRegistry(
+            store_root=f"{store_root}/cloud" if store_root else None)
+        cloud_app = CloudApp(cloud_reg)
+        server: Any = CloudNode(
+            "cloud", {}, cloud_app, policy,
+            max_concurrent_assignments=max_concurrent_assignments,
+            heartbeat_timeout_s=eviction_timeout_s)
+        server_node.spawn(server)
+        shard_procs: List[Any] = []
+    else:
+        server_transport = TcpTransport()
+        server_node = Node("router", server_transport)
+        router_reg = ActiveCodeRegistry(
+            store_root=f"{store_root}/router" if store_root else None)
+        cloud_app = CloudApp(router_reg)
+        server = RouterNode("router", {}, cloud_app)
+        server_node.spawn(server)
+        server_addr = server_node.address(server.name)
+        shard_procs = []
+        for j in range(shards):
+            sid = f"shard{j}"
+            cfg = {
+                "shard_id": sid,
+                "router_node_id": server_node.node_id,
+                "router_endpoint": server_transport.endpoint,
+                "router_addr": server_addr,
+                "policy": policy,
+                "max_concurrent_assignments": max_concurrent_assignments,
+                "eviction_timeout_s": eviction_timeout_s,
+                "store_root": f"{store_root}/{sid}" if store_root else None,
+            }
+            p = ctx.Process(target=_shard_main, args=(cfg,), daemon=True,
+                            name=f"fleet-{sid}")
+            p.start()
+            shard_procs.append(p)
+        deadline = time.time() + ready_timeout_s
+        while server.n_shards < shards:
+            if time.time() > deadline:
+                _fail_fast(shard_procs, [server_node, user_node],
+                           f"only {server.n_shards}/{shards} shards "
+                           f"registered within {ready_timeout_s:.0f}s",
+                           exc=TimeoutError)
+            if any(p.exitcode not in (None, 0) for p in shard_procs):
+                _fail_fast(shard_procs, [server_node, user_node],
+                           "a shard process died during startup")
+            time.sleep(0.02)
 
-    ctx = mp.get_context("spawn")
+    server_addr = server_node.address(server.name)
+    user_transport.add_peer(server_node.node_id, server_transport.endpoint)
+    server_transport.add_peer("user", user_transport.endpoint)
+
     procs = []
     for i in range(n_clients):
         cid = f"c{i:03d}"
@@ -109,9 +203,10 @@ def spawn_tcp_fleet(n_clients: int, *, seed: int = 0,
             "loc": float(i),
             "n_values": data_per_client,
             "store_root": f"{store_root}/{cid}" if store_root else None,
-            "cloud_node_id": "cloud",
-            "cloud_endpoint": cloud_transport.endpoint,
-            "cloud_addr": cloud_node.address(cloud.name),
+            "cloud_node_id": server_node.node_id,
+            "cloud_endpoint": server_transport.endpoint,
+            "cloud_addr": server_addr,
+            "heartbeat_interval_s": heartbeat_interval_s,
         }
         p = ctx.Process(target=_client_main, args=(cfg,), daemon=True,
                         name=f"fleet-client-{cid}")
@@ -119,32 +214,30 @@ def spawn_tcp_fleet(n_clients: int, *, seed: int = 0,
         procs.append(p)
 
     deadline = time.time() + ready_timeout_s
-    while cloud.n_clients < n_clients:
+    while server.n_clients < n_clients:
         if time.time() > deadline:
-            for p in procs:
-                p.terminate()
-            cloud_node.close()
-            user_node.close()
-            raise TimeoutError(
-                f"only {cloud.n_clients}/{n_clients} clients registered "
-                f"within {ready_timeout_s:.0f}s")
-        if any(p.exitcode not in (None, 0) for p in procs):
-            for p in procs:
-                p.terminate()
-            cloud_node.close()
-            user_node.close()
-            raise RuntimeError("a client process died during startup")
+            _fail_fast(procs + shard_procs, [server_node, user_node],
+                       f"only {server.n_clients}/{n_clients} clients "
+                       f"registered within {ready_timeout_s:.0f}s",
+                       exc=TimeoutError)
+        if any(p.exitcode not in (None, 0) for p in procs + shard_procs):
+            _fail_fast(procs + shard_procs, [server_node, user_node],
+                       "a child process died during startup")
         time.sleep(0.02)
 
-    return Fleet(user_node=user_node, cloud_node=cloud_node,
-                 cloud_addr=cloud_node.address(cloud.name),
+    client_addrs = (dict(server.client_nodes) if shards == 1 else {})
+    shard_addrs = (dict(server.shard_addrs) if shards > 1 else {})
+    return Fleet(user_node=user_node, cloud_node=server_node,
+                 cloud_addr=server_addr,
                  cloud_app=cloud_app, client_apps={},
-                 client_nodes=[], client_addrs=dict(cloud.client_nodes),
-                 procs=procs, topology="tcp")
+                 client_nodes=[], client_addrs=client_addrs,
+                 procs=procs, topology="tcp", shards=shards,
+                 shard_addrs=shard_addrs, shard_procs=shard_procs,
+                 server=server)
 
 
 # ---------------------------------------------------------------------------
-# CLI smoke: deploy -> iterate -> mid-assignment redeploy -> rollback
+# CLI smoke: deploy -> iterate -> (kill a client) -> redeploy -> rollback
 # ---------------------------------------------------------------------------
 
 _V1 = """
@@ -160,9 +253,11 @@ def run(xs):
 """
 
 
-def run_smoke(n_clients: int = 3, iterations: int = 3,
-              verbose: bool = True) -> int:
-    """One full active-code round over spawned processes; returns 0 on
+def run_smoke(n_clients: int = 3, iterations: int = 3, shards: int = 1,
+              churn: bool = False, verbose: bool = True) -> int:
+    """One full active-code round over spawned processes; with ``churn``
+    a client process is killed mid-run and the fleet must evict it,
+    complete the round, and redeploy to the survivors. Returns 0 on
     success (the CI smoke contract)."""
     from repro.core.assignment import Status
 
@@ -170,8 +265,12 @@ def run_smoke(n_clients: int = 3, iterations: int = 3,
         if verbose:
             print(f"[fleet_proc] {msg}", flush=True)
 
-    fleet = spawn_tcp_fleet(n_clients)
-    say(f"{n_clients} client processes registered")
+    hb, evict = (0.25, 1.5) if churn else (None, None)
+    fleet = spawn_tcp_fleet(n_clients, shards=shards,
+                            heartbeat_interval_s=hb,
+                            eviction_timeout_s=evict)
+    say(f"{n_clients} client processes registered"
+        + (f" across {shards} shard processes" if shards > 1 else ""))
     try:
         fe = fleet.frontend("ci")
         v1 = fe.deploy_code("smoke_mean", _V1)
@@ -188,9 +287,27 @@ def run_smoke(n_clients: int = 3, iterations: int = 3,
         assert all(r.winning_md5 == v1.md5 for r in results)
         say(f"{iterations} iterations committed on v1")
 
+        survivors = n_clients
+        if churn:
+            victim = fleet.procs[0]
+            victim.terminate()
+            victim.join(timeout=10.0)
+            say("killed client c000 mid-run; waiting for eviction")
+            deadline = time.time() + 60.0
+            while fleet.server.n_clients > n_clients - 1:
+                if time.time() > deadline:
+                    raise AssertionError(
+                        f"eviction did not happen: still "
+                        f"{fleet.server.n_clients} clients registered")
+                time.sleep(0.05)
+            survivors = n_clients - 1
+            say(f"c000 evicted; {survivors} clients remain")
+
         v2 = fe.deploy_code("smoke_mean", _V2)
         _, done = v2.result(timeout=120.0)
         assert done.status == Status.DONE, f"redeploy failed: {done.detail}"
+        assert f"{survivors}/{survivors}" in done.detail, done.detail
+        say(f"redeployed v2 to {survivors} survivors")
         rb = v2.rollback()
         _, done = rb.result(timeout=120.0)
         assert done.status == Status.DONE, f"rollback failed: {done.detail}"
@@ -202,6 +319,7 @@ def run_smoke(n_clients: int = 3, iterations: int = 3,
         assert done.status == Status.DONE
         assert results[0].winning_md5 == v1.md5, \
             "post-rollback iteration did not run v1"
+        assert results[0].n_accepted == survivors
         say("redeploy + rollback verified across processes: PASS")
         return 0
     finally:
@@ -211,11 +329,16 @@ def run_smoke(n_clients: int = 3, iterations: int = 3,
 def main(argv: Optional[list] = None) -> int:
     ap = argparse.ArgumentParser(
         description="Spawn a multi-process TCP fleet and run one "
-                    "deploy -> iterate -> redeploy -> rollback round.")
+                    "deploy -> iterate -> redeploy -> rollback round; "
+                    "--shards puts a router in front of k CloudNode shard "
+                    "processes, --churn kills a client mid-run.")
     ap.add_argument("--clients", type=int, default=3)
     ap.add_argument("--iterations", type=int, default=3)
+    ap.add_argument("--shards", type=int, default=1)
+    ap.add_argument("--churn", action="store_true")
     args = ap.parse_args(argv)
-    return run_smoke(args.clients, args.iterations)
+    return run_smoke(args.clients, args.iterations, shards=args.shards,
+                     churn=args.churn)
 
 
 if __name__ == "__main__":

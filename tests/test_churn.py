@@ -1,0 +1,222 @@
+"""Client churn: heartbeats, eviction, permanent stragglers, and
+idempotent re-registration with module catch-up — the behaviour the
+platform needs for a fleet of reference vehicles that come and go."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import Status
+from repro.core.fleet import (
+    ClientApp,
+    ClientNode,
+    Fleet,
+)
+from repro.core.registry import ActiveCodeRegistry
+from repro.core.transport import InProcTransport, Node
+
+V1 = """
+import jax.numpy as jnp
+def run(xs):
+    return jnp.mean(xs) * 2.0
+"""
+
+
+def _wait(predicate, timeout=10.0, interval=0.01):
+    deadline = time.time() + timeout
+    while not predicate():
+        if time.time() > deadline:
+            return False
+        time.sleep(interval)
+    return True
+
+
+def test_create_rejects_eviction_without_heartbeats():
+    with pytest.raises(ValueError, match="heartbeat_interval_s"):
+        Fleet.create(2, eviction_timeout_s=1.0)
+    with pytest.raises(ValueError, match="heartbeat_interval_s"):
+        Fleet.create(2, heartbeat_interval_s=2.0, eviction_timeout_s=1.0)
+
+
+def test_killed_client_straggles_then_is_evicted_round_completes():
+    """A client dying mid-assignment costs at most one deadline: the
+    iteration it straggles commits anyway, eviction then marks it a
+    permanent straggler, and later iterations neither target nor wait
+    for it."""
+    fleet = Fleet.create(4, shards=2, seed=3,
+                         heartbeat_interval_s=0.05, eviction_timeout_s=0.3)
+    try:
+        fe = fleet.frontend("u1")
+        v1 = fe.deploy_code("t_mean", V1)
+        _, done = v1.result(timeout=30.0)
+        assert done.status == Status.DONE and "4/4" in done.detail
+
+        handle = fe.submit_analytics(
+            "t_mean", iterations=8,
+            params={"n_values": 16, "straggler_grace_s": 0.15})
+        stream = handle.events()
+        first = next(stream)
+        assert first.n_accepted == 4
+
+        # "kill the process": its node drops off the hub, so tasks to it
+        # black-hole and its heartbeats stop
+        fleet.client_nodes[0].close(2.0)
+
+        results, done = handle.result(timeout=60.0)
+        assert done.status == Status.DONE
+        assert len(results) == 8                      # the round completed
+        assert any(r.n_stragglers == 1 for r in results)   # pre-eviction
+        assert results[-1].n_accepted == 3
+        assert results[-1].n_stragglers == 0          # permanent straggler:
+        assert results[-1].n_dropped == 0             # not even targeted
+    finally:
+        fleet.shutdown()
+
+
+def test_eviction_after_missed_heartbeats_updates_shard_and_router():
+    fleet = Fleet.create(4, shards=2, seed=5,
+                         heartbeat_interval_s=0.05, eviction_timeout_s=0.3)
+    try:
+        victim = "c000"
+        owner = next(c for c in fleet.shard_clouds
+                     if victim in c.client_nodes)
+        before = owner.n_clients
+        fleet.client_nodes[0].close(2.0)              # heartbeats stop
+        assert _wait(lambda: victim not in owner.client_nodes)
+        assert owner.n_clients == before - 1
+        assert _wait(lambda: fleet.server.n_clients == 3)
+    finally:
+        fleet.shutdown()
+
+
+def test_reconnecting_client_catches_up_on_deployed_module():
+    """A client that re-registers after a drop (same client_id, fresh
+    process => empty registry) receives the currently deployed module in
+    the RegisterAck and can serve the custom method immediately."""
+    fleet = Fleet.create(4, shards=2, seed=7,
+                         heartbeat_interval_s=0.05, eviction_timeout_s=0.3)
+    rejoined = None
+    try:
+        fe = fleet.frontend("u1")
+        v1 = fe.deploy_code("t_mean", V1)
+        _, done = v1.result(timeout=30.0)
+        assert done.status == Status.DONE
+
+        # the "process" restarts: same client_id, brand-new node id and a
+        # completely empty registry
+        fleet.client_nodes[0].close(2.0)
+        assert _wait(lambda: fleet.server.n_clients == 3)
+
+        app = ClientApp("c000", data=np.ones(256),
+                        registry=ActiveCodeRegistry())
+        rejoined = Node("c000-reborn", InProcTransport(fleet.hub))
+        actor = ClientNode("client.c000", app,
+                           register_with=fleet.cloud_addr,
+                           heartbeat_interval_s=0.05)
+        rejoined.spawn(actor)
+
+        assert _wait(lambda: fleet.server.n_clients == 4)
+        assert _wait(
+            lambda: app.registry.resolve("u1", "t_mean") is not None)
+        got = app.registry.resolve("u1", "t_mean")
+        assert got.md5 == v1.md5 and got.version == v1.version
+
+        # and it serves tasks again, fleet-wide rounds are back to 4
+        results, done = fe.submit_analytics(
+            "t_mean", iterations=1,
+            params={"n_values": 16}).result(timeout=30.0)
+        assert done.status == Status.DONE
+        assert results[0].n_accepted == 4
+    finally:
+        if rejoined is not None:
+            rejoined.close(2.0)
+        fleet.shutdown()
+
+
+def test_fleet_wide_deploy_reaches_empty_shards_for_catchup():
+    """A shard whose clients all departed still records a fleet-wide
+    deployment (vacuous 0/0 install), so a client that later joins that
+    shard catches up via RegisterAck."""
+    fleet = Fleet.create(4, shards=2, seed=11,
+                         heartbeat_interval_s=0.05, eviction_timeout_s=0.3)
+    rejoined = None
+    try:
+        fe = fleet.frontend("u1")
+        victim_shard = next(c for c in fleet.shard_clouds if c.client_nodes)
+        victims = sorted(victim_shard.client_nodes)
+        for cid in victims:
+            fleet.client_nodes[int(cid[1:])].close(2.0)
+        assert _wait(lambda: victim_shard.n_clients == 0)
+        survivors = 4 - len(victims)
+
+        v1 = fe.deploy_code("t_mean", V1)        # deploy into the hole
+        _, done = v1.result(timeout=30.0)
+        assert done.status == Status.DONE
+        assert f"{survivors}/{survivors}" in done.detail
+
+        # a client rejoins the emptied shard: catch-up must deliver v1
+        cid = victims[0]
+        app = ClientApp(cid, data=np.ones(64),
+                        registry=ActiveCodeRegistry())
+        rejoined = Node(f"{cid}-reborn", InProcTransport(fleet.hub))
+        rejoined.spawn(ClientNode(f"client.{cid}", app,
+                                  register_with=fleet.cloud_addr,
+                                  heartbeat_interval_s=0.05))
+        assert _wait(
+            lambda: app.registry.resolve("u1", "t_mean") is not None)
+        assert app.registry.resolve("u1", "t_mean").md5 == v1.md5
+    finally:
+        if rejoined is not None:
+            rejoined.close(2.0)
+        fleet.shutdown()
+
+
+def test_heartbeat_from_unknown_client_triggers_reregistration():
+    """A shard that gets a heartbeat from a client it does not know
+    (evicted while the client was merely slow, or the shard restarted)
+    answers Evicted, and the client heals itself by re-registering."""
+    fleet = Fleet.create(2, seed=1, heartbeat_interval_s=0.05,
+                         eviction_timeout_s=0.4)
+    try:
+        cloud = fleet.server
+        assert _wait(lambda: cloud.n_clients == 2)
+        # forge the failure mode: the cloud forgets c001 without the
+        # client ever noticing (e.g. a cloud-side restart)
+        cloud.client_nodes.pop("c001", None)
+        cloud._last_seen.pop("c001", None)
+        # the client's next heartbeat draws an Evicted -> it re-registers
+        assert _wait(lambda: "c001" in cloud.client_nodes, timeout=5.0)
+    finally:
+        fleet.shutdown()
+
+
+def test_unsharded_fleet_supports_churn_too():
+    """Eviction + permanent-straggler handling is a CloudNode property,
+    not a router property: a plain 1-cloud fleet behaves the same."""
+    fleet = Fleet.create(3, seed=9, heartbeat_interval_s=0.05,
+                         eviction_timeout_s=0.3)
+    try:
+        fe = fleet.frontend("u1")
+        handle = fe.submit_analytics(
+            "mean", iterations=6,
+            params={"n_values": 16, "straggler_grace_s": 0.15})
+        next(handle.events())
+        fleet.client_nodes[-1].close(2.0)
+        results, done = handle.result(timeout=60.0)
+        assert done.status == Status.DONE and len(results) == 6
+        assert results[-1].n_accepted == 2
+        assert results[-1].n_stragglers == 0
+        assert _wait(lambda: fleet.server.n_clients == 2)
+    finally:
+        fleet.shutdown()
+
+
+@pytest.mark.slow
+def test_tcp_sharded_churn_scenario():
+    """The acceptance scenario over real processes: 2 shard processes x
+    4 client processes, deploy -> iterate -> kill one client -> evict ->
+    redeploy to survivors -> rollback."""
+    from repro.launch.fleet_proc import run_smoke
+
+    assert run_smoke(n_clients=4, iterations=3, shards=2, churn=True,
+                     verbose=False) == 0

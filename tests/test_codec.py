@@ -21,8 +21,12 @@ from repro.core.consistency import TaggedResult
 from repro.core.fleet import (
     CancelAssignment,
     Deadline,
+    Evicted,
+    Heartbeat,
     NewTask,
+    RegisterAck,
     RegisterClient,
+    RegisterShard,
     StopNode,
     SubmitAssignment,
     TaskDone,
@@ -61,6 +65,12 @@ def _examples():
                                                     compute_ms=0.7)),
         "deadline": Deadline(7),
         "register_client": RegisterClient("c000", "c000", "127.0.0.1:4711"),
+        "register_ack": RegisterAck("c000", "cloud@shard0", "127.0.0.1:4712",
+                                    modules=(_module(),)),
+        "register_shard": RegisterShard("shard0", "cloud@shard0",
+                                        "127.0.0.1:4712"),
+        "heartbeat": Heartbeat("c000", "c000"),
+        "evicted": Evicted("c000", "no heartbeat for 1.20s"),
         "stop_node": StopNode(),
         "iteration": IterationEvent("asg-1", 3, [1.5, 2.0], "ab" * 16,
                                     4, 1, 0),

@@ -1,0 +1,65 @@
+"""The docs tree stays honest: docs/protocol.md must document exactly
+the message tags registered in core/codec.py, and docs/architecture.md
+must cover all three topologies. Run by the CI docs job."""
+import os
+import re
+
+import repro.core  # noqa: F401  — populates the codec registry
+from repro.core import codec
+
+DOCS = os.path.join(os.path.dirname(__file__), os.pardir, "docs")
+
+# each catalogued message is a level-3 heading: ### `tag` — ClassName
+_TAG_HEADING = re.compile(r"^### `([a-z0-9_]+)`", re.MULTILINE)
+
+
+def _read(name: str) -> str:
+    with open(os.path.join(DOCS, name), encoding="utf-8") as f:
+        return f.read()
+
+
+def _fabric_tags() -> set:
+    # tags prefixed test_ are suite-local registrations, not fabric messages
+    return {t for t in codec.registered_message_tags()
+            if not t.startswith("test_")}
+
+
+def test_protocol_doc_matches_codec_registry():
+    documented = set(_TAG_HEADING.findall(_read("protocol.md")))
+    registered = _fabric_tags()
+    missing = registered - documented
+    stale = documented - registered
+    assert not missing, (
+        f"tags registered in core/codec.py but undocumented in "
+        f"docs/protocol.md: {sorted(missing)} — add a '### `tag`' section")
+    assert not stale, (
+        f"tags documented in docs/protocol.md but not registered: "
+        f"{sorted(stale)} — remove the section or register the message")
+
+
+def test_protocol_doc_documents_each_tag_once():
+    tags = _TAG_HEADING.findall(_read("protocol.md"))
+    assert len(tags) == len(set(tags)), "duplicate tag sections"
+
+
+def test_protocol_doc_states_framing_constants():
+    text = _read("protocol.md")
+    # keep the framing section in sync with transport.py by value
+    from repro.core import transport
+    assert "4-byte" in text and "big-endian" in text
+    mib = transport.MAX_FRAME_BYTES // (1024 * 1024)
+    assert f"{mib} MiB" in text, "MAX_FRAME_BYTES changed; update the doc"
+
+
+def test_architecture_doc_covers_all_three_topologies():
+    text = _read("architecture.md")
+    for needle in ("In-proc", 'topology="tcp"', "Sharded", "shards=k",
+                   "RouterNode", "ShardRing", "consistent hashing"):
+        assert needle in text, f"architecture.md lost coverage of {needle!r}"
+
+
+def test_architecture_doc_covers_lifecycle_and_replacement_flow():
+    text = _read("architecture.md")
+    assert "DoneEvent" in text and "lifecycle" in text.lower()
+    assert "Reload per iteration" in text
+    assert "rollback" in text.lower()

@@ -1,0 +1,217 @@
+"""Sharded CloudNode behind a RouterNode: consistent-hash partitioning,
+fan-out/fan-in through per-assignment aggregators, and the invariant the
+whole design hangs on — the AssignmentHandle control-plane API is
+byte-for-byte identical to the unsharded topology."""
+import pytest
+
+from repro.core import Status
+from repro.core.assignment import Target
+from repro.core.fleet import Fleet, ShardRing
+
+V1 = """
+import jax.numpy as jnp
+def run(xs):
+    return jnp.mean(xs) * 2.0
+"""
+
+V2 = """
+import jax.numpy as jnp
+def run(xs):
+    return jnp.mean(xs) * 4.0
+"""
+
+AGG = """
+import jax.numpy as jnp
+def run(xs):
+    return jnp.max(xs) - jnp.min(xs)
+"""
+
+
+# ---------------------------------------------------------------------------
+# Consistent-hash ring
+# ---------------------------------------------------------------------------
+
+
+def test_ring_lookup_is_deterministic():
+    a = ShardRing(["shard0", "shard1", "shard2"])
+    b = ShardRing(["shard2", "shard0", "shard1"])   # insertion order irrelevant
+    for i in range(200):
+        cid = f"c{i:03d}"
+        assert a.lookup(cid) == b.lookup(cid)
+
+
+def test_ring_uses_every_shard():
+    ring = ShardRing([f"shard{j}" for j in range(4)])
+    owners = {ring.lookup(f"c{i:03d}") for i in range(200)}
+    assert owners == {f"shard{j}" for j in range(4)}
+
+
+def test_ring_resize_only_remaps_a_fraction():
+    before = ShardRing(["shard0", "shard1", "shard2", "shard3"])
+    after = ShardRing(["shard0", "shard1", "shard2"])   # shard3 removed
+    clients = [f"c{i:03d}" for i in range(400)]
+    moved = sum(1 for c in clients
+                if before.lookup(c) != after.lookup(c)
+                and before.lookup(c) != "shard3")
+    # only clients shard3 owned should move; nobody else reshuffles
+    assert moved == 0
+    orphans = [c for c in clients if before.lookup(c) == "shard3"]
+    assert orphans and all(after.lookup(c) in after.shard_ids
+                           for c in orphans)
+
+
+def test_ring_remove_and_empty():
+    ring = ShardRing(["only"])
+    assert ring.lookup("c000") == "only"
+    ring.remove("only")
+    assert ring.lookup("c000") is None
+
+
+# ---------------------------------------------------------------------------
+# Sharded fleet scenarios (in-proc topology; TCP is covered by the slow
+# churn test and the CI smoke)
+# ---------------------------------------------------------------------------
+
+
+def test_sharded_full_scenario_handle_api_unchanged():
+    """deploy -> iterate -> mid-assignment redeploy -> rollback on a
+    2-shard fleet, asserting the same things the unsharded scenario
+    asserts — no handle-API changes."""
+    fleet = Fleet.create(4, shards=2, seed=11)
+    assert fleet.shards == 2
+    assert len(fleet.shard_nodes) == 2
+    assert sum(c.n_clients for c in fleet.shard_clouds) == 4
+    # shards own disjoint peer tables
+    owned = [set(c.client_nodes) for c in fleet.shard_clouds]
+    assert owned[0] & owned[1] == set()
+    try:
+        fe = fleet.frontend("u1")
+
+        v1 = fe.deploy_code("t_mean", V1)
+        _, done = v1.result(timeout=30.0)
+        assert done.status == Status.DONE
+        assert "4/4" in done.detail
+
+        handle = fe.submit_analytics("t_mean", iterations=3,
+                                     params={"n_values": 16})
+        results, done = handle.result(timeout=30.0)
+        assert done.status == Status.DONE
+        assert [r.iteration for r in results] == [0, 1, 2]
+        assert all(r.winning_md5 == v1.md5 for r in results)
+        assert all(r.n_accepted == 4 for r in results)
+
+        long = fe.submit_analytics("t_mean", iterations=8,
+                                   params={"n_values": 16})
+        stream = long.events()
+        first = next(stream)
+        assert first.winning_md5 == v1.md5
+        v2 = fe.deploy_code("t_mean", V2)
+        _, done = v2.result(timeout=30.0)
+        assert done.status == Status.DONE
+
+        rb = v2.rollback()
+        _, done = rb.result(timeout=30.0)
+        assert done.status == Status.DONE
+        assert rb.md5 == v1.md5
+
+        results, done = long.result(timeout=30.0)
+        assert done.status == Status.DONE
+        assert results[-1].winning_md5 == v1.md5
+        # shards commit the same iteration number at independent times,
+        # so during the swap one shard may commit on v1 while the other
+        # is already on v2; the merge never mixes versions — dissenting
+        # shards' results count as drops — and the per-iteration
+        # accounting must still cover the whole fleet
+        assert all(r.n_accepted + r.n_dropped + r.n_stragglers == 4
+                   for r in results)
+        assert all(r.winning_md5 in (v1.md5, v2.md5) for r in results)
+    finally:
+        fleet.shutdown()
+
+
+def test_sharded_aggregation_runs_once_at_the_router():
+    """cloud_method aggregation must merge across shards, not per shard:
+    the fleet-wide mean over clients on different shards equals the mean
+    over all accepted payloads."""
+    fleet = Fleet.create(4, shards=2, seed=7)
+    try:
+        fe = fleet.frontend("u1")
+        raw, done = fe.submit_analytics(
+            "count", iterations=1,
+            params={"n_values": 16}).result(timeout=30.0)
+        assert done.status == Status.DONE
+        assert sorted(raw[0].value) == [16, 16, 16, 16]  # concat, not nested
+
+        agg, done = fe.submit_analytics(
+            "count", iterations=1,
+            params={"n_values": 16, "cloud_method": "mean"}
+        ).result(timeout=30.0)
+        assert done.status == Status.DONE
+        assert agg[0].value == pytest.approx(16.0)
+    finally:
+        fleet.shutdown()
+
+
+def test_sharded_cloud_target_deploy_installs_at_router():
+    fleet = Fleet.create(4, shards=2, seed=3)
+    try:
+        fe = fleet.frontend("u1")
+        dep = fe.deploy_code("spread", AGG, target=Target.CLOUD)
+        _, done = dep.result(timeout=30.0)
+        assert done.status == Status.DONE
+        assert fleet.cloud_app.registry.resolve("u1", "spread") is not None
+        # none of the shard registries got it — aggregation is router-only
+        assert all(c.cloud_app.registry.resolve("u1", "spread") is None
+                   for c in fleet.shard_clouds)
+
+        res, done = fe.submit_analytics(
+            "mean", iterations=1,
+            params={"n_values": 16, "cloud_method": "spread"}
+        ).result(timeout=30.0)
+        assert done.status == Status.DONE
+        assert isinstance(res[0].value, float)
+    finally:
+        fleet.shutdown()
+
+
+def test_sharded_cancel_mid_assignment():
+    fleet = Fleet.create(4, shards=2, seed=5)
+    try:
+        fe = fleet.frontend("u1")
+        handle = fe.submit_analytics("mean", iterations=200,
+                                     params={"n_values": 16})
+        stream = handle.events()
+        next(stream)                       # it is live on every shard
+        handle.cancel()
+        _, done = handle.result(timeout=30.0)
+        assert done.status == Status.CANCELLED
+    finally:
+        fleet.shutdown()
+
+
+def test_sharded_subset_targeting():
+    """An assignment targeting two specific clients only reaches the
+    shards that own them."""
+    fleet = Fleet.create(6, shards=3, seed=9)
+    try:
+        fe = fleet.frontend("u1")
+        results, done = fe.submit_analytics(
+            "count", iterations=2, client_ids=["c000", "c003"],
+            params={"n_values": 16}).result(timeout=30.0)
+        assert done.status == Status.DONE
+        assert all(r.n_accepted == 2 for r in results)
+    finally:
+        fleet.shutdown()
+
+
+def test_sharded_no_clients_fails_cleanly():
+    fleet = Fleet.create(2, shards=2, seed=1)
+    try:
+        fe = fleet.frontend("u1")
+        _, done = fe.submit_analytics(
+            "mean", iterations=1,
+            client_ids=["nope"]).result(timeout=30.0)
+        assert done.status == Status.FAILED
+        assert "no clients" in done.detail
+    finally:
+        fleet.shutdown()

@@ -155,6 +155,32 @@ def test_tcp_unreachable_peer_raises_after_retries():
         t.close()
 
 
+def test_tcp_reconnect_backoff_is_exponential_capped_and_jittered(
+        monkeypatch):
+    """Retry delays must double per attempt up to the cap, with jitter in
+    the upper half of each window — not the old tight linear loop."""
+    base, cap, attempts = 0.05, 0.4, 8
+    t = TcpTransport(reconnect_attempts=attempts, reconnect_delay_s=base,
+                     reconnect_max_delay_s=cap)
+    t.start("a", lambda d: None)
+    t.add_peer("dead", "127.0.0.1:1")
+    sleeps = []
+    monkeypatch.setattr("repro.core.transport.time.sleep", sleeps.append)
+    try:
+        with pytest.raises(TransportError, match="cannot connect"):
+            t.send("dead", b"x")
+    finally:
+        t.close()
+    # no sleep after the final failed attempt — it raises immediately
+    assert len(sleeps) == attempts - 1
+    for i, s in enumerate(sleeps):
+        ceiling = min(cap, base * 2 ** i)
+        assert 0.5 * ceiling <= s <= ceiling, (i, s)
+    # the cap actually engages for late attempts
+    assert all(s <= cap for s in sleeps)
+    assert any(s > 0.5 * cap for s in sleeps[4:])
+
+
 # ---------------------------------------------------------------------------
 # Node routing
 # ---------------------------------------------------------------------------
