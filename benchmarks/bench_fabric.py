@@ -1,5 +1,5 @@
 """Fabric round-trip latency and deploy-to-effect time, in-proc vs TCP,
-plus the shard-count scaling curve.
+plus the shard-count scaling curve and the O(100)-client soak scenario.
 
 Quantifies what the transport boundary costs: the same
 submit -> fan-out -> collect -> commit round measured on the loopback
@@ -7,9 +7,19 @@ submit -> fan-out -> collect -> commit round measured on the loopback
 paper's headline metric — how long from ``deploy_code`` to the first
 committed iteration that runs the new version — and what the sharded
 topology's router fan-in adds to it at k = 1, 2, 4 shards.
+
+``bench_soak`` is the heavyweight member: an O(100)-client-process TCP
+fleet across k shards driven through deploy -> iterate -> shard kill ->
+re-home recovery -> deploy-to-effect -> rollback, reporting fleet-scale
+deploy and recovery times. It is NOT part of ``main`` (the CI fabric
+job stays light); tests/test_soak.py drives it behind the ``slow``
+marker and merges its rows into experiments/BENCH_fabric.json via
+``record_rows``.
 """
 from __future__ import annotations
 
+import json
+import os
 import time
 from statistics import mean, median
 
@@ -78,6 +88,174 @@ def bench_deploy_to_effect(topology: str, n_clients: int = 4,
         return median(times)
     finally:
         fleet.shutdown()
+
+
+# pure-python modules for the soak: no jax tracing on the hot path, so
+# 100 client processes do not each pay a compile on first execution
+_PY_MEAN_V1 = """
+def run(xs):
+    return float(sum(float(x) for x in xs) / len(xs))
+"""
+
+_PY_MEAN_V2 = """
+def run(xs):
+    return 2.0 * float(sum(float(x) for x in xs) / len(xs))
+"""
+
+
+def bench_soak(n_clients: int = 100, shards: int = 4,
+               iterations: int = 150, say=None) -> dict:
+    """O(100)-client soak: spawn ``n_clients`` TCP client processes
+    across ``shards`` CloudNode shard processes, then drive
+    deploy -> iterate -> kill one shard mid-iteration -> recover
+    (re-home + handle completes) -> deploy-to-effect -> rollback.
+
+    Returns a metrics dict (seconds) plus the invariants the soak test
+    asserts. Deliberately not wired into ``main``: it spawns O(100)
+    processes and belongs behind the ``slow`` marker.
+    """
+    from repro.core.assignment import Status
+    from repro.launch.fleet_proc import spawn_tcp_fleet
+
+    def _say(msg):
+        if say is not None:
+            say(msg)
+
+    metrics: dict = {"n_clients": n_clients, "shards": shards,
+                     "iterations": iterations}
+    t0 = time.perf_counter()
+    fleet = spawn_tcp_fleet(
+        n_clients, shards=shards,
+        heartbeat_interval_s=0.5, eviction_timeout_s=3.0,
+        heartbeat_miss_limit=3,
+        shard_heartbeat_interval_s=0.5, shard_eviction_timeout_s=3.0,
+        rehome_grace_s=30.0, straggler_grace_s=5.0,
+        ready_timeout_s=600.0)
+    metrics["ready_s"] = time.perf_counter() - t0
+    _say(f"{n_clients} client processes across {shards} shards ready "
+         f"in {metrics['ready_s']:.1f}s")
+    try:
+        fe = fleet.frontend("soak")
+
+        t0 = time.perf_counter()
+        v1 = fe.deploy_code("soak_mean", _PY_MEAN_V1)
+        _, done = v1.result(timeout=300.0)
+        metrics["deploy_round_s"] = time.perf_counter() - t0
+        metrics["deploy_detail"] = done.detail
+        assert done.status == Status.DONE, done.detail
+        _say(f"v1 deployed to {done.detail} "
+             f"in {metrics['deploy_round_s']:.2f}s")
+
+        handle = fe.submit_analytics("soak_mean", iterations=iterations,
+                                     params={"n_values": 16})
+        first = next(handle.events())
+        metrics["first_iteration_n_accepted"] = first.n_accepted
+
+        owners = dict(fleet.server.clients)
+        victim_sid = max(fleet.server.shard_addrs,
+                         key=lambda s: sum(1 for o in owners.values()
+                                           if o == s))
+        n_victims = sum(1 for o in owners.values() if o == victim_sid)
+        victim = fleet.shard_procs[int(victim_sid.removeprefix("shard"))]
+        t_kill = time.perf_counter()
+        victim.terminate()
+        victim.join(timeout=30.0)
+        _say(f"killed {victim_sid} mid-iteration "
+             f"({n_victims} clients orphaned)")
+
+        deadline = time.time() + 120.0
+        while fleet.server.n_shards > shards - 1:
+            if time.time() > deadline:
+                raise AssertionError("router never evicted the dead shard")
+            time.sleep(0.05)
+        metrics["shard_eviction_s"] = time.perf_counter() - t_kill
+
+        while fleet.server.n_clients < n_clients:
+            if time.time() > deadline:
+                raise AssertionError(
+                    f"only {fleet.server.n_clients}/{n_clients} clients "
+                    f"re-homed")
+            time.sleep(0.05)
+        metrics["rehome_recovery_s"] = time.perf_counter() - t_kill
+        _say(f"{n_victims} orphans re-homed "
+             f"in {metrics['rehome_recovery_s']:.2f}s")
+
+        results, done = handle.result(timeout=600.0)
+        metrics["handle_status"] = done.status.value
+        metrics["n_iterations_committed"] = len(results)
+        metrics["whole_fleet_accounting"] = all(
+            r.n_accepted + r.n_dropped + r.n_stragglers == n_clients
+            for r in results)
+        metrics["final_n_accepted"] = results[-1].n_accepted
+        _say(f"in-flight assignment completed: {done.status.value}, "
+             f"final n_accepted={results[-1].n_accepted}")
+
+        # deploy-to-effect at fleet scale, on the healed fleet
+        live = fe.submit_analytics("soak_mean", iterations=400,
+                                   params={"n_values": 16})
+        stream = live.events()
+        next(stream)
+        t0 = time.perf_counter()
+        v2 = fe.deploy_code("soak_mean", _PY_MEAN_V2)
+        v2.result(timeout=300.0)
+        for ev in stream:
+            if getattr(ev, "winning_md5", None) == v2.md5:
+                metrics["deploy_to_effect_s"] = time.perf_counter() - t0
+                break
+        live.cancel()
+        live.result(timeout=300.0)
+
+        t0 = time.perf_counter()
+        rb = v2.rollback()
+        _, done = rb.result(timeout=300.0)
+        metrics["rollback_round_s"] = time.perf_counter() - t0
+        metrics["rollback_status"] = done.status.value
+        assert rb.md5 == v1.md5
+        _say(f"deploy-to-effect {metrics.get('deploy_to_effect_s', -1):.3f}s,"
+             f" rollback {metrics['rollback_round_s']:.2f}s")
+        return metrics
+    finally:
+        fleet.shutdown(timeout=30.0)
+
+
+def soak_rows(metrics: dict) -> list:
+    """The BENCH_fabric.json rows a soak run contributes (same schema as
+    benchmarks.run emits: name / us_per_call / derived)."""
+    n, k = metrics["n_clients"], metrics["shards"]
+    suffix = f"{n}c_{k}s"
+    rows = [
+        {"name": f"fabric_soak_deploy_round_{suffix}",
+         "us_per_call": metrics["deploy_round_s"] * 1e6,
+         "derived": f"fleet-wide deploy over {n} tcp client processes, "
+                    f"{k} shard processes ({metrics['deploy_detail']})"},
+        {"name": f"fabric_soak_recovery_{suffix}",
+         "us_per_call": metrics["rehome_recovery_s"] * 1e6,
+         "derived": "shard kill -> eviction "
+                    f"({metrics['shard_eviction_s']:.2f}s) -> all orphans "
+                    "re-homed onto survivors"},
+    ]
+    if "deploy_to_effect_s" in metrics:
+        rows.append(
+            {"name": f"fabric_soak_deploy_to_effect_{suffix}",
+             "us_per_call": metrics["deploy_to_effect_s"] * 1e6,
+             "derived": "deploy_code -> first committed iteration on the "
+                        "new version, healed fleet under load"})
+    return rows
+
+
+def record_rows(rows, path: str = "experiments/BENCH_fabric.json") -> None:
+    """Merge rows into BENCH_fabric.json: replace same-name rows, append
+    new ones — so soak rows survive alongside the light fabric suite."""
+    existing = []
+    if os.path.exists(path):
+        with open(path, encoding="utf-8") as f:
+            existing = json.load(f)
+    by_name = {r["name"]: r for r in existing}
+    for r in rows:
+        by_name[r["name"]] = r
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump(list(by_name.values()), f, indent=1)
 
 
 def main(report) -> None:

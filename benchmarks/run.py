@@ -49,8 +49,19 @@ def main() -> None:
             json.dump(rows, f, indent=1)
         for suite, suite_rows in by_suite.items():
             tag = suite.removeprefix("bench_")
-            with open(os.path.join(out_dir, f"BENCH_{tag}.json"), "w") as f:
-                json.dump(suite_rows, f, indent=1)
+            path = os.path.join(out_dir, f"BENCH_{tag}.json")
+            # merge by name: refresh the rows this run produced, keep the
+            # ones it did not (e.g. the soak rows tests/test_soak.py
+            # records into BENCH_fabric.json — a light run must not
+            # clobber the heavyweight trajectory)
+            merged = {}
+            if os.path.exists(path):
+                with open(path) as f:
+                    merged = {r["name"]: r for r in json.load(f)}
+            for r in suite_rows:
+                merged[r["name"]] = r
+            with open(path, "w") as f:
+                json.dump(list(merged.values()), f, indent=1)
 
 
 if __name__ == "__main__":

@@ -124,7 +124,19 @@ class AssignmentSpec:
 
 @dataclass(frozen=True)
 class IterationEvent:
-    """One committed iteration of an ongoing assignment."""
+    """One committed iteration of an ongoing assignment.
+
+    ``hash_counts``/``hash_payloads`` are the shard-level hash report:
+    when a shard's assignment handler commits an iteration on behalf of
+    a router (the sharded topology), it attaches the count of results
+    per code md5 — **including hashes that lost the shard-local vote** —
+    and the raw payloads grouped the same way. The router's
+    ``ShardAggregator`` sums the counts across shards and applies the
+    one plurality rule (``consistency.plurality_winner``) to the sum, so
+    the fleet-wide commit is *exact*: identical to running
+    ``majority_filter`` over the flat, unpartitioned result multiset.
+    Both fields are ``None`` on user-facing events (unsharded commits
+    and the router's merged stream)."""
 
     assignment_id: str
     iteration: int
@@ -133,9 +145,11 @@ class IterationEvent:
     n_accepted: int
     n_dropped: int
     n_stragglers: int
+    hash_counts: Optional[Dict[str, int]] = None
+    hash_payloads: Optional[Dict[str, list]] = None
 
     def to_wire_dict(self) -> Dict[str, Any]:
-        return {
+        d: Dict[str, Any] = {
             "assignment_id": self.assignment_id,
             "iteration": self.iteration,
             "value": self.value,
@@ -144,6 +158,11 @@ class IterationEvent:
             "n_dropped": self.n_dropped,
             "n_stragglers": self.n_stragglers,
         }
+        if self.hash_counts is not None:
+            d["hash_counts"] = self.hash_counts
+        if self.hash_payloads is not None:
+            d["hash_payloads"] = self.hash_payloads
+        return d
 
     def to_wire(self) -> bytes:
         return codec.to_wire({"event": "iteration", **self.to_wire_dict()})
@@ -154,6 +173,7 @@ class IterationEvent:
 
     @staticmethod
     def from_wire_dict(d: Dict[str, Any]) -> "IterationEvent":
+        counts = d.get("hash_counts")
         return IterationEvent(
             assignment_id=d["assignment_id"],
             iteration=int(d["iteration"]),
@@ -162,6 +182,9 @@ class IterationEvent:
             n_accepted=int(d["n_accepted"]),
             n_dropped=int(d["n_dropped"]),
             n_stragglers=int(d["n_stragglers"]),
+            hash_counts=({h: int(n) for h, n in counts.items()}
+                         if counts is not None else None),
+            hash_payloads=d.get("hash_payloads"),
         )
 
 

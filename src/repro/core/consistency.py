@@ -20,7 +20,7 @@ from __future__ import annotations
 import math
 from collections import Counter
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
 
 
 @dataclass(frozen=True)
@@ -66,17 +66,42 @@ class FilterOutcome:
         return not self.dropped
 
 
+def plurality_winner(counts: Mapping[str, int]) -> Optional[str]:
+    """The md5-majority rule as a pure function of a hash-count table:
+    plurality hash, ties broken by lexicographically smallest md5.
+
+    This is the *single* definition of "winning" in the system:
+    ``majority_filter`` applies it to one flat result multiset, and the
+    sharded merge applies it to per-shard count tables summed with
+    ``merge_hash_counts`` — which is why the sharded aggregate is exact
+    (equal to the flat filter) rather than a hierarchical approximation.
+    """
+    if not counts:
+        return None
+    return min(counts.items(), key=lambda kv: (-kv[1], kv[0]))[0]
+
+
+def merge_hash_counts(per_shard: Sequence[Mapping[str, int]]) -> Dict[str, int]:
+    """Sum per-shard hash-count tables into the fleet-wide table. Since
+    shards partition the clients, the sum over shard-local counts *is*
+    the count table of the flat result multiset."""
+    total: Counter = Counter()
+    for counts in per_shard:
+        total.update(counts)
+    return dict(total)
+
+
 def majority_filter(results: Sequence[TaggedResult]) -> FilterOutcome:
     """Keep only results tagged with the plurality hash.
 
-    Deterministic: ties broken by lexicographically smallest md5. The
-    accepted set is always single-version (the paper's invariant).
+    Deterministic: ties broken by lexicographically smallest md5 (see
+    ``plurality_winner``). The accepted set is always single-version
+    (the paper's invariant).
     """
     if not results:
         return FilterOutcome((), (), None, {})
     counts = Counter(r.code_md5 for r in results)
-    # plurality; ties broken by lexicographically smallest md5
-    winning = min(counts.items(), key=lambda kv: (-kv[1], kv[0]))[0]
+    winning = plurality_winner(counts)
     accepted = tuple(r for r in results if r.code_md5 == winning)
     dropped = tuple(r for r in results if r.code_md5 != winning)
     return FilterOutcome(accepted, dropped, winning, dict(counts))

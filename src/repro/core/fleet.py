@@ -32,6 +32,17 @@ Figure 1 of the paper, reproduced:
   silent clients are evicted and become permanent stragglers for
   in-flight assignments, and re-registration (idempotent) re-delivers
   the currently deployed modules so a returning client catches up.
+* Shard loss is survivable too, one level up: shards heartbeat the
+  router (``ShardHeartbeat``), a silent shard is evicted from the ring,
+  its clients detect the loss themselves (unacknowledged heartbeats or
+  a dropped connection) and re-register through the router onto
+  surviving shards, and in-flight assignments are re-fanned-out to the
+  re-homed clients so handles complete instead of timing out.
+* The sharded md5-majority is exact: shard-level iteration events carry
+  per-hash counts and payloads over everything received, and the
+  router-side merge applies the single plurality rule to the summed
+  counts — equal to ``consistency.majority_filter`` on the flat result
+  multiset, never a hierarchical approximation.
 
 The wire protocol these messages follow is specified in
 ``docs/protocol.md`` (kept in lockstep with the codec registry by
@@ -68,6 +79,8 @@ from repro.core.consistency import (
     IterationCollector,
     QuorumPolicy,
     TaggedResult,
+    merge_hash_counts,
+    plurality_winner,
 )
 from repro.core.module import ActiveModule
 from repro.core.registry import ActiveCodeRegistry
@@ -270,6 +283,46 @@ class RegisterShard:
         return RegisterShard(d["shard_id"], d["cloud_addr"], d.get("endpoint"))
 
 
+@dataclass(frozen=True)
+class ShardHeartbeat:
+    """Periodic shard -> router liveness beacon, mirroring the client ->
+    shard ``Heartbeat`` one level up. A router that receives one from a
+    shard it no longer knows (evicted during a blip while the shard was
+    merely slow or partitioned) re-admits the shard to the ring — the
+    shard-level analogue of a client self-healing via re-registration."""
+
+    shard_id: str                  # the shard's node id (ring member)
+    cloud_addr: str                # the shard's cloud actor address
+    endpoint: Optional[str] = None  # shard "host:port" for re-admission
+
+    def to_wire_dict(self) -> Dict[str, Any]:
+        return {"shard_id": self.shard_id, "cloud_addr": self.cloud_addr,
+                "endpoint": self.endpoint}
+
+    @staticmethod
+    def from_wire_dict(d: Dict[str, Any]) -> "ShardHeartbeat":
+        return ShardHeartbeat(d["shard_id"], d["cloud_addr"],
+                              d.get("endpoint"))
+
+
+@dataclass(frozen=True)
+class HeartbeatAck:
+    """Owning cloud/shard -> client reply to each ``Heartbeat``. Clients
+    count unacknowledged beats: past ``heartbeat_miss_limit`` the owner
+    is presumed dead and the client re-registers through its original
+    entry point (the router, when sharded) — the topology-independent
+    way an orphaned client finds its new shard."""
+
+    client_id: str
+
+    def to_wire_dict(self) -> Dict[str, Any]:
+        return {"client_id": self.client_id}
+
+    @staticmethod
+    def from_wire_dict(d: Dict[str, Any]) -> "HeartbeatAck":
+        return HeartbeatAck(d["client_id"])
+
+
 codec.register_message("submit_assignment", SubmitAssignment)
 codec.register_message("cancel_assignment", CancelAssignment)
 codec.register_message("new_task", NewTask)
@@ -280,12 +333,15 @@ codec.register_message("register_ack", RegisterAck)
 codec.register_message("heartbeat", Heartbeat)
 codec.register_message("evicted", Evicted)
 codec.register_message("register_shard", RegisterShard)
+codec.register_message("shard_heartbeat", ShardHeartbeat)
+codec.register_message("heartbeat_ack", HeartbeatAck)
 codec.register_message("stop_node", StopNode)
 
 
-# Internal self-scheduling ticks: delivered by plain (node-local) actor
-# name straight to the owner's mailbox, so they never cross a node
-# boundary and deliberately have no wire codec.
+# Internal self-scheduling ticks and router<->aggregator coordination:
+# delivered by plain (node-local) actor name straight to the owner's
+# mailbox, so they never cross a node boundary and deliberately have no
+# wire codec.
 
 
 @dataclass(frozen=True)
@@ -296,6 +352,110 @@ class _HeartbeatTick:
 @dataclass(frozen=True)
 class _EvictionTick:
     pass
+
+
+@dataclass(frozen=True)
+class _ShardBeatTick:
+    pass
+
+
+@dataclass(frozen=True)
+class _PeerLost:
+    """Transport connection-drop signal forwarded into an actor mailbox."""
+    node_id: str
+
+
+@dataclass(frozen=True)
+class _ShardLost:
+    """Router -> aggregator (same node): a shard was evicted; every live
+    leg on it must be re-homed or written off."""
+    shard_id: str
+
+
+@dataclass(frozen=True)
+class _RehomeRequest:
+    """Aggregator -> router (same node): re-fan-out a dead leg's clients
+    to their new owning shards, resuming at ``resume_iteration``."""
+    assignment_id: str
+    leg_id: str
+    resume_iteration: int
+
+
+@dataclass(frozen=True)
+class _LegAdded:
+    """Router -> aggregator: a replacement leg was fanned out; expect its
+    events, with leg-local iteration j mapping to global ``offset + j``."""
+    leg_id: str
+    shard_id: str
+    offset: int
+
+
+@dataclass(frozen=True)
+class _RehomeDone:
+    """Router -> aggregator: the re-home for ``leg_id`` is finalized (all
+    replacement legs announced via _LegAdded, possibly none) — release
+    the emission barrier."""
+    leg_id: str
+
+
+@dataclass(frozen=True)
+class _RehomeTimeout:
+    """Router self-message: the re-home grace window expired; finalize
+    with whichever orphans re-registered in time."""
+    token: int
+
+
+class _AsyncSender:
+    """One lazily-started daemon worker that moves liveness traffic
+    (heartbeats, acks, eviction notices, re-registrations) off actor
+    threads. A TCP send to a dead peer blocks in reconnect backoff for
+    many seconds; that wait must stall at most this queue, never a
+    node's message loop. FIFO per owner, so e.g. a re-registration
+    enqueued before a heartbeat reaches the wire first. Accepts thunks
+    too (e.g. ``transport.forget_peer`` after an eviction notice), run
+    in queue order."""
+
+    def __init__(self, system, name: str):
+        self._system = system
+        self._name = name
+        self._q: "queue.Queue[Any]" = queue.Queue()
+        self._started = False
+        self._lock = threading.Lock()
+
+    def _ensure(self) -> None:
+        with self._lock:
+            if self._started:
+                return
+            self._started = True
+            t = threading.Thread(target=self._loop, name=self._name,
+                                 daemon=True)
+            t.start()
+
+    def send(self, target: str, msg: Any, sender: Optional[str] = None) -> None:
+        self._ensure()
+        self._q.put((target, msg, sender))
+
+    def call(self, fn: Callable[[], None]) -> None:
+        self._ensure()
+        self._q.put(fn)
+
+    def stop(self) -> None:
+        if self._started:
+            self._q.put(None)
+
+    def _loop(self) -> None:
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            try:
+                if callable(item):
+                    item()
+                else:
+                    target, msg, sender = item
+                    self._system.send(target, msg, sender=sender)
+            except Exception:  # noqa: BLE001 - best-effort traffic: a
+                pass           # failed liveness send is just a missed beat
 
 
 # ---------------------------------------------------------------------------
@@ -456,21 +616,37 @@ class ClientNode(Actor):
     from then on the client heartbeats that address every
     ``heartbeat_interval_s``. An ``Evicted`` notice (the shard forgot
     us) simply triggers re-registration.
+
+    Owner-liveness (the mirror of the shard evicting silent clients):
+    every heartbeat expects a ``HeartbeatAck``. When
+    ``heartbeat_miss_limit`` consecutive beats go unacknowledged — or
+    the transport reports the owning node's connection dropped — the
+    owner is presumed dead: the client forgets it and re-registers
+    through ``register_with`` (the router, when sharded), which answers
+    with the new owning shard and a ``RegisterAck`` module catch-up.
+    While unregistered, every tick re-sends ``RegisterClient``, so a
+    registration lost in flight (router blip) self-heals. Heartbeats
+    and registrations travel via an ``_AsyncSender`` so a dead peer's
+    reconnect backoff can never stall the actor's message loop.
     """
 
     def __init__(self, name: str, app: ClientApp,
                  stop_event: Optional[threading.Event] = None, *,
                  register_with: Optional[str] = None,
                  endpoint: Optional[str] = None,
-                 heartbeat_interval_s: Optional[float] = None):
+                 heartbeat_interval_s: Optional[float] = None,
+                 heartbeat_miss_limit: int = 3):
         super().__init__(name)
         self.app = app
         self.stop_event = stop_event
         self.register_with = register_with
         self.endpoint = endpoint
         self.hb_interval = heartbeat_interval_s
+        self.miss_limit = heartbeat_miss_limit
         self._cloud_addr: Optional[str] = None   # learned from RegisterAck
         self._hb_timer: Optional[threading.Timer] = None
+        self._pending_beats = 0                  # heartbeats since last ack
+        self._async: Optional[_AsyncSender] = None
         self._task_seq = 0
 
     def _node_id(self) -> str:
@@ -480,13 +656,27 @@ class ClientNode(Actor):
         return self.app.client_id
 
     def _register(self) -> None:
-        if self.register_with:
-            self.send(self.register_with,
-                      RegisterClient(self.app.client_id, self._node_id(),
-                                     self.endpoint))
+        if self.register_with and self._async is not None:
+            self._async.send(
+                self.register_with,
+                RegisterClient(self.app.client_id, self._node_id(),
+                               self.endpoint),
+                sender=self.name)
 
     def on_start(self) -> None:
+        assert self._system is not None
+        self._async = _AsyncSender(self._system, f"async:{self.name}")
+        node = self._system.node
+        if node is not None:
+            node.watch_peer_lost(self._peer_lost)
         self._register()
+        self._schedule_heartbeat()
+
+    def _peer_lost(self, peer_node_id: str) -> None:
+        # transport thread: just post into our own mailbox
+        sys_ = self._system
+        if sys_ is not None:
+            sys_.send(self.name, _PeerLost(peer_node_id))
 
     def _schedule_heartbeat(self) -> None:
         if self.hb_interval is None:
@@ -495,13 +685,31 @@ class ClientNode(Actor):
             self._hb_timer.cancel()
         sys_ = self._system
         assert sys_ is not None
-        # tick lands in our own mailbox, so the Heartbeat send below runs
-        # on the actor thread, not the timer thread
+        # tick lands in our own mailbox, so liveness decisions run on the
+        # actor thread, not the timer thread
         self._hb_timer = threading.Timer(
             self.hb_interval,
             lambda: sys_.send(self.name, _HeartbeatTick()))
         self._hb_timer.daemon = True
         self._hb_timer.start()
+
+    def _owner_lost(self, why: str) -> None:
+        """The owning cloud/shard is presumed dead: forget it and rejoin
+        through the original entry point (router when sharded)."""
+        old = self._cloud_addr
+        self._cloud_addr = None
+        self._pending_beats = 0
+        sys_ = self._system
+        node = sys_.node if sys_ is not None else None
+        if old is not None and node is not None:
+            old_node = split_addr(old)[1]
+            entry_node = split_addr(self.register_with or "")[1]
+            # fail-fast sends to the dead shard so the async queue is not
+            # stuck in its reconnect backoff — but never forget the entry
+            # point itself (we still need it to rejoin)
+            if old_node and old_node != entry_node:
+                node.transport.forget_peer(old_node)
+        self._register()
 
     def handle(self, sender, msg) -> None:
         if isinstance(msg, NewTask):
@@ -517,6 +725,7 @@ class ClientNode(Actor):
                     and sys_.node is not None):
                 sys_.node.transport.add_peer(cloud_node, msg.endpoint)
             self._cloud_addr = msg.cloud_addr
+            self._pending_beats = 0
             for mod in msg.modules:       # catch up on missed deployments
                 try:
                     self.app.registry.install(mod)
@@ -525,11 +734,26 @@ class ClientNode(Actor):
                     # take the whole node down mid-handshake
                     pass
             self._schedule_heartbeat()
+        elif isinstance(msg, HeartbeatAck):
+            self._pending_beats = 0
         elif isinstance(msg, _HeartbeatTick):
-            if self._cloud_addr is not None:
-                self.send(self._cloud_addr,
-                          Heartbeat(self.app.client_id, self._node_id()))
+            if self._cloud_addr is None:
+                self._register()          # unanswered join: keep knocking
+            elif self._pending_beats >= self.miss_limit:
+                self._owner_lost(
+                    f"{self._pending_beats} heartbeats unacknowledged")
+            else:
+                self._pending_beats += 1
+                assert self._async is not None
+                self._async.send(
+                    self._cloud_addr,
+                    Heartbeat(self.app.client_id, self._node_id()),
+                    sender=self.name)
             self._schedule_heartbeat()
+        elif isinstance(msg, _PeerLost):
+            if (self._cloud_addr is not None
+                    and split_addr(self._cloud_addr)[1] == msg.node_id):
+                self._owner_lost(f"connection to {msg.node_id} dropped")
         elif isinstance(msg, Evicted):
             self._register()              # shard forgot us: rejoin
         elif isinstance(msg, StopNode):
@@ -540,6 +764,8 @@ class ClientNode(Actor):
     def on_stop(self) -> None:
         if self._hb_timer is not None:
             self._hb_timer.cancel()
+        if self._async is not None:
+            self._async.stop()
 
 
 def _cloud_deploy_events(spec: AssignmentSpec) -> Tuple[DeployEvent,
@@ -724,7 +950,18 @@ class AssignmentHandler(Actor):
             self.stop()
             return
 
-        value = self.cloud_app.aggregate(self.spec, outcome.accepted)
+        # when running as one leg of a sharded fan-out, attach the full
+        # per-md5 report (all hashes received, not just the local winner)
+        # so the router's merge is exact — and skip the local aggregate:
+        # the router reads only the hash report, so shipping the accepted
+        # payloads again in `value` would double every frame's size
+        hash_counts = hash_payloads = None
+        value = None
+        if self.spec.params.get("shard_report"):
+            hash_counts, hash_payloads = shard_hash_report(
+                self.collector.results)
+        else:
+            value = self.cloud_app.aggregate(self.spec, outcome.accepted)
         self.send(self.cloud, IterationEvent(
             assignment_id=self.spec.assignment_id,
             iteration=self.iteration,
@@ -733,6 +970,8 @@ class AssignmentHandler(Actor):
             n_accepted=len(outcome.accepted),
             n_dropped=len(outcome.dropped),
             n_stragglers=n_strag,
+            hash_counts=hash_counts,
+            hash_payloads=hash_payloads,
         ))
         self._committed_iterations += 1
         self.collector = None
@@ -780,6 +1019,8 @@ class CloudNode(Actor):
                  max_concurrent_assignments: Optional[int] = None, *,
                  heartbeat_timeout_s: Optional[float] = None,
                  sweep_interval_s: Optional[float] = None,
+                 shard_heartbeat_interval_s: Optional[float] = None,
+                 straggler_grace_s: float = 0.25,
                  router_addr: Optional[str] = None,
                  stop_event: Optional[threading.Event] = None):
         super().__init__(name)
@@ -790,9 +1031,13 @@ class CloudNode(Actor):
         self.heartbeat_timeout = heartbeat_timeout_s
         self.router_addr = router_addr
         self.stop_event = stop_event
+        self.straggler_grace = straggler_grace_s
+        self._shard_hb_interval = shard_heartbeat_interval_s
         self._sweep_interval = sweep_interval_s or (
             heartbeat_timeout_s / 4 if heartbeat_timeout_s else None)
         self._sweep_timer: Optional[threading.Timer] = None
+        self._shard_hb_timer: Optional[threading.Timer] = None
+        self._async: Optional[_AsyncSender] = None
         self._last_seen: Dict[str, float] = {
             c: time.time() for c in self.client_nodes}
         self._deployed: Dict[Tuple[str, str], ActiveModule] = {}
@@ -830,7 +1075,7 @@ class CloudNode(Actor):
             name, spec, dict(self.client_nodes), self.cloud_app, self.name,
             self.policy,
             straggler_grace_s=float(spec.params.get("straggler_grace_s",
-                                                    0.25)))
+                                                    self.straggler_grace)))
         assert self._system is not None
         self._system.spawn(handler)
         self._system.monitor(self.name, name)
@@ -845,7 +1090,24 @@ class CloudNode(Actor):
 
     # -- churn: heartbeats + eviction ---------------------------------------------
     def on_start(self) -> None:
+        assert self._system is not None
+        self._async = _AsyncSender(self._system, f"async:{self.name}")
         self._schedule_sweep()
+        self._schedule_shard_heartbeat()
+
+    def _schedule_shard_heartbeat(self) -> None:
+        """Shards beacon the router (the level-up mirror of client
+        heartbeats) so a silently crashed shard is detected and its
+        clients re-homed instead of waiting out handle timeouts."""
+        if self._shard_hb_interval is None or self.router_addr is None:
+            return
+        sys_ = self._system
+        assert sys_ is not None
+        self._shard_hb_timer = threading.Timer(
+            self._shard_hb_interval,
+            lambda: sys_.send(self.name, _ShardBeatTick()))
+        self._shard_hb_timer.daemon = True
+        self._shard_hb_timer.start()
 
     def _schedule_sweep(self) -> None:
         if self._sweep_interval is None or self.heartbeat_timeout is None:
@@ -877,15 +1139,21 @@ class CloudNode(Actor):
             self.send(handler, ev)         # mark permanent straggler
         if self.router_addr is not None:
             self.send(self.router_addr, ev)
-        # the evictee is usually genuinely dead: notify it from a
-        # throwaway thread so a slow TCP redial to a gone peer cannot
-        # stall this cloud node's message loop (a live client still gets
-        # the notice and re-registers; a failed send dead-letters)
+        # the evictee is usually genuinely dead: forget its endpoint
+        # *now* (cheap, non-blocking) so no send to it — including the
+        # notice below — can stall the async queue in reconnect backoff
+        # and starve the acks to live clients queued behind it. The
+        # notice is therefore best-effort over TCP (it dead-letters once
+        # the peer is forgotten); a live evictee still recovers via its
+        # own unacknowledged-heartbeat counting, which makes it
+        # re-register through the entry point.
         sys_ = self._system
-        if sys_ is not None:
-            threading.Thread(
-                target=lambda: sys_.send(addr, ev, sender=self.name),
-                name=f"evict-notify:{client_id}", daemon=True).start()
+        if sys_ is not None and self._async is not None:
+            node = sys_.node
+            peer = split_addr(addr)[1]
+            if node is not None and peer and peer != node.node_id:
+                node.transport.forget_peer(peer)
+            self._async.send(addr, ev, sender=self.name)
 
     # -- message loop -------------------------------------------------------------
     def handle(self, sender, msg) -> None:
@@ -924,15 +1192,35 @@ class CloudNode(Actor):
         elif isinstance(msg, Heartbeat):
             if msg.client_id in self.client_nodes:
                 self._last_seen[msg.client_id] = time.time()
-            else:
+                # acknowledge so the client can detect *our* death by
+                # counting unacknowledged beats (duplicate heartbeats
+                # just refresh the clock and draw extra acks — harmless)
+                if self._async is not None:
+                    self._async.send(self.client_nodes[msg.client_id],
+                                     HeartbeatAck(msg.client_id),
+                                     sender=self.name)
+            elif self._async is not None:
                 # heartbeat from a client we evicted (or never knew):
                 # tell it to re-register
-                self.send(make_addr(f"client.{msg.client_id}", msg.node_id),
-                          Evicted(msg.client_id,
-                                  "unknown to this cloud node; re-register"))
+                self._async.send(
+                    make_addr(f"client.{msg.client_id}", msg.node_id),
+                    Evicted(msg.client_id,
+                            "unknown to this cloud node; re-register"),
+                    sender=self.name)
         elif isinstance(msg, _EvictionTick):
             self._sweep()
             self._schedule_sweep()
+        elif isinstance(msg, _ShardBeatTick):
+            sys_ = self._system
+            node = sys_.node if sys_ is not None else None
+            if (self.router_addr is not None and self._async is not None
+                    and node is not None):
+                self._async.send(
+                    self.router_addr,
+                    ShardHeartbeat(node.node_id, node.address(self.name),
+                                   node.transport.endpoint),
+                    sender=self.name)
+            self._schedule_shard_heartbeat()
         elif isinstance(msg, StopNode):
             # sharded shutdown: fan the stop out to every owned client,
             # then stop this shard (and its hosting process, if any)
@@ -969,6 +1257,10 @@ class CloudNode(Actor):
     def on_stop(self) -> None:
         if self._sweep_timer is not None:
             self._sweep_timer.cancel()
+        if self._shard_hb_timer is not None:
+            self._shard_hb_timer.cancel()
+        if self._async is not None:
+            self._async.stop()
 
 
 # ---------------------------------------------------------------------------
@@ -1027,87 +1319,219 @@ class ShardRing:
         return self._ring[i][1]
 
 
+def shard_hash_report(results: Sequence[TaggedResult]
+                      ) -> Tuple[Dict[str, int], Dict[str, List[Any]]]:
+    """The per-md5 report a shard attaches to its iteration events:
+    ``(counts, payloads)`` over **every** result it received — including
+    hashes that lost the shard-local plurality vote, which is exactly
+    the information the hierarchical merge was missing. Payload lists
+    preserve arrival order."""
+    counts: Dict[str, int] = {}
+    payloads: Dict[str, List[Any]] = {}
+    for r in results:
+        counts[r.code_md5] = counts.get(r.code_md5, 0) + 1
+        payloads.setdefault(r.code_md5, []).append(r.payload)
+    return counts, payloads
+
+
+def merge_iteration_exact(events: Sequence[IterationEvent]
+                          ) -> Tuple[Optional[str], List[Any], int, int]:
+    """Exact fleet-wide md5-majority over shard-level events carrying
+    ``hash_counts``/``hash_payloads``: sum the per-shard count tables
+    (shards partition the clients, so the sum is the flat multiset's
+    table) and apply the one plurality rule. Equal, by construction, to
+    ``consistency.majority_filter`` over the unpartitioned results —
+    property-tested in tests/test_sharded.py. Returns
+    ``(winner, accepted_payloads, n_accepted, n_dropped)``."""
+    totals = merge_hash_counts([ev.hash_counts or {} for ev in events])
+    winner = plurality_winner(totals)
+    payloads: List[Any] = []
+    if winner is not None:
+        for ev in events:                  # caller fixes the event order
+            if ev.hash_payloads:
+                payloads.extend(ev.hash_payloads.get(winner, []))
+    n_accepted = totals.get(winner, 0) if winner is not None else 0
+    n_dropped = sum(totals.values()) - n_accepted
+    return winner, payloads, n_accepted, n_dropped
+
+
+def merge_iteration_hierarchical(events: Sequence[IterationEvent]
+                                 ) -> Tuple[Optional[str], List[Any], int, int]:
+    """The legacy two-level merge, kept as the documented fallback for
+    shard events that carry no hash report (older senders) — and as the
+    contrast case the property tests use to demonstrate the bug class:
+    the vote runs over *shard winners* only, so a fleet-wide plurality
+    split across shards is invisible and can lose to a concentrated
+    minority. The result is still single-version (the paper's
+    invariant), just not always the flat-filter winner."""
+    counts: Counter = Counter()
+    for ev in events:
+        if ev.winning_md5 is not None:
+            counts[ev.winning_md5] += ev.n_accepted
+    winner = plurality_winner(counts)
+    payloads: List[Any] = []
+    n_accepted = n_dropped = 0
+    for ev in events:
+        if winner is not None and ev.winning_md5 == winner:
+            vals = ev.value if isinstance(ev.value, list) else [ev.value]
+            payloads.extend(vals)
+            n_accepted += ev.n_accepted
+            n_dropped += ev.n_dropped
+        else:
+            n_dropped += ev.n_dropped + ev.n_accepted
+    return winner, payloads, n_accepted, n_dropped
+
+
+@dataclass
+class _AggLeg:
+    """One fan-out leg of a sharded assignment, as the aggregator sees
+    it: which shard runs it and how its leg-local iterations map onto
+    the assignment's global numbering (global = offset + local)."""
+    shard_id: str
+    offset: int
+    delivered: int = 0                 # contiguous leg-local iterations seen
+    deploy: Optional[DeployEvent] = None
+    done: Optional[DoneEvent] = None
+
+
 class ShardAggregator(Actor):
     """Temporary per-assignment fan-in on the router node: merges the
     shard-level event streams of one assignment back into the single
     typed stream the submitting ``AssignmentHandle`` expects.
 
-    Each shard runs its own ``AssignmentHandler`` over its disjoint
-    client subset with the shard-local quorum rule and reports raw
-    accepted payloads per iteration (the router strips ``cloud_method``
-    from the fanned-out specs). This actor:
+    The unit of fan-out is a **leg**: one sub-spec sent to one shard,
+    identified by a leg-qualified assignment id (``"<asg>#<n>"``) that
+    every event echoes back. Each shard runs an ``AssignmentHandler``
+    over its disjoint client subset with the shard-local quorum rule
+    and attaches the per-md5 hash report (``shard_hash_report``) to its
+    iteration events. This actor:
 
-    * applies the md5-majority rule **hierarchically**: each shard has
-      already committed its local plurality hash, and the merge picks
-      among the *shard winners*, weighted by their accepted counts
-      (ties broken by smallest md5, as in
-      ``consistency.majority_filter``). Agreeing shards' payloads are
-      concatenated; dissenting shards' accepted results count as
-      dropped. A merged iteration is therefore always single-version —
-      the paper's invariant — but during cross-shard version skew (a
-      deploy landing between shard commits) the hierarchical winner can
-      differ from what a single global filter over all raw results
-      would pick, because a hash that lost its shard-local vote is not
-      visible to the merge;
+    * computes the **exact** fleet-wide md5-majority per iteration
+      (``merge_iteration_exact``): per-shard hash counts are summed and
+      the single plurality rule applied to the sum, so the committed
+      hash equals what ``consistency.majority_filter`` would pick on
+      the flat result multiset — no hierarchical approximation. Events
+      without a hash report (older senders) fall back to
+      ``merge_iteration_hierarchical``;
     * runs the user's cloud aggregation once, at the router, over the
       merged accepted set;
-    * emits iterations in order, a single merged ``DeployEvent`` for
-      code replacements, and one terminal ``DoneEvent`` whose status is
-      CANCELLED if any shard cancelled, FAILED if any shard failed,
-      DONE otherwise.
+    * survives **shard loss**: on ``_ShardLost`` the dead shard's legs
+      are retired, an emission barrier holds back iterations the dead
+      leg had not delivered, and the router is asked to re-fan-out
+      those clients (once re-homed) as replacement legs offset to the
+      resume iteration — so the handle completes instead of timing out;
+    * emits iterations in global order, a single merged ``DeployEvent``
+      for code replacements, and one terminal ``DoneEvent`` whose
+      status is CANCELLED if any leg cancelled, FAILED if any leg
+      failed (or every leg was lost with nothing re-homed), DONE
+      otherwise.
     """
 
     def __init__(self, name: str, spec: AssignmentSpec,
-                 expected_shards: Set[str], reply_to: str,
-                 cloud_app: CloudApp):
+                 legs: Dict[str, Tuple[str, int]], reply_to: str,
+                 cloud_app: CloudApp, router: str):
         super().__init__(name)
         self.spec = spec
-        self.expected = set(expected_shards)    # shard node ids
+        self.legs: Dict[str, _AggLeg] = {
+            leg_id: _AggLeg(shard_id, offset)
+            for leg_id, (shard_id, offset) in legs.items()}
         self.reply_to = reply_to
         self.cloud_app = cloud_app
-        self._deploys: Dict[str, DeployEvent] = {}
+        self.router = router               # router actor name (same node)
         self._iters: Dict[int, Dict[str, IterationEvent]] = {}
-        self._dones: Dict[str, DoneEvent] = {}
+        self._barriers: Dict[str, int] = {}   # dead leg -> resume iteration
         self._merged_deploy: Optional[DeployEvent] = None
-        self._next_emit = 0                     # next iteration to emit
+        self._next_emit = 0                   # next global iteration to emit
 
     def handle(self, sender, msg) -> None:
-        shard = split_addr(sender or "")[1]
-        if shard not in self.expected:
-            return                              # stray/late frame: ignore
-        if isinstance(msg, DeployEvent):
-            self._deploys[shard] = msg
-        elif isinstance(msg, IterationEvent):
-            self._iters.setdefault(msg.iteration, {})[shard] = msg
-        elif isinstance(msg, DoneEvent):
-            self._dones[shard] = msg
-        else:
+        if isinstance(msg, _ShardLost):
+            self._shard_lost(msg.shard_id)
             return
+        if isinstance(msg, _LegAdded):
+            self.legs[msg.leg_id] = _AggLeg(msg.shard_id, msg.offset)
+            return
+        if isinstance(msg, _RehomeDone):
+            self._barriers.pop(msg.leg_id, None)
+            self._flush()
+            return
+        if not isinstance(msg, (DeployEvent, IterationEvent, DoneEvent)):
+            return
+        leg = self.legs.get(msg.assignment_id)
+        if leg is None:
+            return      # stray frame, or a leg already written off as lost
+        if isinstance(msg, DeployEvent):
+            leg.deploy = msg
+        elif isinstance(msg, IterationEvent):
+            g = leg.offset + msg.iteration
+            if g >= self._next_emit:           # late duplicates: drop
+                self._iters.setdefault(g, {})[msg.assignment_id] = msg
+            leg.delivered = max(leg.delivered, msg.iteration + 1)
+        else:
+            leg.done = msg
+        self._flush()
+
+    # -- shard loss / re-homing ------------------------------------------------
+    def _shard_lost(self, shard_id: str) -> None:
+        for leg_id, leg in list(self.legs.items()):
+            if leg.shard_id != shard_id or leg.done is not None:
+                continue
+            if self.spec.kind == AssignmentKind.CODE_REPLACEMENT:
+                if leg.deploy is not None:
+                    # install acked before the crash; only the terminal
+                    # event was lost — the leg's contribution stands
+                    leg.done = DoneEvent(self.spec.assignment_id, Status.DONE,
+                                         detail="shard lost after deploy ack")
+                    continue
+                resume = 0
+            else:
+                # events per leg arrive in order, so delivery is contiguous
+                resume = leg.offset + leg.delivered
+                if resume >= self.spec.iterations:
+                    # delivered every iteration; only its DoneEvent was
+                    # lost — retire the leg, its data stands
+                    self.legs.pop(leg_id)
+                    continue
+            self.legs.pop(leg_id)
+            self._barriers[leg_id] = resume
+            self.send(self.router, _RehomeRequest(
+                self.spec.assignment_id, leg_id, resume))
         self._flush()
 
     # -- merging --------------------------------------------------------------
-    def _shard_settled(self, shard: str, iteration: Dict[str, Any]) -> bool:
-        return shard in iteration or shard in self._dones
+    def _settled(self, leg: _AggLeg, g: int) -> bool:
+        return (leg.done is not None or g < leg.offset
+                or g < leg.offset + leg.delivered)
+
+    def _barrier_blocks(self, g: int) -> bool:
+        return any(resume <= g for resume in self._barriers.values())
 
     def _flush(self) -> None:
-        if self._merged_deploy is None and self._deploys and all(
-                s in self._deploys or s in self._dones
-                for s in self.expected):
+        live = list(self.legs.values())
+        if (self._merged_deploy is None and not self._barriers
+                and any(l.deploy is not None for l in live)
+                and all(l.deploy is not None or l.done is not None
+                        for l in live)):
             self._emit_deploy()
-        while (self._next_emit in self._iters
-               and all(self._shard_settled(s, self._iters[self._next_emit])
-                       for s in self.expected)):
-            self._emit_iteration(self._next_emit,
-                                 self._iters.pop(self._next_emit))
-            self._next_emit += 1
-        if len(self._dones) == len(self.expected):
+        while True:
+            g = self._next_emit
+            if (g in self._iters and not self._barrier_blocks(g)
+                    and all(self._settled(leg, g)
+                            for leg in self.legs.values())):
+                self._emit_iteration(g, self._iters.pop(g))
+                self._next_emit += 1
+            else:
+                break
+        if (not self._barriers
+                and all(l.done is not None for l in self.legs.values())):
             self._emit_done()
             self.stop()
 
     def _emit_deploy(self) -> None:
-        n_installed = sum(d.n_installed for d in self._deploys.values())
-        n_targets = sum(d.n_targets for d in self._deploys.values())
-        any_d = next(iter(self._deploys.values()))
+        deploys = [l.deploy for l in self.legs.values()
+                   if l.deploy is not None]
+        n_installed = sum(d.n_installed for d in deploys)
+        n_targets = sum(d.n_targets for d in deploys)
+        any_d = deploys[0]
         self._merged_deploy = DeployEvent(
             self.spec.assignment_id, any_d.slot, any_d.md5, any_d.version,
             self.spec.target, n_installed=n_installed, n_targets=n_targets)
@@ -1116,27 +1540,15 @@ class ShardAggregator(Actor):
     def _emit_iteration(self, it: int,
                         got: Dict[str, IterationEvent]) -> None:
         if not got:
-            return                              # every shard finished early
-        # fleet-wide md5-majority across the shard winners (ties broken by
-        # smallest md5, same rule as consistency.majority_filter)
-        counts: Counter = Counter()
-        for ev in got.values():
-            if ev.winning_md5 is not None:
-                counts[ev.winning_md5] += ev.n_accepted
-        winner = (min(counts.items(), key=lambda kv: (-kv[1], kv[0]))[0]
-                  if counts else None)
-        payloads: List[Any] = []
-        n_accepted = n_dropped = n_stragglers = 0
-        for shard in sorted(got):
-            ev = got[shard]
-            n_stragglers += ev.n_stragglers
-            if winner is not None and ev.winning_md5 == winner:
-                vals = ev.value if isinstance(ev.value, list) else [ev.value]
-                payloads.extend(vals)
-                n_accepted += ev.n_accepted
-                n_dropped += ev.n_dropped
-            else:
-                n_dropped += ev.n_dropped + ev.n_accepted
+            return                              # every leg finished early
+        events = [got[leg_id] for leg_id in sorted(got)]
+        if all(ev.hash_counts is not None for ev in events):
+            winner, payloads, n_accepted, n_dropped = \
+                merge_iteration_exact(events)
+        else:
+            winner, payloads, n_accepted, n_dropped = \
+                merge_iteration_hierarchical(events)
+        n_stragglers = sum(ev.n_stragglers for ev in events)
         value = self.cloud_app.aggregate(
             self.spec,
             [TaggedResult("", it, winner or "", payload=p) for p in payloads])
@@ -1146,23 +1558,67 @@ class ShardAggregator(Actor):
             n_stragglers=n_stragglers))
 
     def _emit_done(self) -> None:
-        statuses = {d.status for d in self._dones.values()}
+        dones = {leg_id: leg.done for leg_id, leg in self.legs.items()
+                 if leg.done is not None}
+        statuses = {d.status for d in dones.values()}
         if Status.CANCELLED in statuses:
             status = Status.CANCELLED
         elif statuses & {Status.FAILED, Status.TIMEOUT}:
             status = Status.FAILED
-        else:
+        elif statuses:
             status = Status.DONE
+        elif self.spec.kind == AssignmentKind.CODE_REPLACEMENT:
+            status = (Status.DONE if self._merged_deploy is not None
+                      else Status.FAILED)
+        else:
+            # every leg was lost without a terminal event: DONE only if
+            # their delivered iterations already covered the assignment
+            status = (Status.DONE if self._next_emit >= self.spec.iterations
+                      else Status.FAILED)
         if self._merged_deploy is not None:
             d = self._merged_deploy
             detail = (f"{d.n_installed}/{d.n_targets} clients installed "
                       f"{d.md5}")
-        else:
-            parts = [f"{shard}: {d.detail}"
-                     for shard, d in sorted(self._dones.items()) if d.detail]
+        elif dones:
+            parts = [f"{self.legs[leg_id].shard_id}: {d.detail}"
+                     for leg_id, d in sorted(dones.items()) if d.detail]
             detail = "; ".join(parts)
+        else:
+            detail = ("all shards lost during assignment"
+                      if status == Status.FAILED else
+                      "all shard legs lost after delivering every iteration")
         self.send(self.reply_to,
                   DoneEvent(self.spec.assignment_id, status, detail=detail))
+
+
+@dataclass
+class _RouterLeg:
+    shard_id: str
+    client_ids: Tuple[str, ...]
+
+
+@dataclass
+class _AsgRecord:
+    """Router-side bookkeeping for one in-flight sharded assignment: the
+    original spec/sink, the live legs (leg id -> shard + client subset),
+    and the fan-out sequence used to mint fresh leg ids."""
+    spec: AssignmentSpec
+    reply_to: str
+    agg_name: str
+    legs: Dict[str, _RouterLeg] = field(default_factory=dict)
+    seq: int = 0
+
+
+@dataclass
+class _Rehome:
+    """One pending re-home: a dead leg's clients we are waiting to see
+    re-register before re-fanning the remainder of the assignment out."""
+    assignment_id: str
+    leg_id: str
+    resume: int
+    client_ids: Tuple[str, ...]
+    waiting: Set[str]
+    timer: Optional[threading.Timer] = None
 
 
 class RouterNode(Actor):
@@ -1170,14 +1626,28 @@ class RouterNode(Actor):
     cloud). Clients register here and are assigned to a shard by
     consistent hashing on ``client_id``; shards own disjoint peer tables
     and dial their clients directly, so the router never touches task
-    traffic — only registrations, submissions, and cancellations.
+    traffic — only registrations, submissions, cancellations, and
+    liveness beacons.
 
-    Submissions fan out to every shard that owns targeted clients (spec
-    narrowed to that shard's clients, ``cloud_method`` stripped so
-    aggregation happens once, at the router) and a per-assignment
-    ``ShardAggregator`` merges the shard streams back into the handle's
-    event stream — the control-plane API is byte-for-byte the same as
-    the unsharded topology.
+    Submissions fan out as **legs** — one leg-qualified sub-spec
+    (``"<asg>#<n>"``) per shard that owns targeted clients, narrowed to
+    that shard's clients, ``cloud_method`` stripped and
+    ``shard_report`` set so aggregation happens once (and exactly) at
+    the router — and a per-assignment ``ShardAggregator`` merges the
+    leg streams back into the handle's event stream. The control-plane
+    API is byte-for-byte the same as the unsharded topology.
+
+    Shard liveness mirrors client churn one level up: shards send
+    ``ShardHeartbeat`` every ``shard_heartbeat_interval_s``, and a
+    sweep evicts shards silent past ``shard_eviction_timeout_s`` —
+    removing them from the ring (bounded remapping), orphaning their
+    clients (who re-register here and are forwarded to their new ring
+    shard, catching up via ``RegisterAck``), and re-fanning-out each
+    in-flight leg's remaining iterations to the orphans' new shards
+    once they re-register (bounded by ``rehome_grace_s``; whoever has
+    not rejoined by then is left out so handles always complete). A
+    shard that heartbeats after being evicted (a blip, not a crash) is
+    re-admitted to the ring.
 
     Cloud-target code replacements install into the *router's*
     ``CloudApp``, which is the single place user aggregation runs in a
@@ -1185,15 +1655,30 @@ class RouterNode(Actor):
     """
 
     def __init__(self, name: str, shard_addrs: Dict[str, str],
-                 cloud_app: CloudApp, vnodes: int = 64):
+                 cloud_app: CloudApp, vnodes: int = 64, *,
+                 shard_eviction_timeout_s: Optional[float] = None,
+                 shard_sweep_interval_s: Optional[float] = None,
+                 rehome_grace_s: float = 2.0):
         super().__init__(name)
         self.shard_addrs = dict(shard_addrs)   # shard node id -> cloud addr
         self.cloud_app = cloud_app
         self.ring = ShardRing(self.shard_addrs, vnodes=vnodes)
         self.clients: Dict[str, str] = {}      # client_id -> shard node id
+        self.orphans: Dict[str, str] = {}      # client_id -> dead shard id
+        self.shard_timeout = shard_eviction_timeout_s
+        self.rehome_grace = rehome_grace_s
+        self._sweep_interval = shard_sweep_interval_s or (
+            shard_eviction_timeout_s / 4 if shard_eviction_timeout_s
+            else None)
+        self._sweep_timer: Optional[threading.Timer] = None
+        self._shard_last_seen: Dict[str, float] = {
+            s: time.time() for s in self.shard_addrs}
+        self._async: Optional[_AsyncSender] = None
         self._agg_seq = 0
-        self._assignment_shards: Dict[str, List[str]] = {}
+        self._assignments: Dict[str, _AsgRecord] = {}
         self._aggregators: Dict[str, Tuple[str, str]] = {}  # actor -> (asg, sink)
+        self._rehomes: Dict[int, _Rehome] = {}
+        self._rehome_seq = 0
 
     # -- readiness polling (plain len() reads are thread-safe) -----------------
     @property
@@ -1204,40 +1689,169 @@ class RouterNode(Actor):
     def n_shards(self) -> int:
         return len(self.shard_addrs)
 
+    # -- shard liveness ---------------------------------------------------------
+    def on_start(self) -> None:
+        assert self._system is not None
+        self._async = _AsyncSender(self._system, f"async:{self.name}")
+        self._schedule_sweep()
+
+    def _schedule_sweep(self) -> None:
+        if self._sweep_interval is None or self.shard_timeout is None:
+            return
+        sys_ = self._system
+        assert sys_ is not None
+        self._sweep_timer = threading.Timer(
+            self._sweep_interval,
+            lambda: sys_.send(self.name, _EvictionTick()))
+        self._sweep_timer.daemon = True
+        self._sweep_timer.start()
+
+    def _sweep_shards(self) -> None:
+        now = time.time()
+        assert self.shard_timeout is not None
+        stale = [s for s, t in self._shard_last_seen.items()
+                 if now - t > self.shard_timeout]
+        for sid in stale:
+            self._evict_shard(
+                sid, f"no shard heartbeat for "
+                     f"{now - self._shard_last_seen[sid]:.2f}s "
+                     f"(timeout {self.shard_timeout:.2f}s)")
+
+    def _evict_shard(self, shard_id: str, reason: str) -> None:
+        addr = self.shard_addrs.pop(shard_id, None)
+        self._shard_last_seen.pop(shard_id, None)
+        if addr is None:
+            return
+        self.ring.remove(shard_id)
+        # orphan the dead shard's clients: they re-register through us
+        # (missed acks / dropped connection) and land on surviving shards
+        for cid, owner in list(self.clients.items()):
+            if owner == shard_id:
+                self.clients.pop(cid)
+                self.orphans[cid] = shard_id
+        # fail-fast any straggler sends to the dead shard
+        node = self._system.node if self._system is not None else None
+        if node is not None:
+            node.transport.forget_peer(shard_id)
+        # tell every affected aggregator so it can retire the shard's
+        # legs and ask us (back on this mailbox) to re-home them
+        lost = _ShardLost(shard_id)
+        for rec in self._assignments.values():
+            if any(leg.shard_id == shard_id for leg in rec.legs.values()):
+                self.send(rec.agg_name, lost)
+
+    def _readmit_shard(self, shard_id: str, cloud_addr: str,
+                       endpoint: Optional[str]) -> None:
+        my_node = self._system.node if self._system is not None else None
+        if endpoint and my_node is not None:
+            my_node.transport.add_peer(shard_id, endpoint)
+        self.shard_addrs[shard_id] = cloud_addr
+        self.ring.add(shard_id)
+        self._shard_last_seen[shard_id] = time.time()
+        # a shard that went away and came back (blip or restart) takes
+        # back the orphans it owned that nobody else has claimed yet
+        for cid, dead_sid in list(self.orphans.items()):
+            if dead_sid == shard_id:
+                self.orphans.pop(cid)
+                self.clients[cid] = shard_id
+
     # -- message loop -----------------------------------------------------------
     def handle(self, sender, msg) -> None:
         if isinstance(msg, RegisterShard):
-            my_node = (self._system.node if self._system is not None
-                       else None)
-            if msg.endpoint and my_node is not None:
-                my_node.transport.add_peer(msg.shard_id, msg.endpoint)
-            self.shard_addrs[msg.shard_id] = msg.cloud_addr
-            self.ring.add(msg.shard_id)
+            self._readmit_shard(msg.shard_id, msg.cloud_addr, msg.endpoint)
+        elif isinstance(msg, ShardHeartbeat):
+            if msg.shard_id in self.shard_addrs:
+                self._shard_last_seen[msg.shard_id] = time.time()
+            else:
+                # heartbeat from a shard we evicted during a blip: it is
+                # alive after all — re-admit it to the ring
+                self._readmit_shard(msg.shard_id, msg.cloud_addr,
+                                    msg.endpoint)
         elif isinstance(msg, RegisterClient):
             shard = self.ring.lookup(msg.client_id)
             if shard is None:
                 return                      # no shards yet: client retries
+            self.orphans.pop(msg.client_id, None)
             self.clients[msg.client_id] = shard
-            self.send(self.shard_addrs[shard], msg)   # shard acks the client
+            # forward via the async sender: the ring may still name a
+            # dying shard, and its reconnect backoff must not stall the
+            # router's mailbox (the client re-sends until acked anyway)
+            assert self._async is not None
+            self._async.send(self.shard_addrs[shard], msg, sender=self.name)
+            self._check_rehomes(msg.client_id)
         elif isinstance(msg, Evicted):
             self.clients.pop(msg.client_id, None)
         elif isinstance(msg, SubmitAssignment):
             self._submit(msg)
         elif isinstance(msg, CancelAssignment):
-            for addr in self._assignment_shards.get(
-                    msg.assignment_id, list(self.shard_addrs.values())):
-                self.send(addr, msg)
+            rec = self._assignments.get(msg.assignment_id)
+            if rec is None:
+                return
+            # abort pending re-homes first so a replacement leg is not
+            # fanned out after the user already cancelled
+            for token, rh in list(self._rehomes.items()):
+                if rh.assignment_id == msg.assignment_id:
+                    self._cancel_rehome(token)
+                    self.send(rec.agg_name, _RehomeDone(rh.leg_id))
+            assert self._async is not None
+            for leg_id, leg in rec.legs.items():
+                addr = self.shard_addrs.get(leg.shard_id)
+                if addr is not None:
+                    self._async.send(addr, CancelAssignment(leg_id),
+                                     sender=self.name)
+        elif isinstance(msg, _RehomeRequest):
+            self._start_rehome(msg)
+        elif isinstance(msg, _RehomeTimeout):
+            rh = self._rehomes.pop(msg.token, None)
+            if rh is not None:
+                self._finalize_rehome(rh)
+        elif isinstance(msg, _EvictionTick):
+            self._sweep_shards()
+            self._schedule_sweep()
         elif isinstance(msg, Down):
             entry = self._aggregators.pop(msg.actor, None)
             if entry is not None:
                 asg, sink = entry
-                self._assignment_shards.pop(asg, None)
+                self._assignments.pop(asg, None)
+                for token, rh in list(self._rehomes.items()):
+                    if rh.assignment_id == asg:
+                        self._cancel_rehome(token)
                 if msg.reason is not None:
                     self.send(sink, DoneEvent(
                         asg, Status.FAILED,
                         detail=f"aggregator crash: {msg.reason}"))
 
     # -- fan-out ------------------------------------------------------------------
+    def _shard_params(self, spec: AssignmentSpec) -> Dict[str, Any]:
+        # shards report raw per-hash results; the router aggregates once
+        p = {k: v for k, v in spec.params.items() if k != "cloud_method"}
+        p["shard_report"] = True
+        return p
+
+    def _fan_out(self, rec: _AsgRecord, groups: Dict[str, List[str]],
+                 agg_addr: str, offset: int) -> None:
+        """Mint one leg per shard group, announce each to the aggregator
+        (so no event can arrive for an unknown leg), then ship the
+        sub-specs covering the iterations from ``offset`` on."""
+        spec = rec.spec
+        params = self._shard_params(spec)
+        minted: List[str] = []
+        for shard, cids in groups.items():
+            rec.seq += 1
+            leg_id = f"{spec.assignment_id}#{rec.seq}"
+            rec.legs[leg_id] = _RouterLeg(shard, tuple(cids))
+            self.send(rec.agg_name, _LegAdded(leg_id, shard, offset))
+            minted.append(leg_id)
+        assert self._async is not None
+        for leg_id in minted:
+            leg = rec.legs[leg_id]
+            sub = replace(spec, assignment_id=leg_id,
+                          client_ids=leg.client_ids, params=params,
+                          iterations=spec.iterations - offset)
+            self._async.send(self.shard_addrs[leg.shard_id],
+                             SubmitAssignment(sub, agg_addr),
+                             sender=self.name)
+
     def _submit(self, msg: SubmitAssignment) -> None:
         spec = msg.spec
         if spec.kind == AssignmentKind.CODE_REPLACEMENT \
@@ -1267,22 +1881,86 @@ class RouterNode(Actor):
             return
         self._agg_seq += 1
         agg_name = f"{self.name}.agg{self._agg_seq}"
-        agg = ShardAggregator(agg_name, spec, set(groups), msg.reply_to,
-                              self.cloud_app)
+        rec = _AsgRecord(spec, msg.reply_to, agg_name)
+        self._assignments[spec.assignment_id] = rec
+        agg = ShardAggregator(agg_name, spec, {}, msg.reply_to,
+                              self.cloud_app, router=self.name)
         assert self._system is not None
         self._system.spawn(agg)
         self._system.monitor(self.name, agg_name)
         self._aggregators[agg_name] = (spec.assignment_id, msg.reply_to)
         agg_addr = (self._system.node.address(agg_name)
                     if self._system.node is not None else agg_name)
-        # shards report raw accepted payloads; the router aggregates once
-        shard_params = {k: v for k, v in spec.params.items()
-                        if k != "cloud_method"}
-        self._assignment_shards[spec.assignment_id] = [
-            self.shard_addrs[s] for s in groups]
-        for shard, cids in groups.items():
-            sub = replace(spec, client_ids=tuple(cids), params=shard_params)
-            self.send(self.shard_addrs[shard], SubmitAssignment(sub, agg_addr))
+        # _fan_out announces every leg to the aggregator (_LegAdded,
+        # local mailbox) before any sub-spec ships, so no shard event
+        # can arrive for a leg the aggregator does not know yet
+        self._fan_out(rec, groups, agg_addr, 0)
+
+    # -- re-homing ----------------------------------------------------------------
+    def _start_rehome(self, req: _RehomeRequest) -> None:
+        rec = self._assignments.get(req.assignment_id)
+        if rec is None:
+            return
+        leg = rec.legs.get(req.leg_id)
+        if leg is None:
+            return
+        waiting = {c for c in leg.client_ids if c not in self.clients}
+        rh = _Rehome(req.assignment_id, req.leg_id, req.resume_iteration,
+                     leg.client_ids, waiting)
+        if not waiting:
+            self._finalize_rehome(rh)
+            return
+        self._rehome_seq += 1
+        token = self._rehome_seq
+        self._rehomes[token] = rh
+        sys_ = self._system
+        assert sys_ is not None
+        rh.timer = threading.Timer(
+            self.rehome_grace,
+            lambda: sys_.send(self.name, _RehomeTimeout(token)))
+        rh.timer.daemon = True
+        rh.timer.start()
+
+    def _check_rehomes(self, client_id: str) -> None:
+        for token, rh in list(self._rehomes.items()):
+            rh.waiting.discard(client_id)
+            if not rh.waiting:
+                self._cancel_rehome(token)
+                self._finalize_rehome(rh)
+
+    def _cancel_rehome(self, token: int) -> None:
+        rh = self._rehomes.pop(token, None)
+        if rh is not None and rh.timer is not None:
+            rh.timer.cancel()
+
+    def _finalize_rehome(self, rh: _Rehome) -> None:
+        """Re-fan-out a dead leg's remaining iterations to wherever its
+        clients re-registered; clients that did not make it back inside
+        the grace window are left out (the assignment completes without
+        them, like any permanent straggler)."""
+        rec = self._assignments.get(rh.assignment_id)
+        if rec is None:
+            return
+        rec.legs.pop(rh.leg_id, None)
+        groups: Dict[str, List[str]] = {}
+        for cid in rh.client_ids:
+            shard = self.clients.get(cid)
+            if shard is not None and shard in self.shard_addrs:
+                groups.setdefault(shard, []).append(cid)
+        agg_addr = (self._system.node.address(rec.agg_name)
+                    if self._system is not None
+                    and self._system.node is not None else rec.agg_name)
+        if groups:
+            self._fan_out(rec, groups, agg_addr, rh.resume)
+        self.send(rec.agg_name, _RehomeDone(rh.leg_id))
+
+    def on_stop(self) -> None:
+        if self._sweep_timer is not None:
+            self._sweep_timer.cancel()
+        for token in list(self._rehomes):
+            self._cancel_rehome(token)
+        if self._async is not None:
+            self._async.stop()
 
 
 # ---------------------------------------------------------------------------
@@ -1542,11 +2220,27 @@ class Fleet:
       ``client_id`` and the handle API is unchanged. Under ``"tcp"``
       each shard is itself a spawned child process.
 
-    Churn knobs: ``heartbeat_interval_s`` makes clients heartbeat their
+    Churn knobs (all hoisted here so tests never monkeypatch node
+    classes): ``heartbeat_interval_s`` makes clients heartbeat their
     owning cloud/shard; ``eviction_timeout_s`` makes cloud nodes evict
     clients whose heartbeats stop (departed clients become permanent
     stragglers for in-flight assignments, and a returning client
-    re-registers and catches up on deployed code).
+    re-registers and catches up on deployed code); ``sweep_interval_s``
+    overrides the eviction sweep cadence (default: timeout / 4);
+    ``heartbeat_miss_limit`` is how many unacknowledged beats a client
+    tolerates before re-registering through its entry point;
+    ``straggler_grace_s`` is the default per-iteration deadline.
+
+    Shard-liveness knobs (sharded topologies):
+    ``shard_heartbeat_interval_s`` / ``shard_eviction_timeout_s`` arm
+    the shard -> router beacon and the router's shard-eviction sweep;
+    ``rehome_grace_s`` bounds how long the router waits for a dead
+    shard's clients to re-register before re-fanning-out in-flight
+    assignments without the missing ones.
+
+    ``transport_wrap`` (in-proc only) wraps every node's transport —
+    the hook tests/fault_fabric.py uses to inject deterministic drops,
+    duplicates, delays, and partitions under the whole fleet.
     """
 
     user_node: Node
@@ -1576,7 +2270,15 @@ class Fleet:
                store_root: Optional[str] = None,
                max_concurrent_assignments: Optional[int] = None,
                heartbeat_interval_s: Optional[float] = None,
-               eviction_timeout_s: Optional[float] = None) -> "Fleet":
+               eviction_timeout_s: Optional[float] = None,
+               sweep_interval_s: Optional[float] = None,
+               heartbeat_miss_limit: int = 3,
+               straggler_grace_s: float = 0.25,
+               shard_heartbeat_interval_s: Optional[float] = None,
+               shard_eviction_timeout_s: Optional[float] = None,
+               rehome_grace_s: float = 2.0,
+               transport_wrap: Optional[Callable[[Any], Any]] = None
+               ) -> "Fleet":
         """Build and start a fleet; see the class docstring for the
         topology/sharding/churn knobs. Returns only when every client
         is registered and targetable."""
@@ -1589,25 +2291,44 @@ class Fleet:
                 "eviction_timeout_s requires heartbeat_interval_s smaller "
                 "than the timeout (clients must beat faster than they are "
                 "evicted)")
+        if shard_eviction_timeout_s is not None and (
+                shard_heartbeat_interval_s is None
+                or shard_heartbeat_interval_s >= shard_eviction_timeout_s):
+            raise ValueError(
+                "shard_eviction_timeout_s requires "
+                "shard_heartbeat_interval_s smaller than the timeout "
+                "(shards must beat faster than they are evicted)")
         if topology == "tcp":
-            if slot_specs or delay_fns:
+            if slot_specs or delay_fns or transport_wrap:
                 raise ValueError(
-                    "tcp topology spawns client processes; slot_specs and "
-                    "delay_fns hold callables that cannot cross a process "
-                    "boundary — configure clients via fleet_proc instead")
+                    "tcp topology spawns client processes; slot_specs, "
+                    "delay_fns, and transport_wrap hold callables that "
+                    "cannot cross a process boundary — configure clients "
+                    "via fleet_proc instead")
             from repro.launch.fleet_proc import spawn_tcp_fleet
             return spawn_tcp_fleet(
                 n_clients, shards=shards, seed=seed, policy=policy,
                 data_per_client=data_per_client, store_root=store_root,
                 max_concurrent_assignments=max_concurrent_assignments,
                 heartbeat_interval_s=heartbeat_interval_s,
-                eviction_timeout_s=eviction_timeout_s)
+                eviction_timeout_s=eviction_timeout_s,
+                sweep_interval_s=sweep_interval_s,
+                heartbeat_miss_limit=heartbeat_miss_limit,
+                straggler_grace_s=straggler_grace_s,
+                shard_heartbeat_interval_s=shard_heartbeat_interval_s,
+                shard_eviction_timeout_s=shard_eviction_timeout_s,
+                rehome_grace_s=rehome_grace_s)
         if topology != "inproc":
             raise ValueError(f"unknown topology {topology!r}")
 
         rng = np.random.default_rng(seed)
         hub = InProcHub()
-        user_node = Node("user", InProcTransport(hub))
+
+        def make_transport() -> Any:
+            t: Any = InProcTransport(hub)
+            return transport_wrap(t) if transport_wrap is not None else t
+
+        user_node = Node("user", make_transport())
 
         def make_registry(owner: str) -> ActiveCodeRegistry:
             reg = ActiveCodeRegistry(
@@ -1633,12 +2354,14 @@ class Fleet:
             client_addrs = {f"c{i:03d}": make_addr(f"client.c{i:03d}",
                                                    f"c{i:03d}")
                             for i in range(n_clients)}
-            cloud_node = Node("cloud", InProcTransport(hub))
+            cloud_node = Node("cloud", make_transport())
             cloud_app = CloudApp(make_registry("cloud"))
             cloud = CloudNode(
                 "cloud", client_addrs, cloud_app, policy or QuorumPolicy(),
                 max_concurrent_assignments=max_concurrent_assignments,
-                heartbeat_timeout_s=eviction_timeout_s)
+                heartbeat_timeout_s=eviction_timeout_s,
+                sweep_interval_s=sweep_interval_s,
+                straggler_grace_s=straggler_grace_s)
             cloud_node.spawn(cloud)
             entry_node, entry_addr = cloud_node, cloud_node.address("cloud")
             server: Actor = cloud
@@ -1648,24 +2371,30 @@ class Fleet:
         else:
             # router + k shards; clients join through the router and are
             # partitioned onto shards by the consistent-hash ring
-            router_node = Node("router", InProcTransport(hub))
+            router_node = Node("router", make_transport())
             router_addr = router_node.address("router")
             cloud_app = CloudApp(make_registry("router"))
             shard_nodes, shard_addrs, shard_clouds = [], {}, []
             for j in range(shards):
                 sid = f"shard{j}"
-                snode = Node(sid, InProcTransport(hub))
+                snode = Node(sid, make_transport())
                 scloud = CloudNode(
                     "cloud", {}, CloudApp(make_registry(sid)),
                     policy or QuorumPolicy(),
                     max_concurrent_assignments=max_concurrent_assignments,
                     heartbeat_timeout_s=eviction_timeout_s,
+                    sweep_interval_s=sweep_interval_s,
+                    straggler_grace_s=straggler_grace_s,
+                    shard_heartbeat_interval_s=shard_heartbeat_interval_s,
                     router_addr=router_addr)
                 snode.spawn(scloud)
                 shard_nodes.append(snode)
                 shard_addrs[sid] = snode.address("cloud")
                 shard_clouds.append(scloud)
-            router = RouterNode("router", shard_addrs, cloud_app)
+            router = RouterNode(
+                "router", shard_addrs, cloud_app,
+                shard_eviction_timeout_s=shard_eviction_timeout_s,
+                rehome_grace_s=rehome_grace_s)
             router_node.spawn(router)
             entry_node, entry_addr = router_node, router_addr
             server = router
@@ -1676,10 +2405,11 @@ class Fleet:
         for i in range(n_clients):
             app = make_app(i)
             cid = app.client_id
-            cnode = Node(cid, InProcTransport(hub))
+            cnode = Node(cid, make_transport())
             actor = ClientNode(f"client.{cid}", app,
                                register_with=entry_addr,
-                               heartbeat_interval_s=heartbeat_interval_s)
+                               heartbeat_interval_s=heartbeat_interval_s,
+                               heartbeat_miss_limit=heartbeat_miss_limit)
             cnode.spawn(actor)
             client_nodes.append(cnode)
             client_addrs[cid] = cnode.address(actor.name)
@@ -1728,7 +2458,12 @@ class Fleet:
             if live is not None and cid not in live:
                 continue
             self.cloud_node.route(addr, StopNode())
-        for addr in self.shard_addrs.values():
+        # same for shards: consult the router's live view so a crashed
+        # (evicted) shard is not dialled during teardown
+        shard_live = getattr(self.server, "shard_addrs", None)
+        for sid, addr in self.shard_addrs.items():
+            if shard_live is not None and sid not in shard_live:
+                continue
             self.cloud_node.route(addr, StopNode())
         for p in list(self.procs) + list(self.shard_procs):
             p.join(timeout=timeout)

@@ -68,6 +68,13 @@ class Transport:
     delivery callback; ``send`` moves a frame to a peer node.
     """
 
+    #: Optional connection-drop signal: transports that can observe a peer
+    #: going away (an established TCP connection failing at send time) call
+    #: this with the peer's node id. Set by ``Node``; fired at most once
+    #: per drop, from the sending thread — implementations must only do
+    #: cheap, non-blocking work (post a message, flip a flag).
+    on_peer_lost: Optional[Callable[[str], None]] = None
+
     def start(self, node_id: str, deliver: Callable[[bytes], None]) -> None:
         raise NotImplementedError
 
@@ -81,6 +88,13 @@ class Transport:
 
     def add_peer(self, node_id: str, endpoint: str) -> None:
         """Teach the transport where a peer listens (TCP only; no-op here)."""
+
+    def forget_peer(self, node_id: str) -> None:
+        """Drop a peer from the dial table: in-flight reconnect loops to it
+        abort at their next attempt and later sends fail fast
+        (``TransportError`` -> sender-side dead letters). The complement of
+        ``add_peer``, used when a node has decided a peer is gone so that
+        liveness traffic does not stall behind multi-second redials."""
 
     def close(self) -> None:
         pass
@@ -218,6 +232,16 @@ class TcpTransport(Transport):
             self._peers[node_id] = (host, int(port))
             self._send_locks.setdefault(node_id, threading.Lock())
 
+    def forget_peer(self, node_id: str) -> None:
+        with self._lock:
+            self._peers.pop(node_id, None)
+            sock = self._conns.pop(node_id, None)
+        if sock is not None:
+            try:
+                sock.close()
+            except OSError:
+                pass
+
     # -- inbound ------------------------------------------------------------
     def _accept_loop(self) -> None:
         assert self._server is not None
@@ -263,15 +287,20 @@ class TcpTransport(Transport):
         return ceiling * random.uniform(0.5, 1.0)
 
     def _connect(self, dest_node: str) -> socket.socket:
-        with self._lock:
-            peer = self._peers.get(dest_node)
-        if peer is None:
-            raise TransportError(
-                f"{self.node_id}: no endpoint known for node {dest_node!r}")
         last: Optional[Exception] = None
+        peer = None
         for attempt in range(self._reconnect_attempts):
             if self._closed:
                 raise TransportError(f"{self.node_id}: transport closed")
+            # re-read the dial table every attempt: forget_peer() mid-backoff
+            # must abort the loop promptly instead of redialling a peer the
+            # node has already declared dead
+            with self._lock:
+                peer = self._peers.get(dest_node)
+            if peer is None:
+                raise TransportError(
+                    f"{self.node_id}: no endpoint known for node "
+                    f"{dest_node!r}")
             try:
                 sock = socket.create_connection(
                     peer, timeout=self._connect_timeout_s)
@@ -282,10 +311,10 @@ class TcpTransport(Transport):
                 last = e
                 if attempt < self._reconnect_attempts - 1:
                     time.sleep(self._backoff_delay(attempt))
+        where = f" at {peer[0]}:{peer[1]}" if peer is not None else ""
         raise TransportError(
-            f"{self.node_id}: cannot connect to {dest_node!r} at "
-            f"{peer[0]}:{peer[1]} after {self._reconnect_attempts} "
-            f"attempts: {last}")
+            f"{self.node_id}: cannot connect to {dest_node!r}{where} "
+            f"after {self._reconnect_attempts} attempts: {last}")
 
     def send(self, dest_node: str, data: bytes) -> None:
         if self._closed:
@@ -305,6 +334,16 @@ class TcpTransport(Transport):
                     except OSError:
                         pass
                     self._conns.pop(dest_node, None)
+                    # an *established* connection failed: the peer dropped.
+                    # Signal before redialling so interested actors (e.g. a
+                    # client watching its owning shard) can react without
+                    # waiting out the reconnect backoff below.
+                    cb = self.on_peer_lost
+                    if cb is not None and not self._closed:
+                        try:
+                            cb(dest_node)
+                        except Exception:  # noqa: BLE001 - observer bug
+                            pass           # must not poison the send path
             # no live connection (first send, or the drop path): redial
             sock = self._connect(dest_node)
             self._conns[dest_node] = sock
@@ -360,11 +399,26 @@ class Node:
         self.system = system or ActorSystem()
         self.system.node = self
         self.transport = transport
+        self._peer_lost_watchers: List[Callable[[str], None]] = []
+        transport.on_peer_lost = self._peer_lost
         transport.start(node_id, self._deliver)
 
     # -- helpers ------------------------------------------------------------
     def address(self, actor_name: str) -> str:
         return make_addr(actor_name, self.node_id)
+
+    def watch_peer_lost(self, cb: Callable[[str], None]) -> None:
+        """Subscribe to the transport's connection-drop signal. ``cb`` runs
+        on the thread that observed the drop — post a message to an actor
+        mailbox rather than doing work inline."""
+        self._peer_lost_watchers.append(cb)
+
+    def _peer_lost(self, peer_node_id: str) -> None:
+        for cb in list(self._peer_lost_watchers):
+            try:
+                cb(peer_node_id)
+            except Exception:  # noqa: BLE001 - watcher bug must not
+                pass           # poison the transport's send path
 
     def spawn(self, actor, **kw):
         return self.system.spawn(actor, **kw)

@@ -61,7 +61,8 @@ def _client_main(cfg: Dict[str, Any]) -> None:
         f"client.{cfg['client_id']}", app, stop_event=stop,
         register_with=cfg["cloud_addr"],
         endpoint=transport.endpoint,
-        heartbeat_interval_s=cfg.get("heartbeat_interval_s"))
+        heartbeat_interval_s=cfg.get("heartbeat_interval_s"),
+        heartbeat_miss_limit=cfg.get("heartbeat_miss_limit", 3))
     node.spawn(actor)
     stop.wait()
     node.close()
@@ -85,6 +86,9 @@ def _shard_main(cfg: Dict[str, Any]) -> None:
         "cloud", {}, CloudApp(registry), cfg["policy"],
         max_concurrent_assignments=cfg.get("max_concurrent_assignments"),
         heartbeat_timeout_s=cfg.get("eviction_timeout_s"),
+        sweep_interval_s=cfg.get("sweep_interval_s"),
+        straggler_grace_s=cfg.get("straggler_grace_s", 0.25),
+        shard_heartbeat_interval_s=cfg.get("shard_heartbeat_interval_s"),
         router_addr=cfg["router_addr"],
         stop_event=stop)
     node.spawn(cloud)
@@ -119,6 +123,12 @@ def spawn_tcp_fleet(n_clients: int, *, shards: int = 1, seed: int = 0,
                     max_concurrent_assignments: Optional[int] = None,
                     heartbeat_interval_s: Optional[float] = None,
                     eviction_timeout_s: Optional[float] = None,
+                    sweep_interval_s: Optional[float] = None,
+                    heartbeat_miss_limit: int = 3,
+                    straggler_grace_s: float = 0.25,
+                    shard_heartbeat_interval_s: Optional[float] = None,
+                    shard_eviction_timeout_s: Optional[float] = None,
+                    rehome_grace_s: float = 2.0,
                     ready_timeout_s: float = 120.0):
     """Build a ``Fleet`` whose client nodes — and, for ``shards > 1``,
     whose CloudNode shards — are child processes on TCP.
@@ -148,7 +158,9 @@ def spawn_tcp_fleet(n_clients: int, *, shards: int = 1, seed: int = 0,
         server: Any = CloudNode(
             "cloud", {}, cloud_app, policy,
             max_concurrent_assignments=max_concurrent_assignments,
-            heartbeat_timeout_s=eviction_timeout_s)
+            heartbeat_timeout_s=eviction_timeout_s,
+            sweep_interval_s=sweep_interval_s,
+            straggler_grace_s=straggler_grace_s)
         server_node.spawn(server)
         shard_procs: List[Any] = []
     else:
@@ -157,7 +169,10 @@ def spawn_tcp_fleet(n_clients: int, *, shards: int = 1, seed: int = 0,
         router_reg = ActiveCodeRegistry(
             store_root=f"{store_root}/router" if store_root else None)
         cloud_app = CloudApp(router_reg)
-        server = RouterNode("router", {}, cloud_app)
+        server = RouterNode(
+            "router", {}, cloud_app,
+            shard_eviction_timeout_s=shard_eviction_timeout_s,
+            rehome_grace_s=rehome_grace_s)
         server_node.spawn(server)
         server_addr = server_node.address(server.name)
         shard_procs = []
@@ -171,6 +186,9 @@ def spawn_tcp_fleet(n_clients: int, *, shards: int = 1, seed: int = 0,
                 "policy": policy,
                 "max_concurrent_assignments": max_concurrent_assignments,
                 "eviction_timeout_s": eviction_timeout_s,
+                "sweep_interval_s": sweep_interval_s,
+                "straggler_grace_s": straggler_grace_s,
+                "shard_heartbeat_interval_s": shard_heartbeat_interval_s,
                 "store_root": f"{store_root}/{sid}" if store_root else None,
             }
             p = ctx.Process(target=_shard_main, args=(cfg,), daemon=True,
@@ -207,6 +225,7 @@ def spawn_tcp_fleet(n_clients: int, *, shards: int = 1, seed: int = 0,
             "cloud_endpoint": server_transport.endpoint,
             "cloud_addr": server_addr,
             "heartbeat_interval_s": heartbeat_interval_s,
+            "heartbeat_miss_limit": heartbeat_miss_limit,
         }
         p = ctx.Process(target=_client_main, args=(cfg,), daemon=True,
                         name=f"fleet-client-{cid}")
@@ -251,6 +270,93 @@ import jax.numpy as jnp
 def run(xs):
     return jnp.mean(xs) * 4.0
 """
+
+# a deliberately slow (~ms) jax-free mean: keeps an assignment in flight
+# long enough for the shard-failover scenario to kill a shard mid-iteration
+_SLOW_MEAN = """
+import math
+def run(xs):
+    acc = 0.0
+    for i in range(20000):
+        acc += math.sin(i * 1e-3)
+    return float(sum(float(x) for x in xs) / len(xs)) + acc * 1e-12
+"""
+
+
+def run_shard_failover_smoke(n_clients: int = 6, shards: int = 3,
+                             iterations: int = 400,
+                             verbose: bool = True) -> int:
+    """The shard-liveness acceptance scenario over real processes: kill a
+    CloudNode shard process mid-iteration and require the in-flight
+    ``AssignmentHandle`` to reach ``DoneEvent`` (not a timeout), with the
+    dead shard's clients re-homed onto survivors and counted in the
+    committed iterations. Returns 0 on success (the CI smoke contract)."""
+    from repro.core.assignment import Status
+
+    def say(msg: str) -> None:
+        if verbose:
+            print(f"[fleet_proc] {msg}", flush=True)
+
+    fleet = spawn_tcp_fleet(
+        n_clients, shards=shards,
+        heartbeat_interval_s=0.25, eviction_timeout_s=1.5,
+        shard_heartbeat_interval_s=0.25, shard_eviction_timeout_s=1.5,
+        rehome_grace_s=20.0)
+    say(f"{n_clients} client processes across {shards} shard processes")
+    try:
+        fe = fleet.frontend("ci")
+        v1 = fe.deploy_code("failover_mean", _SLOW_MEAN)
+        _, done = v1.result(timeout=120.0)
+        assert done.status == Status.DONE, f"deploy failed: {done.detail}"
+
+        handle = fe.submit_analytics("failover_mean", iterations=iterations,
+                                     params={"n_values": 16})
+        stream = handle.events()
+        first = next(stream)
+        assert first.n_accepted == n_clients
+
+        # pick a victim shard that owns clients, then kill its process
+        owners = dict(fleet.server.clients)        # client_id -> shard id
+        victim_sid = next(sid for sid in fleet.server.shard_addrs
+                          if sid in owners.values())
+        n_victim_clients = sum(1 for s in owners.values()
+                               if s == victim_sid)
+        victim = fleet.shard_procs[int(victim_sid.removeprefix("shard"))]
+        victim.terminate()
+        victim.join(timeout=10.0)
+        say(f"killed {victim_sid} mid-iteration "
+            f"({n_victim_clients} clients orphaned)")
+
+        deadline = time.time() + 60.0
+        while fleet.server.n_shards > shards - 1:
+            if time.time() > deadline:
+                raise AssertionError("router never evicted the dead shard")
+            time.sleep(0.05)
+        say(f"router evicted {victim_sid}; waiting for re-homing")
+
+        results, done = handle.result(timeout=300.0)
+        assert done.status == Status.DONE, \
+            f"handle did not complete cleanly: {done.status} {done.detail}"
+        assert len(results) == iterations
+        # every committed iteration accounts for the whole fleet, and by
+        # the end the orphans are re-homed and counted again
+        assert all(r.n_accepted + r.n_dropped + r.n_stragglers == n_clients
+                   for r in results)
+        assert results[-1].n_accepted == n_clients, \
+            f"re-homed clients missing: {results[-1]}"
+        assert fleet.server.n_clients == n_clients
+        say(f"assignment completed all {iterations} iterations; "
+            f"{n_victim_clients} clients re-homed and counted")
+
+        # the healed fleet is fully deployable: v2 reaches every client
+        v2 = fe.deploy_code("failover_mean", _V2)
+        _, done = v2.result(timeout=120.0)
+        assert done.status == Status.DONE, f"redeploy failed: {done.detail}"
+        assert f"{n_clients}/{n_clients}" in done.detail, done.detail
+        say("shard failover verified across processes: PASS")
+        return 0
+    finally:
+        fleet.shutdown()
 
 
 def run_smoke(n_clients: int = 3, iterations: int = 3, shards: int = 1,
@@ -331,12 +437,17 @@ def main(argv: Optional[list] = None) -> int:
         description="Spawn a multi-process TCP fleet and run one "
                     "deploy -> iterate -> redeploy -> rollback round; "
                     "--shards puts a router in front of k CloudNode shard "
-                    "processes, --churn kills a client mid-run.")
+                    "processes, --churn kills a client mid-run, "
+                    "--shard-churn kills a whole shard process "
+                    "mid-iteration and requires clean recovery.")
     ap.add_argument("--clients", type=int, default=3)
     ap.add_argument("--iterations", type=int, default=3)
     ap.add_argument("--shards", type=int, default=1)
     ap.add_argument("--churn", action="store_true")
+    ap.add_argument("--shard-churn", action="store_true")
     args = ap.parse_args(argv)
+    if args.shard_churn:
+        return run_shard_failover_smoke(args.clients, shards=args.shards)
     return run_smoke(args.clients, args.iterations, shards=args.shards,
                      churn=args.churn)
 

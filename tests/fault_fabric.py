@@ -1,0 +1,217 @@
+"""Deterministic fault-injection for the wire fabric.
+
+``FaultyTransport`` wraps any ``Transport`` (plug it under a whole
+in-proc fleet via ``Fleet.create(..., transport_wrap=...)``) and routes
+every outbound frame through a scriptable ``FaultPlan``:
+
+* **drop** — the frame vanishes (a lossy link, a crashed receiver);
+* **duplicate** — the frame is delivered N+1 times (retransmit storms,
+  at-least-once plumbing);
+* **delay** — the frame is *parked*, not slept on: nothing moves until
+  the test calls ``plan.release()``, so delay scenarios are exactly as
+  deterministic as the test's own control flow — no real sleeps, no
+  timing races;
+* **partition** — all frames between two nodes (both directions) drop
+  until ``heal()``.
+
+Rules are keyed by ``(src, dst, tag)`` with ``None`` as wildcard, where
+``tag`` is the codec message tag peeked from the frame ("heartbeat",
+"task_done", ...). Rules match in insertion order; counted rules
+(``times=N``) expire after N matches; probabilistic rules draw from a
+seeded ``random.Random`` so a given seed always yields the same fault
+schedule. Every decision is appended to ``plan.log`` for assertions.
+"""
+from __future__ import annotations
+
+import json
+import random
+import threading
+from dataclasses import dataclass
+from typing import Callable, List, Optional, Set, Tuple
+
+from repro.core.transport import Transport
+
+
+def frame_tag(data: bytes) -> str:
+    """The codec message tag of an encoded envelope ('?' if opaque)."""
+    try:
+        return json.loads(data.decode("utf-8")).get("type", "?")
+    except Exception:  # noqa: BLE001 - non-envelope bytes
+        return "?"
+
+
+@dataclass
+class _Rule:
+    action: str                      # "drop" | "duplicate" | "delay"
+    src: Optional[str] = None        # None == any
+    dst: Optional[str] = None
+    tag: Optional[str] = None
+    times: Optional[int] = None      # None == unlimited
+    prob: Optional[float] = None     # None == always; else seeded coin
+    copies: int = 1                  # extra deliveries for "duplicate"
+
+    def matches(self, src: str, dst: str, tag: str) -> bool:
+        return ((self.src is None or self.src == src)
+                and (self.dst is None or self.dst == dst)
+                and (self.tag is None or self.tag == tag))
+
+
+@dataclass
+class _Held:
+    send: Callable[[], None]
+    src: str
+    dst: str
+    tag: str
+
+
+class FaultPlan:
+    """The shared fault schedule for one test; thread-safe (sends arrive
+    from many actor threads)."""
+
+    def __init__(self, seed: int = 0):
+        self._rng = random.Random(seed)
+        self._lock = threading.RLock()
+        self._rules: List[_Rule] = []
+        self._partitions: Set[frozenset] = set()
+        self._held: List[_Held] = []
+        self.log: List[Tuple[str, str, str, str]] = []  # (src, dst, tag, act)
+
+    # -- scripting ----------------------------------------------------------
+    def drop(self, src: Optional[str] = None, dst: Optional[str] = None,
+             tag: Optional[str] = None, times: Optional[int] = None,
+             prob: Optional[float] = None) -> None:
+        with self._lock:
+            self._rules.append(_Rule("drop", src, dst, tag, times, prob))
+
+    def duplicate(self, src: Optional[str] = None, dst: Optional[str] = None,
+                  tag: Optional[str] = None, times: Optional[int] = None,
+                  prob: Optional[float] = None, copies: int = 1) -> None:
+        with self._lock:
+            self._rules.append(
+                _Rule("duplicate", src, dst, tag, times, prob, copies))
+
+    def delay(self, src: Optional[str] = None, dst: Optional[str] = None,
+              tag: Optional[str] = None, times: Optional[int] = None,
+              prob: Optional[float] = None) -> None:
+        with self._lock:
+            self._rules.append(_Rule("delay", src, dst, tag, times, prob))
+
+    def partition(self, a: str, b: str) -> None:
+        """Drop everything between nodes ``a`` and ``b`` until heal()."""
+        with self._lock:
+            self._partitions.add(frozenset((a, b)))
+
+    def heal(self, a: Optional[str] = None, b: Optional[str] = None) -> None:
+        """Remove one partition (or all of them with no arguments)."""
+        with self._lock:
+            if a is None and b is None:
+                self._partitions.clear()
+            else:
+                self._partitions.discard(frozenset((a, b)))
+
+    # -- parked frames ------------------------------------------------------
+    @property
+    def held_count(self) -> int:
+        with self._lock:
+            return len(self._held)
+
+    def release(self, n: Optional[int] = None) -> int:
+        """Deliver up to ``n`` parked frames (all of them by default) in
+        park order; returns how many were delivered."""
+        with self._lock:
+            take = len(self._held) if n is None else min(n, len(self._held))
+            batch, self._held = self._held[:take], self._held[take:]
+        for h in batch:
+            self.log.append((h.src, h.dst, h.tag, "released"))
+            h.send()
+        return take
+
+    # -- the decision a FaultyTransport consults per frame -------------------
+    def decide(self, src: str, dst: str, tag: str,
+               send: Callable[[], None]) -> None:
+        with self._lock:
+            if frozenset((src, dst)) in self._partitions:
+                self.log.append((src, dst, tag, "partitioned"))
+                return
+            rule = None
+            for r in self._rules:
+                if not r.matches(src, dst, tag):
+                    continue
+                if r.times is not None and r.times <= 0:
+                    continue
+                if r.prob is not None and self._rng.random() >= r.prob:
+                    continue
+                rule = r
+                break
+            if rule is None:
+                self.log.append((src, dst, tag, "deliver"))
+                deliveries = 1
+            elif rule.action == "drop":
+                if rule.times is not None:
+                    rule.times -= 1
+                self.log.append((src, dst, tag, "drop"))
+                return
+            elif rule.action == "delay":
+                if rule.times is not None:
+                    rule.times -= 1
+                self.log.append((src, dst, tag, "held"))
+                self._held.append(_Held(send, src, dst, tag))
+                return
+            else:                                       # duplicate
+                if rule.times is not None:
+                    rule.times -= 1
+                self.log.append((src, dst, tag, "duplicate"))
+                deliveries = 1 + rule.copies
+        for _ in range(deliveries):
+            send()
+
+    def count(self, src: Optional[str] = None, dst: Optional[str] = None,
+              tag: Optional[str] = None, action: Optional[str] = None) -> int:
+        """How many logged decisions match the given filters."""
+        with self._lock:
+            return sum(
+                1 for (s, d, t, a) in self.log
+                if (src is None or s == src) and (dst is None or d == dst)
+                and (tag is None or t == tag)
+                and (action is None or a == action))
+
+
+class FaultyTransport(Transport):
+    """Wraps a real transport; every outbound frame consults the plan.
+    Inbound delivery, endpoints, and the connection-drop signal pass
+    straight through."""
+
+    def __init__(self, inner: Transport, plan: FaultPlan):
+        self.inner = inner
+        self.plan = plan
+        self.node_id: Optional[str] = None
+
+    def start(self, node_id: str, deliver: Callable[[bytes], None]) -> None:
+        self.node_id = node_id
+        # chain the drop signal: the inner transport observes it, the
+        # Node subscribed on *this* wrapper
+        self.inner.on_peer_lost = self._fire_peer_lost
+        self.inner.start(node_id, deliver)
+
+    def _fire_peer_lost(self, peer: str) -> None:
+        cb = self.on_peer_lost
+        if cb is not None:
+            cb(peer)
+
+    def send(self, dest_node: str, data: bytes) -> None:
+        src = self.node_id or "?"
+        self.plan.decide(src, dest_node, frame_tag(data),
+                         lambda: self.inner.send(dest_node, data))
+
+    @property
+    def endpoint(self) -> Optional[str]:
+        return self.inner.endpoint
+
+    def add_peer(self, node_id: str, endpoint: str) -> None:
+        self.inner.add_peer(node_id, endpoint)
+
+    def forget_peer(self, node_id: str) -> None:
+        self.inner.forget_peer(node_id)
+
+    def close(self) -> None:
+        self.inner.close()

@@ -23,10 +23,12 @@ from repro.core.fleet import (
     Deadline,
     Evicted,
     Heartbeat,
+    HeartbeatAck,
     NewTask,
     RegisterAck,
     RegisterClient,
     RegisterShard,
+    ShardHeartbeat,
     StopNode,
     SubmitAssignment,
     TaskDone,
@@ -69,11 +71,21 @@ def _examples():
                                     modules=(_module(),)),
         "register_shard": RegisterShard("shard0", "cloud@shard0",
                                         "127.0.0.1:4712"),
+        "shard_heartbeat": ShardHeartbeat("shard0", "cloud@shard0",
+                                          "127.0.0.1:4712"),
         "heartbeat": Heartbeat("c000", "c000"),
+        "heartbeat_ack": HeartbeatAck("c000"),
         "evicted": Evicted("c000", "no heartbeat for 1.20s"),
         "stop_node": StopNode(),
+        # a shard-level iteration event: the per-md5 hash report (counts
+        # over *all* received hashes + payloads grouped the same way) is
+        # what makes the router's cross-shard majority exact
         "iteration": IterationEvent("asg-1", 3, [1.5, 2.0], "ab" * 16,
-                                    4, 1, 0),
+                                    4, 1, 0,
+                                    hash_counts={"ab" * 16: 4, "cd" * 16: 1},
+                                    hash_payloads={"ab" * 16: [1.5, 2.0,
+                                                               1.0, 0.5],
+                                                   "cd" * 16: [9.0]}),
         "deploy": DeployEvent("asg-2", "slot", "cd" * 16, 2, Target.CLIENTS,
                               4, 4),
         "done": DoneEvent("asg-3", Status.CANCELLED, "cancelled"),
@@ -136,6 +148,18 @@ def test_unregistered_message_raises():
 
     with pytest.raises(codec.UnregisteredMessageError, match="NotWireable"):
         codec.message_to_wire(NotWireable())
+
+
+def test_iteration_event_without_hash_report_round_trips():
+    """User-facing iteration events (unsharded commits and the router's
+    merged stream) omit the shard-level hash report entirely — absent on
+    the wire, None after decode (the additive-field compat rule)."""
+    ev = IterationEvent("asg-9", 0, 1.5, "ef" * 16, 3, 0, 0)
+    wire = codec.message_to_wire(ev)
+    assert b"hash_counts" not in wire and b"hash_payloads" not in wire
+    back = codec.message_from_wire(wire)
+    assert back == ev
+    assert back.hash_counts is None and back.hash_payloads is None
 
 
 def test_envelope_round_trip():

@@ -1,0 +1,320 @@
+"""Fault-injection scenarios: shard crash with re-homing, router blips,
+duplicate heartbeats, and deterministic (sleep-free) frame delays —
+driven through the FaultyTransport wrapper under real in-proc fleets.
+
+The headline scenario is the paper's promise under the worst server-side
+fault we model: a CloudNode shard dying mid-assignment must not cost the
+user their handle — the router detects the silent shard via missing
+``ShardHeartbeat``s, evicts it from the ring, re-homes its clients as
+they re-register, re-fans-out the in-flight legs, and the
+``AssignmentHandle`` reaches ``DoneEvent`` with the re-homed clients
+counted again.
+"""
+import time
+
+import pytest
+
+from fault_fabric import FaultPlan, FaultyTransport
+from repro.core import Status
+from repro.core.fleet import Fleet
+
+V1 = """
+import jax.numpy as jnp
+def run(xs):
+    return jnp.mean(xs) * 2.0
+"""
+
+
+def _wait(predicate, timeout=15.0, interval=0.01):
+    deadline = time.time() + timeout
+    while not predicate():
+        if time.time() > deadline:
+            return False
+        time.sleep(interval)
+    return True
+
+
+def _wrap(plan):
+    return lambda inner: FaultyTransport(inner, plan)
+
+
+# ---------------------------------------------------------------------------
+# The plan itself: deterministic, seedable, no sleeps
+# ---------------------------------------------------------------------------
+
+
+def test_plan_rules_match_in_order_and_expire():
+    plan = FaultPlan()
+    plan.drop(src="a", dst="b", tag="heartbeat", times=2)
+    sent = []
+    for _ in range(4):
+        plan.decide("a", "b", "heartbeat", lambda: sent.append(1))
+    plan.decide("a", "b", "task_done", lambda: sent.append(2))
+    plan.decide("c", "b", "heartbeat", lambda: sent.append(3))
+    assert sent == [1, 1, 2, 3]          # 2 dropped, then rule expired
+    assert plan.count(action="drop") == 2
+    assert plan.count(src="a", dst="b", tag="heartbeat", action="deliver") == 2
+
+
+def test_plan_probabilistic_rules_are_seed_deterministic():
+    def schedule(seed):
+        plan = FaultPlan(seed=seed)
+        plan.drop(tag="heartbeat", prob=0.5)
+        out = []
+        for i in range(50):
+            plan.decide("a", "b", "heartbeat", lambda i=i: out.append(i))
+        return out
+
+    assert schedule(7) == schedule(7)    # same seed, same fault schedule
+    assert schedule(7) != schedule(8)    # different seed, different one
+
+
+def test_plan_partition_and_heal():
+    plan = FaultPlan()
+    plan.partition("a", "b")
+    sent = []
+    plan.decide("a", "b", "x", lambda: sent.append("ab"))
+    plan.decide("b", "a", "x", lambda: sent.append("ba"))  # both directions
+    plan.decide("a", "c", "x", lambda: sent.append("ac"))
+    assert sent == ["ac"]
+    plan.heal("a", "b")
+    plan.decide("a", "b", "x", lambda: sent.append("ab2"))
+    assert sent == ["ac", "ab2"]
+
+
+def test_plan_delay_parks_without_sleeping_and_releases_in_order():
+    plan = FaultPlan()
+    plan.delay(tag="task_done")
+    sent = []
+    plan.decide("a", "b", "task_done", lambda: sent.append(1))
+    plan.decide("a", "b", "task_done", lambda: sent.append(2))
+    assert sent == [] and plan.held_count == 2
+    assert plan.release(1) == 1
+    assert sent == [1]
+    assert plan.release() == 1
+    assert sent == [1, 2] and plan.held_count == 0
+
+
+def test_plan_duplicate_delivers_extra_copies():
+    plan = FaultPlan()
+    plan.duplicate(tag="heartbeat", copies=2, times=1)
+    sent = []
+    plan.decide("a", "b", "heartbeat", lambda: sent.append(1))
+    plan.decide("a", "b", "heartbeat", lambda: sent.append(1))
+    assert sent == [1, 1, 1, 1]          # 3 copies, then 1 normal
+
+
+# ---------------------------------------------------------------------------
+# Scenario: shard crash mid-assignment (the tentpole acceptance, in-proc)
+# ---------------------------------------------------------------------------
+
+
+def _failover_fleet(plan, n=4, shards=2):
+    # every client slowed slightly so the assignment is still in flight
+    # across the multi-hundred-ms detect->evict->re-home window
+    return Fleet.create(
+        n, shards=shards, seed=3,
+        delay_fns={f"c{i:03d}": (lambda task: 0.02) for i in range(n)},
+        heartbeat_interval_s=0.05, eviction_timeout_s=0.4,
+        shard_heartbeat_interval_s=0.05, shard_eviction_timeout_s=0.4,
+        rehome_grace_s=5.0,
+        transport_wrap=_wrap(plan))
+
+
+def test_shard_crash_mid_assignment_rehomes_clients_and_completes():
+    """Kill a shard node mid-iteration: the in-flight handle must reach
+    DoneEvent (not a timeout), with the dead shard's clients re-homed
+    onto the survivor and counted in the committed iterations."""
+    plan = FaultPlan()
+    fleet = _failover_fleet(plan)
+    try:
+        fe = fleet.frontend("u1")
+        v1 = fe.deploy_code("t_mean", V1)
+        _, done = v1.result(timeout=30.0)
+        assert done.status == Status.DONE and "4/4" in done.detail
+
+        iters = 120
+        handle = fe.submit_analytics("t_mean", iterations=iters,
+                                     params={"n_values": 16})
+        first = next(handle.events())
+        assert first.n_accepted == 4
+
+        owners = dict(fleet.server.clients)       # client_id -> shard id
+        victim_sid = next(iter(owners.values()))
+        n_victims = sum(1 for s in owners.values() if s == victim_sid)
+        assert 0 < n_victims < 4
+        victim_node = fleet.shard_nodes[int(victim_sid.removeprefix("shard"))]
+        victim_node.close(2.0)                    # the shard "crashes"
+
+        assert _wait(lambda: fleet.server.n_shards == 1), \
+            "router never evicted the silent shard"
+
+        results, done = handle.result(timeout=90.0)
+        assert done.status == Status.DONE, done.detail
+        assert len(results) == iters
+        assert [r.iteration for r in results] == list(range(iters))
+        # whole-fleet accounting on every merged iteration, and the
+        # orphans are back in the accepted set by the end
+        assert all(r.n_accepted + r.n_dropped + r.n_stragglers == 4
+                   for r in results)
+        assert results[-1].n_accepted == 4, results[-1]
+        # the survivors took over the orphans
+        assert _wait(lambda: fleet.server.n_clients == 4)
+        survivor = next(c for c, node in zip(fleet.shard_clouds,
+                                             fleet.shard_nodes)
+                        if node is not victim_node)
+        assert survivor.n_clients == 4
+    finally:
+        fleet.shutdown()
+
+
+def test_shard_crash_during_deploy_redeploys_to_rehomed_clients():
+    plan = FaultPlan()
+    fleet = _failover_fleet(plan)
+    try:
+        fe = fleet.frontend("u1")
+        owners = dict(fleet.server.clients)
+        victim_sid = next(iter(owners.values()))
+        victim_node = fleet.shard_nodes[int(victim_sid.removeprefix("shard"))]
+        # drop every frame reaching the victim *before* the deploy, so
+        # the deploy is guaranteed in flight when the shard goes silent
+        plan.partition(victim_sid, "router")
+        for cid in owners:
+            plan.partition(victim_sid, cid)
+        dep = fe.deploy_code("t_mean", V1)
+        victim_node.close(2.0)
+        _, done = dep.result(timeout=60.0)
+        assert done.status == Status.DONE, done.detail
+        assert "4/4" in done.detail       # all clients re-homed + installed
+    finally:
+        fleet.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# Scenario: router blip — shard evicted while merely partitioned, then
+# re-admitted on its next heartbeat; orphans restored
+# ---------------------------------------------------------------------------
+
+
+def test_partitioned_shard_is_readmitted_after_heal():
+    plan = FaultPlan()
+    fleet = Fleet.create(
+        4, shards=2, seed=5,
+        heartbeat_interval_s=0.1, eviction_timeout_s=2.0,
+        shard_heartbeat_interval_s=0.05, shard_eviction_timeout_s=0.4,
+        rehome_grace_s=5.0,
+        transport_wrap=_wrap(plan))
+    try:
+        owners = dict(fleet.server.clients)
+        victim_sid = next(iter(owners.values()))
+        n_victims = sum(1 for s in owners.values() if s == victim_sid)
+
+        plan.partition(victim_sid, "router")      # heartbeats stop arriving
+        assert _wait(lambda: fleet.server.n_shards == 1), \
+            "router never evicted the partitioned shard"
+        # its clients are orphaned at the router but NOT re-registered:
+        # they still reach their shard directly and get acks
+        assert fleet.server.n_clients == 4 - n_victims
+
+        plan.heal(victim_sid, "router")           # the blip ends
+        assert _wait(lambda: fleet.server.n_shards == 2), \
+            "healed shard never re-admitted via ShardHeartbeat"
+        assert _wait(lambda: fleet.server.n_clients == 4), \
+            "orphans not restored to the re-admitted shard"
+
+        # the fleet is whole again: a full round reaches all 4 clients
+        fe = fleet.frontend("u1")
+        results, done = fe.submit_analytics(
+            "mean", iterations=1, params={"n_values": 16}).result(30.0)
+        assert done.status == Status.DONE
+        assert results[0].n_accepted == 4
+    finally:
+        fleet.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# Scenario: duplicate + dropped liveness traffic is harmless
+# ---------------------------------------------------------------------------
+
+
+def test_duplicate_heartbeats_are_idempotent():
+    plan = FaultPlan(seed=1)
+    plan.duplicate(tag="heartbeat", copies=2)     # every beat arrives 3x
+    plan.duplicate(tag="shard_heartbeat", copies=2)
+    fleet = Fleet.create(
+        3, shards=2, seed=7,
+        heartbeat_interval_s=0.05, eviction_timeout_s=0.4,
+        shard_heartbeat_interval_s=0.05, shard_eviction_timeout_s=0.4,
+        transport_wrap=_wrap(plan))
+    try:
+        time.sleep(0.6)                           # several sweep cycles
+        assert fleet.server.n_shards == 2         # nobody evicted
+        assert fleet.server.n_clients == 3
+        fe = fleet.frontend("u1")
+        results, done = fe.submit_analytics(
+            "mean", iterations=2, params={"n_values": 16}).result(30.0)
+        assert done.status == Status.DONE
+        assert all(r.n_accepted == 3 for r in results)
+        assert plan.count(tag="heartbeat", action="duplicate") > 0
+    finally:
+        fleet.shutdown()
+
+
+def test_dropped_heartbeat_acks_trigger_self_healing_reregistration():
+    """A client whose acks vanish presumes its owner dead and re-registers
+    through the entry point; since the owner is in fact alive, the
+    handshake is a harmless no-op refresh — no eviction, no lost rounds."""
+    plan = FaultPlan()
+    plan.drop(dst="c000", tag="heartbeat_ack", times=8)
+    fleet = Fleet.create(
+        2, seed=9,
+        heartbeat_interval_s=0.05, eviction_timeout_s=1.0,
+        heartbeat_miss_limit=2,
+        transport_wrap=_wrap(plan))
+    try:
+        before = plan.count(src="c000", tag="register_client")
+        # 8 dropped acks / miss_limit 2 -> at least one forced re-register
+        assert _wait(lambda: plan.count(src="c000", tag="register_client")
+                     > before, timeout=10.0)
+        assert fleet.server.n_clients == 2        # never evicted
+        fe = fleet.frontend("u1")
+        results, done = fe.submit_analytics(
+            "mean", iterations=2, params={"n_values": 16}).result(30.0)
+        assert done.status == Status.DONE
+        assert all(r.n_accepted == 2 for r in results)
+    finally:
+        fleet.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# Scenario: deterministic delay — a held task_done stalls the commit,
+# releasing it completes the iteration (no sleeps involved in the delay)
+# ---------------------------------------------------------------------------
+
+
+def test_held_task_done_stalls_commit_until_release():
+    from repro.core.consistency import QuorumPolicy
+
+    plan = FaultPlan()
+    plan.delay(src="c000", tag="task_done")
+    fleet = Fleet.create(
+        2, seed=11, policy=QuorumPolicy(min_fraction=1.0, deadline_s=30.0),
+        transport_wrap=_wrap(plan))
+    try:
+        fe = fleet.frontend("u1")
+        handle = fe.submit_analytics(
+            "mean", iterations=1,
+            params={"n_values": 16, "straggler_grace_s": 30.0})
+        assert _wait(lambda: plan.held_count == 1, timeout=10.0)
+        assert handle.status in (Status.PENDING, Status.RUNNING)
+        assert not handle.history              # nothing committed yet
+        plan.release()
+        results, done = handle.result(timeout=30.0)
+        assert done.status == Status.DONE
+        assert results[0].n_accepted == 2      # the held result made it in
+    finally:
+        fleet.shutdown()
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-v"])

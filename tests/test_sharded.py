@@ -1,12 +1,23 @@
 """Sharded CloudNode behind a RouterNode: consistent-hash partitioning,
-fan-out/fan-in through per-assignment aggregators, and the invariant the
+fan-out/fan-in through per-assignment aggregators, the invariant the
 whole design hangs on — the AssignmentHandle control-plane API is
-byte-for-byte identical to the unsharded topology."""
+byte-for-byte identical to the unsharded topology — and the exactness
+of the cross-shard md5-majority: for ANY partition of tagged results
+across shards, the sharded merge must equal ``majority_filter`` over
+the flat result multiset (property-tested below; the hierarchical merge
+this replaced provably diverges)."""
 import pytest
 
 from repro.core import Status
-from repro.core.assignment import Target
-from repro.core.fleet import Fleet, ShardRing
+from repro.core.assignment import IterationEvent, Target
+from repro.core.consistency import TaggedResult, majority_filter
+from repro.core.fleet import (
+    Fleet,
+    ShardRing,
+    merge_iteration_exact,
+    merge_iteration_hierarchical,
+    shard_hash_report,
+)
 
 V1 = """
 import jax.numpy as jnp
@@ -215,3 +226,120 @@ def test_sharded_no_clients_fails_cleanly():
         assert "no clients" in done.detail
     finally:
         fleet.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# Exact cross-shard majority: the sharded merge as a pure function
+# ---------------------------------------------------------------------------
+
+
+def _shard_event(shard_results, iteration=0):
+    """Build the shard-level IterationEvent the AssignmentHandler emits
+    for one committed iteration: shard-local majority outcome plus the
+    full per-md5 hash report."""
+    outcome = majority_filter(shard_results)
+    counts, payloads = shard_hash_report(shard_results)
+    return IterationEvent(
+        "asg-x#1", iteration, [r.payload for r in outcome.accepted],
+        outcome.winning_md5, len(outcome.accepted), len(outcome.dropped), 0,
+        hash_counts=counts, hash_payloads=payloads)
+
+
+def _results(tagged):
+    return [TaggedResult(f"c{i:03d}", 0, md5, payload=payload)
+            for i, (md5, payload) in enumerate(tagged)]
+
+
+def test_hierarchical_merge_loses_cross_shard_plurality_split():
+    """The bug class the exact merge fixes, as a concrete counterexample:
+    hash A holds the fleet-wide plurality (6 of 14) but is split 3/3
+    across two shards, losing both shard-local votes 3-4 — so the
+    hierarchical merge cannot even see A, while the exact merge commits
+    it (and agrees with the flat filter)."""
+    a, b, c = "aa" * 16, "bb" * 16, "cc" * 16
+    shard1 = _results([(a, 1), (a, 2), (a, 3), (b, 10), (b, 11), (b, 12),
+                       (b, 13)])
+    shard2 = _results([(a, 4), (a, 5), (a, 6), (c, 20), (c, 21), (c, 22),
+                       (c, 23)])
+    flat = majority_filter(shard1 + shard2)
+    assert flat.winning_md5 == a                  # ground truth: A wins
+
+    events = [_shard_event(shard1), _shard_event(shard2)]
+    h_winner, _, h_acc, _ = merge_iteration_hierarchical(events)
+    assert h_winner != a                          # A is invisible to it
+    assert h_winner == b                          # B/C tie, smaller md5
+
+    winner, payloads, n_acc, n_drop = merge_iteration_exact(events)
+    assert winner == a
+    assert sorted(payloads) == [1, 2, 3, 4, 5, 6]
+    assert n_acc == 6 and n_drop == 8
+
+
+def test_exact_merge_single_shard_degenerates_to_local_filter():
+    a, b = "aa" * 16, "bb" * 16
+    shard = _results([(a, 1), (b, 2), (a, 3)])
+    winner, payloads, n_acc, n_drop = merge_iteration_exact(
+        [_shard_event(shard)])
+    flat = majority_filter(shard)
+    assert winner == flat.winning_md5
+    assert payloads == [r.payload for r in flat.accepted]
+    assert (n_acc, n_drop) == (len(flat.accepted), len(flat.dropped))
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_exact_merge_equals_flat_filter_random_partitions(seed):
+    """Deterministic fuzz (seeded): random tagged results, random
+    partition into up to 4 shards — the sharded aggregate must equal the
+    flat majority_filter in winner, accepted multiset, and counts."""
+    import random
+
+    rng = random.Random(seed)
+    hashes = ["aa" * 16, "bb" * 16, "cc" * 16, "dd" * 16]
+    n = rng.randint(1, 40)
+    flat = _results([(rng.choice(hashes), rng.randint(0, 99))
+                     for _ in range(n)])
+    k = rng.randint(1, 4)
+    groups = [[] for _ in range(k)]
+    for r in flat:
+        groups[rng.randrange(k)].append(r)
+    events = [_shard_event(g) for g in groups if g]
+
+    winner, payloads, n_acc, n_drop = merge_iteration_exact(events)
+    truth = majority_filter(flat)
+    assert winner == truth.winning_md5
+    assert sorted(payloads) == sorted(r.payload for r in truth.accepted)
+    assert n_acc == len(truth.accepted)
+    assert n_drop == len(truth.dropped)
+
+
+def test_exact_merge_property_any_partition_equals_flat_filter():
+    """The satellite property test proper: hypothesis searches the space
+    of (result multiset, shard partition) for any case where the sharded
+    merge diverges from consistency.majority_filter on the flat set."""
+    hypothesis = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+    given, settings = hypothesis.given, hypothesis.settings
+
+    tagged = st.lists(
+        st.tuples(st.sampled_from(["aa" * 16, "bb" * 16, "cc" * 16]),
+                  st.integers(min_value=0, max_value=9)),
+        min_size=1, max_size=30)
+    assignment = st.lists(st.integers(min_value=0, max_value=3),
+                          min_size=30, max_size=30)
+
+    @given(tagged=tagged, assignment=assignment)
+    @settings(max_examples=200, deadline=None)
+    def check(tagged, assignment):
+        flat = _results(tagged)
+        groups = {}
+        for r, shard in zip(flat, assignment):
+            groups.setdefault(shard, []).append(r)
+        events = [_shard_event(g) for g in groups.values()]
+        winner, payloads, n_acc, n_drop = merge_iteration_exact(events)
+        truth = majority_filter(flat)
+        assert winner == truth.winning_md5
+        assert sorted(payloads) == sorted(r.payload for r in truth.accepted)
+        assert n_acc == len(truth.accepted)
+        assert n_drop == len(truth.dropped)
+
+    check()

@@ -1,0 +1,53 @@
+"""Fleet-scale soak: O(100) client *processes* across k=4 CloudNode
+shard processes over real TCP, driven through the full lifecycle —
+deploy -> iterate -> kill a shard mid-iteration -> re-home recovery ->
+deploy-to-effect under load -> rollback.
+
+Heavyweight by design (spawns ~105 Python processes), so it lives
+behind the ``slow`` marker and runs nightly in CI (the
+``soak-nightly`` job) rather than in the default job. The measured
+deploy/recovery rows are merged into experiments/BENCH_fabric.json so
+fleet-scale trajectories stay diffable across PRs.
+
+``SOAK_CLIENTS`` scales the fleet (default 100) for constrained
+machines.
+"""
+import os
+import sys
+
+import pytest
+
+# benchmarks/ is a repo-root package (not under src/); make it importable
+# no matter where pytest was invoked from
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir))
+
+SOAK_CLIENTS = int(os.environ.get("SOAK_CLIENTS", "100"))
+SOAK_SHARDS = 4
+
+
+@pytest.mark.slow
+def test_soak_fleet_survives_shard_kill_at_scale(capsys):
+    from benchmarks.bench_fabric import bench_soak, record_rows, soak_rows
+
+    def say(msg):
+        with capsys.disabled():
+            print(f"[soak] {msg}", flush=True)
+
+    metrics = bench_soak(n_clients=SOAK_CLIENTS, shards=SOAK_SHARDS,
+                         iterations=150, say=say)
+
+    # the whole point of shard liveness: the in-flight handle completed
+    # (no timeout), every committed iteration accounts for the whole
+    # fleet, and the dead shard's clients are back in the accepted set
+    assert metrics["handle_status"] == "done"
+    assert metrics["n_iterations_committed"] == metrics["iterations"]
+    assert metrics["whole_fleet_accounting"]
+    assert metrics["first_iteration_n_accepted"] == SOAK_CLIENTS
+    assert metrics["final_n_accepted"] == SOAK_CLIENTS
+    assert metrics["rollback_status"] == "done"
+    assert f"{SOAK_CLIENTS}/{SOAK_CLIENTS}" in metrics["deploy_detail"]
+
+    # record the fleet-scale trajectory (merge, don't clobber, so the
+    # light fabric rows from benchmarks.run survive)
+    if SOAK_CLIENTS == 100:            # only record the canonical shape
+        record_rows(soak_rows(metrics))
