@@ -20,6 +20,7 @@ from __future__ import annotations
 
 import json
 import os
+import threading
 import time
 from statistics import mean, median
 
@@ -88,6 +89,91 @@ def bench_deploy_to_effect(topology: str, n_clients: int = 4,
         return median(times)
     finally:
         fleet.shutdown()
+
+
+def bench_deploy_spans(n_clients: int = 8, shards: int = 1,
+                       repeats: int = 3):
+    """The same mid-assignment redeploy as ``bench_deploy_to_effect``,
+    but decomposed: pull the deploy's assembled trace and report the
+    named segments (router_fanout / shard_install / client_install /
+    first_commit) next to the user-side wall clock. Returns the fastest
+    repeat as ``(TraceTree, wall_clock_seconds)``."""
+    fleet = Fleet.create(n_clients, topology="inproc", shards=shards)
+    try:
+        fe = fleet.frontend("bench")
+        v1 = fe.deploy_code("span_mean", _V1)
+        v1.result(timeout=60.0)
+        best = None
+        src = _V2
+        for _ in range(repeats):
+            handle = fe.submit_analytics("span_mean", iterations=40,
+                                         params={"n_values": 16})
+            stream = handle.events()
+            next(stream)                       # assignment is live
+            t0 = time.perf_counter()
+            dep = fe.deploy_code("span_mean", src)
+            # timestamp the winning iteration as it arrives (reading the
+            # stream only after dep.result() would overstate wall time by
+            # however long the event sat queued behind the deploy acks)
+            seen = {}
+
+            def _watch(stream=stream, md5=dep.md5):
+                for ev in stream:
+                    if getattr(ev, "winning_md5", None) == md5:
+                        seen["t"] = time.perf_counter()
+                        return
+
+            watcher = threading.Thread(target=_watch, daemon=True)
+            watcher.start()
+            dep.result(timeout=60.0)
+            watcher.join(timeout=60.0)
+            wall = (seen["t"] - t0) if "t" in seen else None
+            handle.cancel()
+            handle.result(timeout=60.0)
+            tree = dep.trace(timeout=30.0)
+            if (wall is not None and tree.is_connected
+                    and (best is None or wall < best[1])):
+                best = (tree, wall)
+            src = _V1 if src == _V2 else _V2   # alternate versions
+        assert best is not None, "no connected deploy trace assembled"
+        return best
+    finally:
+        fleet.shutdown()
+
+
+def span_rows(tree, wall_s: float, shards: int) -> list:
+    """BENCH_fabric.json rows for one traced deploy: one row per named
+    segment plus the causal total (root start -> last span end)."""
+    rows = [{"name": f"fabric_deploy_span_total_k{shards}",
+             "us_per_call": tree.duration_us,
+             "derived": f"traced deploy-to-effect, 8 in-proc clients, "
+                        f"k={shards}; wall-clock {wall_s * 1e6:.0f} us, "
+                        f"{len(tree.spans)} spans"}]
+    for name, seg in sorted(tree.segments().items()):
+        if name == "deploy":
+            continue                           # the root span itself
+        rows.append(
+            {"name": f"fabric_deploy_span_{name}_k{shards}",
+             "us_per_call": seg["total_us"],
+             "derived": f"sum of {int(seg['count'])} {name} span(s), "
+                        f"max {seg['max_us']:.0f} us, causal reach "
+                        f"{seg['reach_us']:.0f} us from deploy start"})
+    return rows
+
+
+def run_span_bench(say=print) -> list:
+    """Record the span-segmented deploy rows for k = 1, 2, 4 into
+    BENCH_fabric.json (merge-by-name: the roundtrip / deploy-to-effect
+    rows already there are left untouched)."""
+    all_rows = []
+    for k in (1, 2, 4):
+        tree, wall = bench_deploy_spans(n_clients=8, shards=k)
+        rows = span_rows(tree, wall, k)
+        all_rows.extend(rows)
+        for r in rows:
+            say(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+    record_rows(all_rows)
+    return all_rows
 
 
 # pure-python modules for the soak: no jax tracing on the hot path, so
@@ -279,4 +365,8 @@ def main(report) -> None:
 
 
 if __name__ == "__main__":
-    main(lambda n, us, d: print(f"{n},{us:.1f},{d}"))
+    import sys
+    if "--spans" in sys.argv:
+        run_span_bench()
+    else:
+        main(lambda n, us, d: print(f"{n},{us:.1f},{d}"))

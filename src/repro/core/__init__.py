@@ -61,6 +61,20 @@ from repro.core.fleet import (
 )
 from repro.core.module import ActiveModule, ResolvedModule, compile_module
 from repro.core.registry import ActiveCodeRegistry, Binding, LocalDeployment
+from repro.core.telemetry import (
+    FlightRecorder,
+    Metrics,
+    NodeTelemetry,
+    TelemetryPull,
+    TelemetrySnapshot,
+)
+from repro.core.tracing import (
+    Span,
+    SpanRecorder,
+    TraceContext,
+    TraceTree,
+    assemble_trace,
+)
 from repro.core.transport import (
     InProcHub,
     InProcTransport,
@@ -96,6 +110,7 @@ __all__ = [
     "Evicted",
     "FilterOutcome",
     "Fleet",
+    "FlightRecorder",
     "HandleSink",
     "Heartbeat",
     "InProcHub",
@@ -103,7 +118,9 @@ __all__ = [
     "IterationCollector",
     "IterationEvent",
     "LocalDeployment",
+    "Metrics",
     "Node",
+    "NodeTelemetry",
     "QuorumPolicy",
     "RegisterAck",
     "RegisterClient",
@@ -113,16 +130,23 @@ __all__ = [
     "ShardAggregator",
     "ShardRing",
     "SlotSpec",
+    "Span",
+    "SpanRecorder",
     "Status",
     "StopNode",
     "TaggedResult",
     "Target",
     "TaskSpec",
     "TcpTransport",
+    "TelemetryPull",
+    "TelemetrySnapshot",
+    "TraceContext",
+    "TraceTree",
     "Transport",
     "TransportError",
     "UserFrontend",
     "ValidationError",
+    "assemble_trace",
     "compile_module",
     "event_from_wire",
     "event_to_wire",

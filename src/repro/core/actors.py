@@ -27,11 +27,17 @@ import traceback
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional
 
+from repro.core import tracing
+
 
 @dataclass
 class Envelope:
     sender: Optional[str]
     msg: Any
+    # causal trace context captured at send time (None when untraced);
+    # the receiving actor's handle() runs with it active, so a span
+    # opened there parents onto the sender's span with no plumbing
+    trace: Optional[tracing.TraceContext] = None
 
 
 @dataclass(frozen=True)
@@ -54,6 +60,10 @@ class Actor:
         self._system: Optional["ActorSystem"] = None
         self._alive = False
         self.exit_reason: Optional[str] = None
+        # trace context active when this actor was spawned: the thread's
+        # baseline context, so on_start (and untraced messages) of a
+        # handler spawned mid-message inherit the spawning message's trace
+        self._spawn_trace: Optional[tracing.TraceContext] = None
 
     # -- lifecycle ----------------------------------------------------------
     def _start(self, system: "ActorSystem") -> None:
@@ -65,12 +75,20 @@ class Actor:
 
     def _loop(self) -> None:
         try:
+            tracing.set_current(self._spawn_trace)
             self.on_start()
             while self._alive:
                 env = self._mailbox.get()
                 if env is None:          # poison pill
                     break
-                self.handle(env.sender, env.msg)
+                if env.trace is not None:
+                    prev = tracing.set_current(env.trace)
+                    try:
+                        self.handle(env.sender, env.msg)
+                    finally:
+                        tracing.set_current(prev)
+                else:
+                    self.handle(env.sender, env.msg)
         except Exception:  # noqa: BLE001 - crash is a first-class event
             self.exit_reason = traceback.format_exc(limit=8)
         finally:
@@ -122,6 +140,9 @@ class ActorSystem:
         # set by transport.Node when this system is bound to a node; a
         # bare ActorSystem (no node) is purely local, as before
         self.node: Optional[Any] = None
+        # the node's NodeTelemetry (None when telemetry is off or the
+        # system is bare): dead letters and crashes report through it
+        self.telemetry: Optional[Any] = None
 
     # -- registry -----------------------------------------------------------
     def spawn(self, actor: Actor, *, supervised_factory:
@@ -132,6 +153,7 @@ class ActorSystem:
             self._actors[actor.name] = actor
             if supervised_factory is not None:
                 self._supervised[actor.name] = supervised_factory
+        actor._spawn_trace = tracing.current()
         actor._start(self)
         return actor
 
@@ -143,19 +165,30 @@ class ActorSystem:
         a = self.whereis(name)
         return bool(a and a._alive)
 
+    def mailbox_depths(self) -> Dict[str, int]:
+        """Queued-message count per live actor (telemetry snapshot)."""
+        with self._lock:
+            actors = list(self._actors.values())
+        return {a.name: a._mailbox.qsize() for a in actors if a._alive}
+
     # -- messaging ----------------------------------------------------------
-    def send(self, target: str, msg: Any, sender: Optional[str] = None) -> None:
+    def send(self, target: str, msg: Any, sender: Optional[str] = None,
+             trace: Optional[tracing.TraceContext] = None) -> None:
         if self.node is not None and "@" in target:
             # "actor@node" address: route through the node's transport
             # fabric (crosses the wire codec, even for self-sends)
             self.node.route(target, msg, sender=sender)
             return
+        if trace is None:
+            trace = tracing.current()
         a = self.whereis(target)
         if a is None or not a._alive:
             with self._lock:
-                self.dead_letters.append(Envelope(sender, msg))
+                self.dead_letters.append(Envelope(sender, msg, trace))
+            if self.telemetry is not None:
+                self.telemetry.on_dead_letter(target, msg)
             return
-        a._mailbox.put(Envelope(sender, msg))
+        a._mailbox.put(Envelope(sender, msg, trace))
 
     def monitor(self, watcher: str, target: str) -> None:
         a = self.whereis(target)
@@ -166,6 +199,9 @@ class ActorSystem:
     def _actor_exited(self, actor: Actor, reason: Optional[str]) -> None:
         with self._lock:
             self._actors.pop(actor.name, None)
+        if reason is not None and self.telemetry is not None:
+            self.telemetry.metrics.inc("actor_crashes")
+            self.telemetry.dump(f"actor-crash:{actor.name}")
         with actor._monitor_lock:
             actor._exited = True
             monitors = list(actor._monitors)

@@ -151,12 +151,18 @@ def message_from_wire(data: bytes) -> Any:
     return message_from_wire_dict(from_wire(data))
 
 
-def envelope_to_wire(to: str, sender: Optional[str], msg: Any) -> bytes:
+def envelope_to_wire(to: str, sender: Optional[str], msg: Any,
+                     trace: Optional[Any] = None) -> bytes:
     """The routed unit a Transport moves: destination actor (node-local
-    name), sender address, and the tagged message payload."""
+    name), sender address, and the tagged message payload. ``trace``
+    (a ``tracing.TraceContext``) adds the additive trace-context keys
+    — absent entirely when untraced, so telemetry-off envelopes are
+    byte-identical to the pre-tracing wire format."""
     d = message_to_wire_dict(msg)
     d["to"] = to
     d["sender"] = sender
+    if trace is not None:
+        d.update(trace.to_wire_fields())
     return to_wire(d)
 
 
@@ -164,6 +170,15 @@ def envelope_from_wire(data: bytes) -> Tuple[str, Optional[str], Any]:
     """Returns (to, sender, decoded message)."""
     d = from_wire(data)
     return d["to"], d.get("sender"), message_from_wire_dict(d)
+
+
+def envelope_from_wire_traced(
+        data: bytes) -> Tuple[str, Optional[str], Any, Optional[Any]]:
+    """Returns (to, sender, decoded message, trace context or None)."""
+    from repro.core.tracing import TraceContext
+    d = from_wire(data)
+    return (d["to"], d.get("sender"), message_from_wire_dict(d),
+            TraceContext.from_wire_fields(d))
 
 
 def module_path(store_root: str, user_id: str, slot: str, md5: str) -> str:

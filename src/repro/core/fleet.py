@@ -52,6 +52,7 @@ are diagrammed in ``docs/architecture.md``.
 from __future__ import annotations
 
 import bisect
+import contextlib
 import queue
 import threading
 import time
@@ -61,8 +62,15 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
-from repro.core import codec
+from repro.core import codec, tracing
 from repro.core.actors import Actor, Down
+from repro.core.telemetry import (
+    NodeTelemetry,
+    TelemetryPull,
+    TelemetrySnapshot,
+    merge_counters,
+    spans_of,
+)
 from repro.core.assignment import (
     AssignmentEvent,
     AssignmentKind,
@@ -433,7 +441,10 @@ class _AsyncSender:
 
     def send(self, target: str, msg: Any, sender: Optional[str] = None) -> None:
         self._ensure()
-        self._q.put((target, msg, sender))
+        # capture the enqueuing thread's trace context: the worker thread
+        # re-activates it around the send so off-thread liveness traffic
+        # stays causally linked to the message that triggered it
+        self._q.put((target, msg, sender, tracing.current()))
 
     def call(self, fn: Callable[[], None]) -> None:
         self._ensure()
@@ -452,8 +463,12 @@ class _AsyncSender:
                 if callable(item):
                     item()
                 else:
-                    target, msg, sender = item
-                    self._system.send(target, msg, sender=sender)
+                    target, msg, sender, trace = item
+                    prev = tracing.set_current(trace)
+                    try:
+                        self._system.send(target, msg, sender=sender)
+                    finally:
+                        tracing.set_current(prev)
             except Exception:  # noqa: BLE001 - best-effort traffic: a
                 pass           # failed liveness send is just a missed beat
 
@@ -577,6 +592,31 @@ def _to_py(v: Any) -> Any:
 # ---------------------------------------------------------------------------
 
 
+def _node_telemetry(actor: Actor) -> Optional[NodeTelemetry]:
+    """The hosting node's NodeTelemetry (None = observability off)."""
+    sys_ = actor._system
+    return sys_.telemetry if sys_ is not None else None
+
+
+def _reply_snapshot(actor: Actor, msg: TelemetryPull) -> None:
+    """Answer a ``telemetry_pull`` with this node's snapshot. A node
+    with telemetry off still replies (empty snapshot) so a pull over a
+    mixed fleet can count nodes instead of waiting out its timeout."""
+    sys_ = actor._system
+    node = sys_.node if sys_ is not None else None
+    if node is None:
+        return
+    tel = sys_.telemetry
+    if tel is None:
+        actor.send(msg.reply_to, TelemetrySnapshot(node.node_id,
+                                                   msg.pull_id))
+        return
+    snap = tel.snapshot(sys_.mailbox_depths())
+    actor.send(msg.reply_to, TelemetrySnapshot(
+        node.node_id, msg.pull_id, snap["metrics"], snap["spans"],
+        snap["events"]))
+
+
 class TaskHandler(Actor):
     """Temporary: executes exactly one task on the client app, replies,
     terminates (OODIDA's x', y', z')."""
@@ -589,8 +629,19 @@ class TaskHandler(Actor):
 
     def on_start(self) -> None:
         try:
-            result = self.app.execute(self.task)
-            self.send(self.handler, TaskDone(self.task, result))
+            # a code-replacement task is the deploy's client-side leg:
+            # span the install + reply so the assembled deploy trace has
+            # a per-client "client_install" segment under "shard_install"
+            tel = _node_telemetry(self)
+            if (tel is not None
+                    and self.task.kind == AssignmentKind.CODE_REPLACEMENT):
+                cm: Any = tel.span("client_install",
+                                   client_id=self.task.client_id)
+            else:
+                cm = contextlib.nullcontext()
+            with cm:
+                result = self.app.execute(self.task)
+                self.send(self.handler, TaskDone(self.task, result))
         except Exception as e:  # noqa: BLE001 - report, don't crash the node
             err = f"{type(e).__name__}: {e}"
             dummy = TaggedResult(self.task.client_id, self.task.iteration,
@@ -743,6 +794,11 @@ class ClientNode(Actor):
                 self._owner_lost(
                     f"{self._pending_beats} heartbeats unacknowledged")
             else:
+                if self._pending_beats > 0:
+                    # the previous beat went unacknowledged
+                    tel = _node_telemetry(self)
+                    if tel is not None:
+                        tel.metrics.inc("heartbeat_misses")
                 self._pending_beats += 1
                 assert self._async is not None
                 self._async.send(
@@ -756,6 +812,8 @@ class ClientNode(Actor):
                 self._owner_lost(f"connection to {msg.node_id} dropped")
         elif isinstance(msg, Evicted):
             self._register()              # shard forgot us: rejoin
+        elif isinstance(msg, TelemetryPull):
+            _reply_snapshot(self, msg)
         elif isinstance(msg, StopNode):
             if self.stop_event is not None:
                 self.stop_event.set()
@@ -801,6 +859,7 @@ class AssignmentHandler(Actor):
         self._committed_iterations = 0
         self._cancelled = False
         self._current_targets: List[str] = []
+        self._install_span: Optional[Any] = None
 
     # -- helpers ----------------------------------------------------------------
     def _targets(self) -> List[str]:
@@ -817,6 +876,16 @@ class AssignmentHandler(Actor):
                     self.send(self.cloud, ev)
                 self.stop()
                 return
+        if self.spec.kind == AssignmentKind.CODE_REPLACEMENT:
+            tel = _node_telemetry(self)
+            if tel is not None:
+                # open-ended: the install runs until the commit (or this
+                # actor's stop). Entering without exiting makes the span's
+                # context this thread's baseline, so the NewTask fan-out
+                # below and any untraced tick parent onto it.
+                self._install_span = tel.spans.span(
+                    "shard_install", assignment_id=self.spec.assignment_id)
+                self._install_span.__enter__()
         self._start_iteration()
 
     def _start_iteration(self) -> None:
@@ -937,6 +1006,16 @@ class AssignmentHandler(Actor):
             total = len(outcome.accepted)
             done = (ok and total == self.collector.n_clients)
             assert self.spec.code is not None
+            tel = _node_telemetry(self)
+            if tel is not None and self._install_span is not None:
+                if ok and total:
+                    # arm the deploy-to-effect tail: the next analytics
+                    # commit whose winning md5 is this module records a
+                    # "first_commit" span parented here
+                    tel.register_pending_effect(self.spec.code.md5,
+                                                self._install_span.ctx)
+                self._install_span.close()
+                self._install_span = None
             self.send(self.cloud, DeployEvent(
                 self.spec.assignment_id, self.spec.code.slot,
                 self.spec.code.md5, self.spec.code.version,
@@ -955,24 +1034,35 @@ class AssignmentHandler(Actor):
         # so the router's merge is exact — and skip the local aggregate:
         # the router reads only the hash report, so shipping the accepted
         # payloads again in `value` would double every frame's size
-        hash_counts = hash_payloads = None
-        value = None
-        if self.spec.params.get("shard_report"):
-            hash_counts, hash_payloads = shard_hash_report(
-                self.collector.results)
-        else:
-            value = self.cloud_app.aggregate(self.spec, outcome.accepted)
-        self.send(self.cloud, IterationEvent(
-            assignment_id=self.spec.assignment_id,
-            iteration=self.iteration,
-            value=value,
-            winning_md5=outcome.winning_md5,
-            n_accepted=len(outcome.accepted),
-            n_dropped=len(outcome.dropped),
-            n_stragglers=n_strag,
-            hash_counts=hash_counts,
-            hash_payloads=hash_payloads,
-        ))
+        # deploy-to-effect: the first commit won by a freshly deployed
+        # module closes the loop — span it (parented on that deploy's
+        # shard_install) so the assembled trace ends at observed effect
+        tel = _node_telemetry(self)
+        effect = (tel.take_pending_effect(outcome.winning_md5)
+                  if tel is not None else None)
+        cm: Any = (tel.spans.span("first_commit", parent=effect,
+                                  assignment_id=self.spec.assignment_id,
+                                  iteration=self.iteration)
+                   if effect is not None else contextlib.nullcontext())
+        with cm:
+            hash_counts = hash_payloads = None
+            value = None
+            if self.spec.params.get("shard_report"):
+                hash_counts, hash_payloads = shard_hash_report(
+                    self.collector.results)
+            else:
+                value = self.cloud_app.aggregate(self.spec, outcome.accepted)
+            self.send(self.cloud, IterationEvent(
+                assignment_id=self.spec.assignment_id,
+                iteration=self.iteration,
+                value=value,
+                winning_md5=outcome.winning_md5,
+                n_accepted=len(outcome.accepted),
+                n_dropped=len(outcome.dropped),
+                n_stragglers=n_strag,
+                hash_counts=hash_counts,
+                hash_payloads=hash_payloads,
+            ))
         self._committed_iterations += 1
         self.collector = None
         if self._committed_iterations >= self.spec.iterations:
@@ -986,6 +1076,9 @@ class AssignmentHandler(Actor):
     def on_stop(self) -> None:
         if self._timer is not None:
             self._timer.cancel()
+        if self._install_span is not None:   # vacuous/failed/cancelled
+            self._install_span.close()
+            self._install_span = None
 
 
 class CloudNode(Actor):
@@ -1046,6 +1139,8 @@ class CloudNode(Actor):
         self._handler_assignments: Dict[str, str] = {}   # actor -> asg id
         self._assignment_handlers: Dict[str, str] = {}   # asg id -> actor
         self._pending: "deque[SubmitAssignment]" = deque()
+        self._submitted_at: Dict[str, float] = {}        # asg id -> ts
+        self._pull_upstream: Dict[str, str] = {}         # pull id -> addr
 
     # -- helpers ----------------------------------------------------------------
     @property
@@ -1063,6 +1158,12 @@ class CloudNode(Actor):
         self.send(sink, ev)
         if isinstance(ev, DoneEvent):
             self._user_sinks.pop(ev.assignment_id, None)
+            t0 = self._submitted_at.pop(ev.assignment_id, None)
+            if t0 is not None:
+                tel = _node_telemetry(self)
+                if tel is not None:
+                    tel.metrics.observe("assignment_latency_ms",
+                                        (time.time() - t0) * 1e3)
 
     def _spawn_handler(self, msg: SubmitAssignment) -> None:
         spec = msg.spec
@@ -1134,6 +1235,12 @@ class CloudNode(Actor):
         self._last_seen.pop(client_id, None)
         if addr is None:
             return
+        tel = _node_telemetry(self)
+        if tel is not None:
+            tel.metrics.inc("evictions")
+            # post-mortem: recent traffic with the evictee, to stderr
+            tel.dump(f"evict:{client_id}: {reason}",
+                     peer=split_addr(addr)[1])
         ev = Evicted(client_id, reason)
         for handler in list(self._handler_assignments):
             self.send(handler, ev)         # mark permanent straggler
@@ -1166,6 +1273,7 @@ class CloudNode(Actor):
                     and spec.target in (Target.CLIENTS, Target.BOTH)):
                 self._deployed[(spec.user_id, spec.code.slot)] = spec.code
             self._user_sinks[spec.assignment_id] = msg.reply_to
+            self._submitted_at[spec.assignment_id] = time.time()
             if (self.max_concurrent is not None
                     and len(self._handler_assignments) >= self.max_concurrent):
                 self._pending.append(msg)
@@ -1221,6 +1329,23 @@ class CloudNode(Actor):
                                    node.transport.endpoint),
                     sender=self.name)
             self._schedule_shard_heartbeat()
+        elif isinstance(msg, TelemetryPull):
+            # answer with our own snapshot, then relay the pull to every
+            # owned client pointing replies back here — clients can only
+            # dial the node they registered with, so snapshots hop back
+            # up the registration tree instead of going direct
+            self._pull_upstream[msg.pull_id] = msg.reply_to
+            _reply_snapshot(self, msg)
+            my_node = self._system.node if self._system is not None else None
+            my_addr = (my_node.address(self.name) if my_node is not None
+                       else self.name)
+            relay = TelemetryPull(msg.pull_id, my_addr)
+            for addr in self.client_nodes.values():
+                self.send(addr, relay)
+        elif isinstance(msg, TelemetrySnapshot):
+            upstream = self._pull_upstream.get(msg.pull_id)
+            if upstream is not None:
+                self.send(upstream, msg)
         elif isinstance(msg, StopNode):
             # sharded shutdown: fan the stop out to every owned client,
             # then stop this shard (and its hosting process, if any)
@@ -1679,6 +1804,7 @@ class RouterNode(Actor):
         self._aggregators: Dict[str, Tuple[str, str]] = {}  # actor -> (asg, sink)
         self._rehomes: Dict[int, _Rehome] = {}
         self._rehome_seq = 0
+        self._pull_upstream: Dict[str, str] = {}       # pull id -> addr
 
     # -- readiness polling (plain len() reads are thread-safe) -----------------
     @property
@@ -1722,6 +1848,10 @@ class RouterNode(Actor):
         self._shard_last_seen.pop(shard_id, None)
         if addr is None:
             return
+        tel = _node_telemetry(self)
+        if tel is not None:
+            tel.metrics.inc("shard_evictions")
+            tel.dump(f"evict-shard:{shard_id}: {reason}", peer=shard_id)
         self.ring.remove(shard_id)
         # orphan the dead shard's clients: they re-register through us
         # (missed acks / dropped connection) and land on surviving shards
@@ -1808,6 +1938,21 @@ class RouterNode(Actor):
         elif isinstance(msg, _EvictionTick):
             self._sweep_shards()
             self._schedule_sweep()
+        elif isinstance(msg, TelemetryPull):
+            # same relay discipline as the shards, one level up: answer,
+            # then fan the pull out to every live shard
+            self._pull_upstream[msg.pull_id] = msg.reply_to
+            _reply_snapshot(self, msg)
+            my_node = self._system.node if self._system is not None else None
+            my_addr = (my_node.address(self.name) if my_node is not None
+                       else self.name)
+            relay = TelemetryPull(msg.pull_id, my_addr)
+            for addr in self.shard_addrs.values():
+                self.send(addr, relay)
+        elif isinstance(msg, TelemetrySnapshot):
+            upstream = self._pull_upstream.get(msg.pull_id)
+            if upstream is not None:
+                self.send(upstream, msg)
         elif isinstance(msg, Down):
             entry = self._aggregators.pop(msg.actor, None)
             if entry is not None:
@@ -1862,6 +2007,18 @@ class RouterNode(Actor):
                 for ev in _cloud_deploy_events(spec):
                     self.send(msg.reply_to, ev)
                 return
+        tel = _node_telemetry(self)
+        # span the fan-out: we run under the submission's trace (the
+        # envelope carried it), so this parents onto the user-side root,
+        # and the per-shard sub-specs shipped below inherit our context
+        # through the async sender — shard_install hangs off us
+        cm: Any = (tel.span("router_fanout", assignment_id=spec.assignment_id)
+                   if tel is not None else contextlib.nullcontext())
+        with cm:
+            self._submit_fan_out(msg)
+
+    def _submit_fan_out(self, msg: SubmitAssignment) -> None:
+        spec = msg.spec
         targets = list(spec.client_ids) or list(self.clients)
         groups: Dict[str, List[str]] = {}
         for cid in targets:
@@ -1951,6 +2108,9 @@ class RouterNode(Actor):
                     if self._system is not None
                     and self._system.node is not None else rec.agg_name)
         if groups:
+            tel = _node_telemetry(self)
+            if tel is not None:
+                tel.metrics.inc("rehomed_legs", len(groups))
             self._fan_out(rec, groups, agg_addr, rh.resume)
         self.send(rec.agg_name, _RehomeDone(rh.leg_id))
 
@@ -1973,15 +2133,44 @@ class HandleSink(Actor):
     absorbs wire-decoded events into the handle's local queue, stops on
     the terminal DoneEvent (OODIDA's f-side temporary)."""
 
-    def __init__(self, name: str, out: "queue.Queue[AssignmentEvent]"):
+    def __init__(self, name: str, out: "queue.Queue[AssignmentEvent]",
+                 handle: Optional["AssignmentHandle"] = None):
+        super().__init__(name)
+        self.out = out
+        self._handle = handle
+
+    def handle(self, sender, msg) -> None:
+        if isinstance(msg, (IterationEvent, DeployEvent, DoneEvent)):
+            tel = _node_telemetry(self)
+            if tel is not None and isinstance(msg, IterationEvent):
+                # an iteration event carrying a *different* trace than
+                # this assignment's own is the first commit won by a
+                # fresh deploy (the shard's first_commit context rode
+                # the event here): stamp the user-side observation
+                # instant so the deploy trace spans true deploy-to-effect
+                ctx = tracing.current()
+                own = self._handle.trace_id if self._handle else None
+                if ctx is not None and own is not None \
+                        and ctx.trace_id != own:
+                    with tel.spans.span("effect_observed",
+                                        iteration=msg.iteration):
+                        pass
+            self.out.put(msg)
+            if isinstance(msg, DoneEvent):
+                self.stop()
+
+
+class _TelemetryCollector(Actor):
+    """Temporary user-node actor: terminal of one telemetry pull's
+    snapshot stream (the observability mirror of ``HandleSink``)."""
+
+    def __init__(self, name: str, out: "queue.Queue[TelemetrySnapshot]"):
         super().__init__(name)
         self.out = out
 
     def handle(self, sender, msg) -> None:
-        if isinstance(msg, (IterationEvent, DeployEvent, DoneEvent)):
+        if isinstance(msg, TelemetrySnapshot):
             self.out.put(msg)
-            if isinstance(msg, DoneEvent):
-                self.stop()
 
 
 class AssignmentHandle:
@@ -2008,6 +2197,10 @@ class AssignmentHandle:
         self._queue: "queue.Queue[AssignmentEvent]" = queue.Queue()
         self._done: Optional[DoneEvent] = None
         self._status = Status.PENDING
+        # set at submission when telemetry is on: the id of the trace
+        # rooted at this handle's submit, and the fleet to pull it from
+        self.trace_id: Optional[str] = None
+        self._fleet: Optional["Fleet"] = None
 
     # -- identity -----------------------------------------------------------
     @property
@@ -2079,6 +2272,21 @@ class AssignmentHandle:
         ``DoneEvent`` (status CANCELLED) arrives on the stream."""
         self.node.route(self.cloud, CancelAssignment(self.assignment_id))
 
+    # -- observability ------------------------------------------------------
+    def trace(self, timeout: float = 5.0) -> "tracing.TraceTree":
+        """Pull every node's span buffer and assemble this submission's
+        causal tree (for a ``Deployment``: the deploy-to-effect
+        decomposition — router_fanout / shard_install / client_install /
+        first_commit). Requires the fleet's telemetry plane (on by
+        default) and a frontend obtained via ``Fleet.frontend``."""
+        if self.trace_id is None:
+            raise RuntimeError(
+                "no trace recorded: fleet was created with telemetry=False")
+        if self._fleet is None:
+            raise RuntimeError(
+                "trace() needs a fleet-bound frontend (Fleet.frontend)")
+        return self._fleet.trace(self.trace_id, timeout=timeout)
+
 
 class Deployment(AssignmentHandle):
     """Handle to a versioned code deployment: a ``deploy_code`` call.
@@ -2133,10 +2341,12 @@ class UserFrontend:
     """
 
     def __init__(self, user_id: str, node: Node, cloud: str,
-                 slot_specs: Sequence[SlotSpec] = ()):
+                 slot_specs: Sequence[SlotSpec] = (),
+                 fleet: Optional["Fleet"] = None):
         self.user_id = user_id
         self.node = node
         self.cloud = cloud             # cloud actor address ("cloud@node")
+        self.fleet = fleet             # enables handle.trace() pulls
         self._frontend_registry = ActiveCodeRegistry()  # for validation only
         for s in slot_specs:
             self._frontend_registry.declare_slot(s)
@@ -2147,31 +2357,54 @@ class UserFrontend:
                     client_ids: Sequence[str] = ()) -> Deployment:
         """Validate (front-end checks) then ship as a special assignment.
         Raises ValidationError before anything is sent — the paper's gate."""
+        started_at = time.time()
         self._frontend_registry.deploy(self.user_id, slot, source)
         mod = self._frontend_registry.versions(self.user_id, slot)[-1]
-        return self._ship_module(mod, target, tuple(client_ids))
+        return self._ship_module(mod, target, tuple(client_ids),
+                                 started_at=started_at)
 
     def rollback(self, deployment: Deployment) -> Deployment:
         """Fleet-wide re-deploy of the version preceding ``deployment``."""
+        started_at = time.time()
         prev = self._frontend_registry.rollback_prior(
             self.user_id, deployment.slot, deployment.version)
         return self._ship_module(prev, deployment.target,
-                                 deployment.client_ids)
+                                 deployment.client_ids,
+                                 started_at=started_at)
 
-    def _submit(self, spec: AssignmentSpec, handle: AssignmentHandle) -> None:
-        sink = HandleSink(f"sink.{spec.assignment_id}", handle._queue)
+    def _submit(self, spec: AssignmentSpec, handle: AssignmentHandle,
+                started_at: Optional[float] = None) -> None:
+        sink = HandleSink(f"sink.{spec.assignment_id}", handle._queue,
+                          handle=handle)
         self.node.spawn(sink)
-        self.node.route(self.cloud, SubmitAssignment(
-            spec, self.node.address(sink.name)))
+        submit = SubmitAssignment(spec, self.node.address(sink.name))
+        tel = self.node.telemetry
+        if tel is None:
+            self.node.route(self.cloud, submit)
+            return
+        # root span of this submission's trace: everything downstream
+        # (router fan-out, shard installs, client installs, the first
+        # effected commit) hangs off the context this send carries; a
+        # deploy root is backdated to the deploy_code() call so the
+        # trace covers front-end validation + compile too
+        name = ("deploy" if spec.kind == AssignmentKind.CODE_REPLACEMENT
+                else "assignment")
+        with tel.span(name, start_ts=started_at,
+                      assignment_id=spec.assignment_id,
+                      user_id=self.user_id) as sp:
+            handle.trace_id = sp.span.trace_id
+            handle._fleet = self.fleet
+            self.node.route(self.cloud, submit)
 
     def _ship_module(self, mod: ActiveModule, target: Target,
-                     client_ids: Tuple[str, ...]) -> Deployment:
+                     client_ids: Tuple[str, ...],
+                     started_at: Optional[float] = None) -> Deployment:
         spec = AssignmentSpec.new(
             self.user_id, AssignmentKind.CODE_REPLACEMENT, target,
             client_ids=client_ids, code=mod, method=mod.slot)
         handle = Deployment(spec, self.node, self.cloud, frontend=self,
                             module=mod, client_ids=client_ids)
-        self._submit(spec, handle)
+        self._submit(spec, handle, started_at=started_at)
         return handle
 
     # -- analytics assignments --------------------------------------------------
@@ -2259,6 +2492,8 @@ class Fleet:
     shard_procs: List[Any] = field(default_factory=list)      # shard processes
     server: Optional[Actor] = None     # CloudNode/RouterNode actor (if local)
     shard_clouds: List[Any] = field(default_factory=list)     # CloudNode actors
+    telemetry: bool = True             # observability plane on?
+    _pull_seq: int = 0
 
     @staticmethod
     def create(n_clients: int, *, topology: str = "inproc", shards: int = 1,
@@ -2277,7 +2512,8 @@ class Fleet:
                shard_heartbeat_interval_s: Optional[float] = None,
                shard_eviction_timeout_s: Optional[float] = None,
                rehome_grace_s: float = 2.0,
-               transport_wrap: Optional[Callable[[Any], Any]] = None
+               transport_wrap: Optional[Callable[[Any], Any]] = None,
+               telemetry: bool = True
                ) -> "Fleet":
         """Build and start a fleet; see the class docstring for the
         topology/sharding/churn knobs. Returns only when every client
@@ -2317,7 +2553,8 @@ class Fleet:
                 straggler_grace_s=straggler_grace_s,
                 shard_heartbeat_interval_s=shard_heartbeat_interval_s,
                 shard_eviction_timeout_s=shard_eviction_timeout_s,
-                rehome_grace_s=rehome_grace_s)
+                rehome_grace_s=rehome_grace_s,
+                telemetry=telemetry)
         if topology != "inproc":
             raise ValueError(f"unknown topology {topology!r}")
 
@@ -2328,7 +2565,21 @@ class Fleet:
             t: Any = InProcTransport(hub)
             return transport_wrap(t) if transport_wrap is not None else t
 
-        user_node = Node("user", make_transport())
+        def make_node(node_id: str) -> Node:
+            t = make_transport()
+            tel = NodeTelemetry(node_id) if telemetry else None
+            if tel is not None:
+                # a fault-injecting wrapper (tests/fault_fabric.py)
+                # exposes plan.report(): wire it into this node's
+                # flight-recorder dumps so a post-mortem shows the
+                # injected faults next to the frames that suffered them
+                plan = getattr(t, "plan", None)
+                report = getattr(plan, "report", None)
+                if callable(report):
+                    tel.fault_report_provider = report
+            return Node(node_id, t, telemetry=tel)
+
+        user_node = make_node("user")
 
         def make_registry(owner: str) -> ActiveCodeRegistry:
             reg = ActiveCodeRegistry(
@@ -2354,7 +2605,7 @@ class Fleet:
             client_addrs = {f"c{i:03d}": make_addr(f"client.c{i:03d}",
                                                    f"c{i:03d}")
                             for i in range(n_clients)}
-            cloud_node = Node("cloud", make_transport())
+            cloud_node = make_node("cloud")
             cloud_app = CloudApp(make_registry("cloud"))
             cloud = CloudNode(
                 "cloud", client_addrs, cloud_app, policy or QuorumPolicy(),
@@ -2371,13 +2622,13 @@ class Fleet:
         else:
             # router + k shards; clients join through the router and are
             # partitioned onto shards by the consistent-hash ring
-            router_node = Node("router", make_transport())
+            router_node = make_node("router")
             router_addr = router_node.address("router")
             cloud_app = CloudApp(make_registry("router"))
             shard_nodes, shard_addrs, shard_clouds = [], {}, []
             for j in range(shards):
                 sid = f"shard{j}"
-                snode = Node(sid, make_transport())
+                snode = make_node(sid)
                 scloud = CloudNode(
                     "cloud", {}, CloudApp(make_registry(sid)),
                     policy or QuorumPolicy(),
@@ -2405,7 +2656,7 @@ class Fleet:
         for i in range(n_clients):
             app = make_app(i)
             cid = app.client_id
-            cnode = Node(cid, make_transport())
+            cnode = make_node(cid)
             actor = ClientNode(f"client.{cid}", app,
                                register_with=entry_addr,
                                heartbeat_interval_s=heartbeat_interval_s,
@@ -2433,14 +2684,68 @@ class Fleet:
                      client_nodes=client_nodes, client_addrs=client_addrs,
                      hub=hub, topology="inproc", shards=shards,
                      shard_nodes=shard_nodes, shard_addrs=shard_addrs,
-                     server=server, shard_clouds=shard_clouds)
+                     server=server, shard_clouds=shard_clouds,
+                     telemetry=telemetry)
 
     def frontend(self, user_id: str,
                  slot_specs: Sequence[SlotSpec] = ()) -> UserFrontend:
         """Create an analyst frontend bound to this fleet's server-side
         entry point (the cloud node, or the router when sharded)."""
         return UserFrontend(user_id, self.user_node, self.cloud_addr,
-                            slot_specs)
+                            slot_specs, fleet=self)
+
+    # -- observability ------------------------------------------------------
+    def pull_telemetry(self, timeout: float = 5.0
+                       ) -> List[TelemetrySnapshot]:
+        """Collect a telemetry snapshot from every node: the user node's
+        is taken locally, the rest arrive over the wire via the
+        ``telemetry_pull`` relay down the registration tree. Returns
+        whatever arrived inside ``timeout`` (a dead node's snapshot is
+        exactly the kind of thing that will be missing)."""
+        tel = self.user_node.telemetry
+        if tel is None:
+            raise RuntimeError("fleet was created with telemetry=False")
+        self._pull_seq += 1
+        pull_id = f"pull-{self._pull_seq}-{tracing.new_span_id()}"
+        out: "queue.Queue[TelemetrySnapshot]" = queue.Queue()
+        collector = _TelemetryCollector(f"telemetry.{pull_id}", out)
+        self.user_node.spawn(collector)
+        self.user_node.route(self.cloud_addr,
+                             TelemetryPull(pull_id,
+                                           self.user_node.address(
+                                               collector.name)),
+                             sender=collector.name)
+        # entry node + shards (if any) + every registered client (client
+        # processes over sharded TCP appear only in ``procs``)
+        expected = 1 + (len(self.shard_addrs) if self.shards > 1 else 0) \
+            + max(len(self.client_addrs), len(self.client_apps),
+                  len(self.procs))
+        snaps: Dict[str, TelemetrySnapshot] = {}
+        deadline = time.time() + timeout
+        while len(snaps) < expected:
+            try:
+                snap = out.get(timeout=max(0.01, deadline - time.time()))
+            except queue.Empty:
+                break
+            snaps[snap.node_id] = snap
+        collector.stop()
+        local = tel.snapshot(self.user_node.system.mailbox_depths())
+        snaps[self.user_node.node_id] = TelemetrySnapshot(
+            self.user_node.node_id, pull_id, local["metrics"],
+            local["spans"], local["events"])
+        return list(snaps.values())
+
+    def metrics(self, timeout: float = 5.0
+                ) -> Dict[str, Dict[str, float]]:
+        """Fleet-wide counter tables keyed by node id (one wire pull)."""
+        return merge_counters(self.pull_telemetry(timeout=timeout))
+
+    def trace(self, trace_id: str, timeout: float = 5.0
+              ) -> tracing.TraceTree:
+        """Pull every node's span buffer and assemble ``trace_id``'s
+        causal tree (``AssignmentHandle.trace()`` calls this)."""
+        snaps = self.pull_telemetry(timeout=timeout)
+        return tracing.assemble_trace(spans_of(snaps), trace_id)
 
     def shutdown(self, timeout: float = 5.0) -> None:
         """Stop everything: clients first (their owning shard or the cloud

@@ -1,0 +1,301 @@
+"""Wire-propagated causal tracing for the fabric.
+
+OODIDA's pitch is modifying algorithms *on a live fleet* — which is
+only safe if you can see what the fleet did with your deploy. This
+module gives every fabric message an optional **trace context**
+(``trace_id``/``span_id``/``parent_span_id``) that rides inside the
+codec envelope: injected once at submission (``deploy_code``,
+``AssignmentHandle``), then propagated automatically — the actor
+runtime activates the context around ``handle()``, ``Node.route``
+stamps it onto every outbound envelope, so user → router → shard →
+client hops stay causally linked with no per-call-site plumbing.
+
+Processing work is modelled as **spans** (named, timed, parented);
+message hops are not spans — they are the edges that carry the parent
+pointer. Each node buffers its own spans locally
+(:class:`SpanRecorder`); the user node later pulls them over the wire
+(``telemetry_snapshot``) and :func:`assemble_trace` rebuilds the causal
+tree. The context lives in a thread-local, matching the runtime's
+one-thread-per-actor model.
+
+Everything here is inert until someone opens a span: with telemetry
+off no context is ever created, ``current()`` stays ``None``, and
+envelopes carry zero extra bytes.
+"""
+from __future__ import annotations
+
+import threading
+import time
+import uuid
+from dataclasses import dataclass, field
+from typing import Any, Dict, Iterator, List, Optional
+
+
+def new_trace_id() -> str:
+    return uuid.uuid4().hex[:16]
+
+
+def new_span_id() -> str:
+    return uuid.uuid4().hex[:16]
+
+
+# ---------------------------------------------------------------------------
+# Trace context: the thing that crosses the wire
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class TraceContext:
+    """The causal coordinates of the work currently executing: which
+    trace it belongs to and which span is the direct parent of anything
+    started (or sent) from here."""
+    trace_id: str
+    span_id: str
+    parent_span_id: Optional[str] = None
+
+    # -- envelope embedding (flat keys in the envelope dict, additive) --
+    def to_wire_fields(self) -> Dict[str, str]:
+        d = {"trace_id": self.trace_id, "span_id": self.span_id}
+        if self.parent_span_id is not None:
+            d["parent_span_id"] = self.parent_span_id
+        return d
+
+    @staticmethod
+    def from_wire_fields(d: Dict[str, Any]) -> Optional["TraceContext"]:
+        tid = d.get("trace_id")
+        if tid is None:
+            return None
+        return TraceContext(tid, d.get("span_id", ""),
+                            d.get("parent_span_id"))
+
+
+_tls = threading.local()
+
+
+def current() -> Optional[TraceContext]:
+    """The trace context active on this thread (None if untraced)."""
+    return getattr(_tls, "ctx", None)
+
+
+def set_current(ctx: Optional[TraceContext]) -> Optional[TraceContext]:
+    """Install ``ctx`` as this thread's context; returns the previous
+    one so callers can restore it (the runtime's save/activate/restore
+    pattern around ``Actor.handle``)."""
+    prev = getattr(_tls, "ctx", None)
+    _tls.ctx = ctx
+    return prev
+
+
+# ---------------------------------------------------------------------------
+# Spans
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class Span:
+    """One named, timed unit of processing on one node."""
+    trace_id: str
+    span_id: str
+    parent_span_id: Optional[str]
+    name: str
+    node: str
+    start_ts: float
+    end_ts: float = 0.0
+    attrs: Dict[str, Any] = field(default_factory=dict)
+
+    @property
+    def duration_us(self) -> float:
+        return max(0.0, (self.end_ts - self.start_ts) * 1e6)
+
+    def to_dict(self) -> Dict[str, Any]:
+        d = {"trace_id": self.trace_id, "span_id": self.span_id,
+             "parent_span_id": self.parent_span_id, "name": self.name,
+             "node": self.node, "start_ts": self.start_ts,
+             "end_ts": self.end_ts}
+        if self.attrs:
+            d["attrs"] = self.attrs
+        return d
+
+    @staticmethod
+    def from_dict(d: Dict[str, Any]) -> "Span":
+        return Span(d["trace_id"], d["span_id"], d.get("parent_span_id"),
+                    d["name"], d["node"], d["start_ts"], d["end_ts"],
+                    dict(d.get("attrs") or {}))
+
+
+class _ActiveSpan:
+    """Context manager handed out by :meth:`SpanRecorder.span`."""
+
+    def __init__(self, recorder: "SpanRecorder", span: Span,
+                 ctx: TraceContext):
+        self.span = span
+        self.ctx = ctx
+        self._recorder = recorder
+        self._prev: Optional[TraceContext] = None
+
+    def __enter__(self) -> "_ActiveSpan":
+        self._prev = set_current(self.ctx)
+        return self
+
+    def __exit__(self, *exc) -> None:
+        set_current(self._prev)
+        self.close()
+
+    def close(self) -> None:
+        if self.span.end_ts == 0.0:
+            self.span.end_ts = time.time()
+            self._recorder.record(self.span)
+
+
+class SpanRecorder:
+    """Bounded per-node span buffer. Thread-safe; oldest spans fall off
+    when the bound is hit (a node is a flight recorder for its own
+    recent causal history, not an archive)."""
+
+    def __init__(self, node_id: str, capacity: int = 4096):
+        self.node_id = node_id
+        self._capacity = capacity
+        self._lock = threading.Lock()
+        self._spans: List[Span] = []
+
+    def record(self, span: Span) -> None:
+        with self._lock:
+            self._spans.append(span)
+            if len(self._spans) > self._capacity:
+                del self._spans[:len(self._spans) - self._capacity]
+
+    def span(self, name: str, parent: Optional[TraceContext] = None,
+             start_ts: Optional[float] = None, **attrs: Any) -> _ActiveSpan:
+        """Open a span under ``parent`` (default: this thread's current
+        context; a fresh trace root when there is none). Use as a
+        context manager — the child context is active inside the
+        ``with`` body, so sends from there carry it. ``start_ts``
+        backdates the span to when the work really began (e.g. a deploy
+        root covering front-end validation done before the span opened).
+        """
+        if parent is None:
+            parent = current()
+        if parent is None:
+            trace_id, parent_id = new_trace_id(), None
+        else:
+            trace_id, parent_id = parent.trace_id, parent.span_id
+        sid = new_span_id()
+        span = Span(trace_id, sid, parent_id, name, self.node_id,
+                    start_ts if start_ts is not None else time.time(),
+                    attrs=dict(attrs))
+        return _ActiveSpan(self, span, TraceContext(trace_id, sid, parent_id))
+
+    def drain(self) -> List[Dict[str, Any]]:
+        """Snapshot-and-keep: spans as wire-able dicts."""
+        with self._lock:
+            return [s.to_dict() for s in self._spans]
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._spans)
+
+
+# ---------------------------------------------------------------------------
+# Assembly: node-local span buffers -> one causal tree
+# ---------------------------------------------------------------------------
+
+
+class TraceTree:
+    """The assembled causal view of one trace.
+
+    ``duration_us`` is the *causal* duration: first root start to the
+    latest end over every span in the trace — i.e. deploy-to-effect,
+    not just the root's own (brief) processing time.
+    """
+
+    def __init__(self, trace_id: str, spans: List[Span]):
+        self.trace_id = trace_id
+        self.spans = sorted(spans, key=lambda s: s.start_ts)
+        self._children: Dict[Optional[str], List[Span]] = {}
+        by_id = {s.span_id: s for s in self.spans}
+        for s in self.spans:
+            parent = s.parent_span_id if s.parent_span_id in by_id else None
+            self._children.setdefault(parent, []).append(s)
+
+    @property
+    def roots(self) -> List[Span]:
+        return self._children.get(None, [])
+
+    @property
+    def root(self) -> Optional[Span]:
+        roots = self.roots
+        return roots[0] if roots else None
+
+    def children(self, span: Span) -> List[Span]:
+        return self._children.get(span.span_id, [])
+
+    @property
+    def is_connected(self) -> bool:
+        """True when every span hangs off a single root — the
+        wire-propagation invariant a sharded deploy must preserve."""
+        return len(self.roots) == 1 and len(self.spans) > 0
+
+    @property
+    def duration_us(self) -> float:
+        root = self.root
+        if root is None:
+            return 0.0
+        last_end = max(s.end_ts for s in self.spans)
+        return max(0.0, (last_end - root.start_ts) * 1e6)
+
+    def segments(self) -> Dict[str, Dict[str, float]]:
+        """Per-span-name rollup: count, total and max duration (us),
+        plus the causal reach (us from root start to the segment's
+        latest end) — the decomposition the shard-curve perf work
+        argues from."""
+        root = self.root
+        out: Dict[str, Dict[str, float]] = {}
+        for s in self.spans:
+            seg = out.setdefault(s.name, {"count": 0, "total_us": 0.0,
+                                          "max_us": 0.0, "reach_us": 0.0})
+            seg["count"] += 1
+            seg["total_us"] += s.duration_us
+            seg["max_us"] = max(seg["max_us"], s.duration_us)
+            if root is not None:
+                seg["reach_us"] = max(
+                    seg["reach_us"], (s.end_ts - root.start_ts) * 1e6)
+        return out
+
+    def walk(self) -> Iterator[tuple]:
+        """Depth-first (depth, span) traversal from the roots."""
+        def _walk(span: Span, depth: int):
+            yield depth, span
+            for child in self.children(span):
+                yield from _walk(child, depth + 1)
+        for root in self.roots:
+            yield from _walk(root, 0)
+
+    def render(self) -> str:
+        """Human-readable tree (the --trace-dump output)."""
+        lines = [f"trace {self.trace_id} "
+                 f"({self.duration_us / 1000:.2f} ms, "
+                 f"{len(self.spans)} spans)"]
+        for depth, s in self.walk():
+            lines.append(f"{'  ' * (depth + 1)}{s.name} @{s.node} "
+                         f"{s.duration_us / 1000:.3f} ms")
+        return "\n".join(lines)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"trace_id": self.trace_id,
+                "duration_us": self.duration_us,
+                "connected": self.is_connected,
+                "segments": self.segments(),
+                "spans": [s.to_dict() for s in self.spans]}
+
+
+def assemble_trace(span_dicts: List[Dict[str, Any]],
+                   trace_id: str) -> TraceTree:
+    """Merge span dicts pulled from many nodes into one tree, dropping
+    duplicates (a re-pulled node re-reports its whole buffer)."""
+    seen: Dict[str, Span] = {}
+    for d in span_dicts:
+        if d.get("trace_id") != trace_id:
+            continue
+        s = Span.from_dict(d)
+        seen[s.span_id] = s
+    return TraceTree(trace_id, list(seen.values()))

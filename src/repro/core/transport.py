@@ -29,9 +29,9 @@ import socket
 import struct
 import threading
 import time
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
-from repro.core import codec
+from repro.core import codec, tracing
 from repro.core.actors import ActorSystem, Envelope
 
 # ---------------------------------------------------------------------------
@@ -394,11 +394,16 @@ class Node:
     """
 
     def __init__(self, node_id: str, transport: Transport,
-                 system: Optional[ActorSystem] = None):
+                 system: Optional[ActorSystem] = None,
+                 telemetry: Optional[Any] = None):
         self.node_id = node_id
         self.system = system or ActorSystem()
         self.system.node = self
         self.transport = transport
+        # NodeTelemetry (or None = observability off; the envelope path
+        # then skips every metric/ring/trace touch and stays byte-identical)
+        self.telemetry = telemetry
+        self.system.telemetry = telemetry
         self._peer_lost_watchers: List[Callable[[str], None]] = []
         transport.on_peer_lost = self._peer_lost
         transport.start(node_id, self._deliver)
@@ -431,7 +436,15 @@ class Node:
             return
         if sender is not None and "@" not in sender:
             sender = make_addr(sender, self.node_id)
-        data = codec.envelope_to_wire(name, sender, msg)
+        tel = self.telemetry
+        if tel is None:
+            data = codec.envelope_to_wire(name, sender, msg)
+        else:
+            trace = tracing.current()
+            t0 = time.perf_counter()
+            data = codec.envelope_to_wire(name, sender, msg, trace=trace)
+            tel.on_send(codec.wire_tag_of(msg), node_id, len(data), trace,
+                        time.perf_counter() - t0)
         if node_id == self.node_id:
             self._deliver(data)        # loopback: still crosses the codec
             return
@@ -440,17 +453,30 @@ class Node:
         except TransportError:
             with self.system._lock:
                 self.system.dead_letters.append(Envelope(sender, msg))
+            if tel is not None:
+                tel.on_dead_letter(target, msg)
 
     def _deliver(self, data: bytes) -> None:
+        tel = self.telemetry
         try:
-            to, sender, msg = codec.envelope_from_wire(data)
+            if tel is None:
+                to, sender, msg = codec.envelope_from_wire(data)
+                trace = None
+            else:
+                t0 = time.perf_counter()
+                to, sender, msg, trace = codec.envelope_from_wire_traced(data)
+                tel.on_recv(codec.wire_tag_of(msg),
+                            split_addr(sender)[1] if sender else None,
+                            len(data), trace, time.perf_counter() - t0)
         except Exception:  # noqa: BLE001 - a poisoned frame must not kill
             # the transport's reader thread (and with it every frame
             # queued behind this one): dead-letter the raw bytes instead
             with self.system._lock:
                 self.system.dead_letters.append(Envelope(None, data))
+            if tel is not None:
+                tel.on_poison_frame(len(data))
             return
-        self.system.send(to, msg, sender=sender)
+        self.system.send(to, msg, sender=sender, trace=trace)
 
     # -- teardown -----------------------------------------------------------
     def close(self, timeout: float = 5.0) -> None:

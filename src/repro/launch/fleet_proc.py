@@ -45,6 +45,7 @@ def _client_main(cfg: Dict[str, Any]) -> None:
 
     from repro.core.fleet import ClientApp, ClientNode
     from repro.core.registry import ActiveCodeRegistry
+    from repro.core.telemetry import NodeTelemetry
     from repro.core.transport import Node, TcpTransport
 
     rng = np.random.default_rng(cfg["seed"])
@@ -53,7 +54,9 @@ def _client_main(cfg: Dict[str, Any]) -> None:
     app = ClientApp(cfg["client_id"], data, registry=registry)
 
     transport = TcpTransport()
-    node = Node(cfg["node_id"], transport)
+    tel = (NodeTelemetry(cfg["node_id"])
+           if cfg.get("telemetry", True) else None)
+    node = Node(cfg["node_id"], transport, telemetry=tel)
     transport.add_peer(cfg["cloud_node_id"], cfg["cloud_endpoint"])
 
     stop = threading.Event()
@@ -74,11 +77,14 @@ def _shard_main(cfg: Dict[str, Any]) -> None:
     and evicts the ones whose heartbeats stop."""
     from repro.core.fleet import CloudApp, CloudNode, RegisterShard
     from repro.core.registry import ActiveCodeRegistry
+    from repro.core.telemetry import NodeTelemetry
     from repro.core.transport import Node, TcpTransport
 
     registry = ActiveCodeRegistry(store_root=cfg.get("store_root"))
     transport = TcpTransport()
-    node = Node(cfg["shard_id"], transport)
+    tel = (NodeTelemetry(cfg["shard_id"])
+           if cfg.get("telemetry", True) else None)
+    node = Node(cfg["shard_id"], transport, telemetry=tel)
     transport.add_peer(cfg["router_node_id"], cfg["router_endpoint"])
 
     stop = threading.Event()
@@ -129,7 +135,8 @@ def spawn_tcp_fleet(n_clients: int, *, shards: int = 1, seed: int = 0,
                     shard_heartbeat_interval_s: Optional[float] = None,
                     shard_eviction_timeout_s: Optional[float] = None,
                     rehome_grace_s: float = 2.0,
-                    ready_timeout_s: float = 120.0):
+                    ready_timeout_s: float = 120.0,
+                    telemetry: bool = True):
     """Build a ``Fleet`` whose client nodes — and, for ``shards > 1``,
     whose CloudNode shards — are child processes on TCP.
 
@@ -141,17 +148,22 @@ def spawn_tcp_fleet(n_clients: int, *, shards: int = 1, seed: int = 0,
     from repro.core.consistency import QuorumPolicy
     from repro.core.fleet import CloudApp, CloudNode, Fleet, RouterNode
     from repro.core.registry import ActiveCodeRegistry
+    from repro.core.telemetry import NodeTelemetry
     from repro.core.transport import Node, TcpTransport
 
     policy = policy or QuorumPolicy()
     ctx = mp.get_context("spawn")
 
+    def make_tel(node_id: str):
+        return NodeTelemetry(node_id) if telemetry else None
+
     user_transport = TcpTransport()
-    user_node = Node("user", user_transport)
+    user_node = Node("user", user_transport, telemetry=make_tel("user"))
 
     if shards == 1:
         server_transport = TcpTransport()
-        server_node = Node("cloud", server_transport)
+        server_node = Node("cloud", server_transport,
+                           telemetry=make_tel("cloud"))
         cloud_reg = ActiveCodeRegistry(
             store_root=f"{store_root}/cloud" if store_root else None)
         cloud_app = CloudApp(cloud_reg)
@@ -165,7 +177,8 @@ def spawn_tcp_fleet(n_clients: int, *, shards: int = 1, seed: int = 0,
         shard_procs: List[Any] = []
     else:
         server_transport = TcpTransport()
-        server_node = Node("router", server_transport)
+        server_node = Node("router", server_transport,
+                           telemetry=make_tel("router"))
         router_reg = ActiveCodeRegistry(
             store_root=f"{store_root}/router" if store_root else None)
         cloud_app = CloudApp(router_reg)
@@ -190,6 +203,7 @@ def spawn_tcp_fleet(n_clients: int, *, shards: int = 1, seed: int = 0,
                 "straggler_grace_s": straggler_grace_s,
                 "shard_heartbeat_interval_s": shard_heartbeat_interval_s,
                 "store_root": f"{store_root}/{sid}" if store_root else None,
+                "telemetry": telemetry,
             }
             p = ctx.Process(target=_shard_main, args=(cfg,), daemon=True,
                             name=f"fleet-{sid}")
@@ -226,6 +240,7 @@ def spawn_tcp_fleet(n_clients: int, *, shards: int = 1, seed: int = 0,
             "cloud_addr": server_addr,
             "heartbeat_interval_s": heartbeat_interval_s,
             "heartbeat_miss_limit": heartbeat_miss_limit,
+            "telemetry": telemetry,
         }
         p = ctx.Process(target=_client_main, args=(cfg,), daemon=True,
                         name=f"fleet-client-{cid}")
@@ -252,7 +267,7 @@ def spawn_tcp_fleet(n_clients: int, *, shards: int = 1, seed: int = 0,
                  client_nodes=[], client_addrs=client_addrs,
                  procs=procs, topology="tcp", shards=shards,
                  shard_addrs=shard_addrs, shard_procs=shard_procs,
-                 server=server)
+                 server=server, telemetry=telemetry)
 
 
 # ---------------------------------------------------------------------------
@@ -432,6 +447,81 @@ def run_smoke(n_clients: int = 3, iterations: int = 3, shards: int = 1,
         fleet.shutdown()
 
 
+def run_telemetry_smoke(n_clients: int = 4, shards: int = 2,
+                        iterations: int = 2, trace_dump: bool = True,
+                        metrics_dump: bool = True,
+                        verbose: bool = True) -> int:
+    """The observability acceptance scenario over real processes: one
+    deploy + analytics round over TCP, then pull telemetry from every
+    node over the wire and require (a) a non-empty assembled deploy
+    trace and (b) a metrics dump in which every wire tag seen leaving a
+    node was also seen arriving somewhere. Returns 0 on success (the CI
+    ``telemetry-smoke`` contract)."""
+    import json as _json
+
+    from repro.core.assignment import Status
+
+    def say(msg: str) -> None:
+        if verbose:
+            print(f"[fleet_proc] {msg}", flush=True)
+
+    fleet = spawn_tcp_fleet(n_clients, shards=shards)
+    say(f"{n_clients} client processes"
+        + (f" across {shards} shard processes" if shards > 1 else "")
+        + ", telemetry on")
+    try:
+        fe = fleet.frontend("ci")
+        v1 = fe.deploy_code("telemetry_mean", _V1)
+        _, done = v1.result(timeout=120.0)
+        assert done.status == Status.DONE, f"deploy failed: {done.detail}"
+
+        handle = fe.submit_analytics("telemetry_mean",
+                                     iterations=iterations,
+                                     params={"n_values": 16})
+        results, done = handle.result(timeout=120.0)
+        assert done.status == Status.DONE, f"analytics failed: {done.detail}"
+        assert len(results) == iterations
+
+        if trace_dump:
+            tree = v1.trace(timeout=30.0)
+            assert tree.spans, "assembled deploy trace is empty"
+            assert tree.is_connected, \
+                f"deploy trace is not a connected tree: {tree.to_dict()}"
+            segments = tree.segments()
+            say(f"deploy trace: {len(tree.spans)} spans, "
+                f"{tree.duration_us / 1e3:.2f} ms, connected")
+            print(tree.render(), flush=True)
+            print(_json.dumps({"trace_segments": segments}, sort_keys=True),
+                  flush=True)
+
+        if metrics_dump:
+            metrics = fleet.metrics(timeout=30.0)
+            assert metrics, "metrics pull returned no nodes"
+            tags_out = {k.split(".", 1)[1] for t in metrics.values()
+                        for k in t if k.startswith("msgs_out.")}
+            tags_in = {k.split(".", 1)[1] for t in metrics.values()
+                       for k in t if k.startswith("msgs_in.")}
+            assert tags_out, "no msgs_out counters in the metrics dump"
+            # every tag that left a node arrived somewhere (no faults are
+            # injected here; snapshots still in flight during the pull are
+            # the one tag allowed to be asymmetric)
+            missing = tags_out - tags_in - {"telemetry_snapshot"}
+            assert not missing, \
+                f"tags sent but never received anywhere: {sorted(missing)}"
+            for tag in ("submit_assignment", "new_task", "task_done",
+                        "register_client", "telemetry_pull"):
+                assert tag in tags_out, f"expected wire tag {tag!r} missing"
+            say(f"metrics dump: {len(metrics)} nodes, "
+                f"{len(tags_out)} wire tags")
+            print(_json.dumps({"fleet_metrics": metrics}, sort_keys=True),
+                  flush=True)
+
+        say("telemetry plane verified across processes: PASS")
+        return 0
+    finally:
+        fleet.shutdown()
+
+
 def main(argv: Optional[list] = None) -> int:
     ap = argparse.ArgumentParser(
         description="Spawn a multi-process TCP fleet and run one "
@@ -445,9 +535,20 @@ def main(argv: Optional[list] = None) -> int:
     ap.add_argument("--shards", type=int, default=1)
     ap.add_argument("--churn", action="store_true")
     ap.add_argument("--shard-churn", action="store_true")
+    ap.add_argument("--trace-dump", action="store_true",
+                    help="deploy over TCP, then assemble and print the "
+                         "deploy trace pulled from every node")
+    ap.add_argument("--metrics-dump", action="store_true",
+                    help="print the fleet-wide per-node metrics tables "
+                         "after one deploy + analytics round")
     args = ap.parse_args(argv)
     if args.shard_churn:
         return run_shard_failover_smoke(args.clients, shards=args.shards)
+    if args.trace_dump or args.metrics_dump:
+        return run_telemetry_smoke(
+            max(args.clients, 4), shards=args.shards,
+            iterations=args.iterations,
+            trace_dump=args.trace_dump, metrics_dump=args.metrics_dump)
     return run_smoke(args.clients, args.iterations, shards=args.shards,
                      churn=args.churn)
 

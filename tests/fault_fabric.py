@@ -49,6 +49,8 @@ class _Rule:
     times: Optional[int] = None      # None == unlimited
     prob: Optional[float] = None     # None == always; else seeded coin
     copies: int = 1                  # extra deliveries for "duplicate"
+    rule_id: int = 0                 # insertion index, stable for report()
+    fired: int = 0                   # how many frames this rule acted on
 
     def matches(self, src: str, dst: str, tag: str) -> bool:
         return ((self.src is None or self.src == src)
@@ -69,6 +71,7 @@ class FaultPlan:
     from many actor threads)."""
 
     def __init__(self, seed: int = 0):
+        self.seed = seed
         self._rng = random.Random(seed)
         self._lock = threading.RLock()
         self._rules: List[_Rule] = []
@@ -77,24 +80,25 @@ class FaultPlan:
         self.log: List[Tuple[str, str, str, str]] = []  # (src, dst, tag, act)
 
     # -- scripting ----------------------------------------------------------
+    def _add_rule(self, rule: _Rule) -> None:
+        with self._lock:
+            rule.rule_id = len(self._rules)
+            self._rules.append(rule)
+
     def drop(self, src: Optional[str] = None, dst: Optional[str] = None,
              tag: Optional[str] = None, times: Optional[int] = None,
              prob: Optional[float] = None) -> None:
-        with self._lock:
-            self._rules.append(_Rule("drop", src, dst, tag, times, prob))
+        self._add_rule(_Rule("drop", src, dst, tag, times, prob))
 
     def duplicate(self, src: Optional[str] = None, dst: Optional[str] = None,
                   tag: Optional[str] = None, times: Optional[int] = None,
                   prob: Optional[float] = None, copies: int = 1) -> None:
-        with self._lock:
-            self._rules.append(
-                _Rule("duplicate", src, dst, tag, times, prob, copies))
+        self._add_rule(_Rule("duplicate", src, dst, tag, times, prob, copies))
 
     def delay(self, src: Optional[str] = None, dst: Optional[str] = None,
               tag: Optional[str] = None, times: Optional[int] = None,
               prob: Optional[float] = None) -> None:
-        with self._lock:
-            self._rules.append(_Rule("delay", src, dst, tag, times, prob))
+        self._add_rule(_Rule("delay", src, dst, tag, times, prob))
 
     def partition(self, a: str, b: str) -> None:
         """Drop everything between nodes ``a`` and ``b`` until heal()."""
@@ -143,6 +147,8 @@ class FaultPlan:
                     continue
                 rule = r
                 break
+            if rule is not None:
+                rule.fired += 1
             if rule is None:
                 self.log.append((src, dst, tag, "deliver"))
                 deliveries = 1
@@ -174,6 +180,28 @@ class FaultPlan:
                 if (src is None or s == src) and (dst is None or d == dst)
                 and (tag is None or t == tag)
                 and (action is None or a == action))
+
+    def report(self) -> dict:
+        """The injected-fault schedule as data: every rule with its id
+        and fired count, decision totals by action, open partitions, and
+        parked frames. ``Fleet.create`` wires this into each node's
+        flight-recorder dumps, so a post-mortem shows the faults next to
+        the frames that suffered them."""
+        with self._lock:
+            actions: dict = {}
+            for (_, _, _, a) in self.log:
+                actions[a] = actions.get(a, 0) + 1
+            return {
+                "seed": self.seed,
+                "rules": [{"id": r.rule_id, "action": r.action,
+                           "src": r.src, "dst": r.dst, "tag": r.tag,
+                           "times_left": r.times, "prob": r.prob,
+                           "copies": r.copies, "fired": r.fired}
+                          for r in self._rules],
+                "decisions": actions,
+                "partitions": [sorted(p) for p in self._partitions],
+                "held": len(self._held),
+            }
 
 
 class FaultyTransport(Transport):

@@ -34,6 +34,7 @@ from repro.core.fleet import (
     TaskDone,
 )
 from repro.core.module import ActiveModule
+from repro.core.telemetry import TelemetryPull, TelemetrySnapshot
 
 SOURCE = "def run(xs):\n    return 1.0\n"
 
@@ -89,6 +90,19 @@ def _examples():
         "deploy": DeployEvent("asg-2", "slot", "cd" * 16, 2, Target.CLIENTS,
                               4, 4),
         "done": DoneEvent("asg-3", Status.CANCELLED, "cancelled"),
+        "telemetry_pull": TelemetryPull("pull-0-aabb", "collector@user"),
+        "telemetry_snapshot": TelemetrySnapshot(
+            "c000", "pull-0-aabb",
+            metrics={"counters": {"msgs_out.task_done": 4.0},
+                     "histograms": {"codec.encode_us": {
+                         "count": 4, "sum": 80.0, "min": 10.0,
+                         "max": 40.0}}},
+            spans=[{"trace_id": "ab" * 8, "span_id": "cd" * 8,
+                    "parent_span_id": "ef" * 8, "name": "client_install",
+                    "node": "c000", "start_ts": 1.0, "end_ts": 2.0,
+                    "attrs": {"client_id": "c000"}}],
+            events=[{"ts": 1.5, "dir": "in", "tag": "new_task",
+                     "peer": "shard0", "bytes": 512}]),
     }
 
 

@@ -58,9 +58,23 @@ def _full_scenario(fleet, n_clients: int, timeout: float) -> None:
     results, done = long.result(timeout=timeout)
     assert done.status == Status.DONE
     seen = {r.winning_md5 for r in results}
-    assert v1.md5 in seen                      # started and ended on v1
-    assert results[-1].winning_md5 == v1.md5   # rollback took effect
-    assert all(r.n_dropped == 0 for r in results)  # never mixed versions
+    assert v1.md5 in seen                      # started on v1
+    assert seen <= {v1.md5, v2.md5}            # only deployed versions win
+    # during a swap window a round may mix versions; dissenting clients
+    # count as drops, never as silently merged results — every client
+    # is accounted for either way
+    assert all(r.n_accepted + r.n_dropped + r.n_stragglers == n_clients
+               for r in results)
+
+    # rollback took effect fleet-wide: deploys never block in-flight
+    # rounds, so the long assignment's final round may legitimately
+    # still commit v2 — but a round dispatched strictly after every
+    # client acked the rollback install must commit v1
+    post = fe.submit_analytics("t_mean", iterations=1,
+                               params={"n_values": 16})
+    results, done = post.result(timeout=timeout)
+    assert done.status == Status.DONE
+    assert all(r.winning_md5 == v1.md5 for r in results)
 
 
 def test_scenario_inproc_topology():

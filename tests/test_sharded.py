@@ -127,7 +127,6 @@ def test_sharded_full_scenario_handle_api_unchanged():
 
         results, done = long.result(timeout=30.0)
         assert done.status == Status.DONE
-        assert results[-1].winning_md5 == v1.md5
         # shards commit the same iteration number at independent times,
         # so during the swap one shard may commit on v1 while the other
         # is already on v2; the merge never mixes versions — dissenting
@@ -136,6 +135,16 @@ def test_sharded_full_scenario_handle_api_unchanged():
         assert all(r.n_accepted + r.n_dropped + r.n_stragglers == 4
                    for r in results)
         assert all(r.winning_md5 in (v1.md5, v2.md5) for r in results)
+
+        # rollback took effect fleet-wide: deploys never block in-flight
+        # rounds, so the long assignment's final round may legitimately
+        # still commit v2 — but a round dispatched strictly after every
+        # client acked the rollback install must commit v1
+        post = fe.submit_analytics("t_mean", iterations=1,
+                                   params={"n_values": 16})
+        results, done = post.result(timeout=30.0)
+        assert done.status == Status.DONE
+        assert all(r.winning_md5 == v1.md5 for r in results)
     finally:
         fleet.shutdown()
 

@@ -1,0 +1,430 @@
+"""The fabric observability plane: wire-propagated trace context,
+causal span trees across a sharded deploy, exact metrics under the
+deterministic fault harness, the flight-recorder ring bound, and the
+telemetry-off zero-byte guarantee.
+"""
+import json
+import time
+
+import pytest
+
+from fault_fabric import FaultPlan, FaultyTransport
+from test_codec import _examples
+
+from repro.core import codec, tracing
+from repro.core.assignment import Status
+from repro.core.fleet import Fleet
+from repro.core.telemetry import FlightRecorder, NodeTelemetry
+from repro.core.tracing import TraceContext, assemble_trace
+from repro.core.transport import InProcHub, InProcTransport, Node
+
+V1 = """
+import jax.numpy as jnp
+def run(xs):
+    return jnp.mean(xs) * 2.0
+"""
+
+V2 = """
+import jax.numpy as jnp
+def run(xs):
+    return jnp.mean(xs) * 4.0
+"""
+
+CTX = TraceContext("ab" * 8, "cd" * 8, "ef" * 8)
+
+
+def _wrap(plan):
+    return lambda inner: FaultyTransport(inner, plan)
+
+
+# ---------------------------------------------------------------------------
+# Trace context on the wire
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("tag", sorted(_examples()))
+def test_trace_context_survives_codec_round_trip_for_every_tag(tag):
+    msg = _examples()[tag]
+    data = codec.envelope_to_wire("cloud", "sink@user", msg, trace=CTX)
+    to, sender, back, trace = codec.envelope_from_wire_traced(data)
+    assert (to, sender) == ("cloud", "sink@user")
+    assert type(back) is type(msg)
+    assert trace == CTX
+
+
+@pytest.mark.parametrize("tag", sorted(_examples()))
+def test_untraced_envelope_has_zero_trace_bytes(tag):
+    """Telemetry-off envelopes are byte-identical to the pre-tracing
+    wire format: no trace keys, no size delta."""
+    msg = _examples()[tag]
+    plain = codec.envelope_to_wire("cloud", "sink@user", msg)
+    # no envelope-level trace keys (a telemetry_snapshot's *payload*
+    # legitimately carries span dicts with their own trace ids)
+    top = json.loads(plain.decode("utf-8"))
+    assert "trace_id" not in top and "span_id" not in top
+    traced = codec.envelope_to_wire("cloud", "sink@user", msg, trace=CTX)
+    assert len(traced) > len(plain)
+    # decoding a plain envelope through the traced path yields None ctx
+    *_, trace = codec.envelope_from_wire_traced(plain)
+    assert trace is None
+
+
+def test_trace_without_parent_omits_the_field():
+    ctx = TraceContext("11" * 8, "22" * 8)
+    data = codec.envelope_to_wire("a", None, _examples()["deadline"],
+                                  trace=ctx)
+    assert b"parent_span_id" not in data
+    *_, back = codec.envelope_from_wire_traced(data)
+    assert back == ctx
+
+
+# ---------------------------------------------------------------------------
+# Causal span tree across a sharded deploy
+# ---------------------------------------------------------------------------
+
+
+def test_sharded_deploy_assembles_connected_span_tree():
+    """In-proc k=2: a deploy's spans — pulled over the wire from every
+    node — form one connected tree rooted at the user's deploy span,
+    with every segment of deploy-to-effect present and non-zero."""
+    fleet = Fleet.create(4, shards=2)
+    try:
+        fe = fleet.frontend("u1")
+        dep = fe.deploy_code("traced_mean", V1)
+        _, done = dep.result(timeout=30.0)
+        assert done.status == Status.DONE
+        # first_commit closes at the first analytics commit won by the
+        # freshly deployed version
+        h = fe.submit_analytics("traced_mean", iterations=1,
+                                params={"n_values": 8})
+        _, done = h.result(timeout=30.0)
+        assert done.status == Status.DONE
+
+        assert dep.trace_id is not None
+        tree = dep.trace(timeout=15.0)
+        assert tree.is_connected, tree.to_dict()
+        assert tree.root is not None and tree.root.name == "deploy"
+        assert tree.root.node == "user"
+
+        segs = tree.segments()
+        for name in ("deploy", "router_fanout", "shard_install",
+                     "client_install", "first_commit"):
+            assert name in segs, sorted(segs)
+            assert segs[name]["total_us"] > 0.0, (name, segs[name])
+        assert segs["router_fanout"]["count"] == 1
+        assert segs["shard_install"]["count"] == 2          # one per shard
+        assert segs["client_install"]["count"] == 4         # one per client
+        # causal duration covers the whole deploy-to-effect window: it
+        # must reach at least as far as the latest segment end
+        assert tree.duration_us >= max(s["reach_us"] for s in segs.values())
+        # every span but the root hangs off a parent in the same trace
+        ids = {s.span_id for s in tree.spans}
+        for s in tree.spans:
+            if s is not tree.root:
+                assert s.parent_span_id in ids
+    finally:
+        fleet.shutdown()
+
+
+def test_assignment_trace_is_separate_from_deploy_trace():
+    fleet = Fleet.create(2)
+    try:
+        fe = fleet.frontend("u1")
+        dep = fe.deploy_code("sep_mean", V1)
+        dep.result(timeout=30.0)
+        h = fe.submit_analytics("sep_mean", iterations=1,
+                                params={"n_values": 8})
+        h.result(timeout=30.0)
+        assert h.trace_id is not None
+        assert h.trace_id != dep.trace_id
+        tree = fleet.trace(h.trace_id, timeout=15.0)
+        assert tree.is_connected
+        assert tree.root.name == "assignment"
+    finally:
+        fleet.shutdown()
+
+
+def test_assemble_trace_dedupes_re_pulled_spans():
+    spans = [{"trace_id": "t1", "span_id": "a", "parent_span_id": None,
+              "name": "deploy", "node": "user",
+              "start_ts": 1.0, "end_ts": 2.0}]
+    tree = assemble_trace(spans + spans + [
+        {"trace_id": "other", "span_id": "x", "parent_span_id": None,
+         "name": "noise", "node": "user", "start_ts": 0.0, "end_ts": 9.0}],
+        "t1")
+    assert len(tree.spans) == 1
+    assert tree.is_connected
+
+
+# ---------------------------------------------------------------------------
+# Metrics under the deterministic fault harness
+# ---------------------------------------------------------------------------
+
+
+def test_metrics_match_exact_counts_and_fault_deltas():
+    """msgs_out counts route attempts (pre-fault), msgs_in counts real
+    deliveries (post-fault): drops and duplicates show up as exact
+    deltas between the two, matching the plan's own decision log."""
+    plan = FaultPlan()
+    plan.drop(tag="deadline", times=2)
+    hub = InProcHub()
+    node_a = Node("a", FaultyTransport(InProcTransport(hub), plan),
+                  telemetry=NodeTelemetry("a"))
+    node_b = Node("b", FaultyTransport(InProcTransport(hub), plan),
+                  telemetry=NodeTelemetry("b"))
+
+    from repro.core.actors import Actor
+
+    class Sink(Actor):
+        def __init__(self):
+            super().__init__("sink")
+            self.got = 0
+
+        def handle(self, sender, msg):
+            self.got += 1
+
+    sink = node_b.spawn(Sink())
+    from repro.core.fleet import Deadline
+    for i in range(5):
+        node_a.route("sink@b", Deadline(i))
+    assert _wait(lambda: sink.got == 3)
+
+    a, b = node_a.telemetry.metrics, node_b.telemetry.metrics
+    assert a.counter("msgs_out.deadline") == 5
+    assert b.counter("msgs_in.deadline") == 3
+    assert plan.count(tag="deadline", action="drop") == 2
+    assert plan.count(tag="deadline", action="deliver") == 3
+    # the rule's own fired count agrees with the metric delta
+    report = plan.report()
+    (rule,) = report["rules"]
+    assert rule["action"] == "drop" and rule["fired"] == 2
+    assert rule["times_left"] == 0
+    delta = a.counter("msgs_out.deadline") - b.counter("msgs_in.deadline")
+    assert delta == rule["fired"]
+
+    node_a.close()
+    node_b.close()
+
+
+def test_duplicates_visible_as_positive_delta():
+    plan = FaultPlan()
+    plan.duplicate(tag="deadline", times=3, copies=2)
+    hub = InProcHub()
+    node_a = Node("a", FaultyTransport(InProcTransport(hub), plan),
+                  telemetry=NodeTelemetry("a"))
+    node_b = Node("b", FaultyTransport(InProcTransport(hub), plan),
+                  telemetry=NodeTelemetry("b"))
+
+    from repro.core.actors import Actor
+
+    class Sink(Actor):
+        def __init__(self):
+            super().__init__("sink")
+            self.got = 0
+
+        def handle(self, sender, msg):
+            self.got += 1
+
+    sink = node_b.spawn(Sink())
+    from repro.core.fleet import Deadline
+    for i in range(4):
+        node_a.route("sink@b", Deadline(i))
+    # 3 duplicated frames deliver 3 copies each, the 4th is clean
+    assert _wait(lambda: sink.got == 10)
+    assert node_a.telemetry.metrics.counter("msgs_out.deadline") == 4
+    assert node_b.telemetry.metrics.counter("msgs_in.deadline") == 10
+    assert plan.report()["rules"][0]["fired"] == 3
+    node_a.close()
+    node_b.close()
+
+
+def test_fleet_metrics_exact_counts_one_round():
+    """One analytics round on a 3-client in-proc fleet: the fleet-wide
+    counter tables account for every fabric message exactly."""
+    fleet = Fleet.create(3)
+    try:
+        fe = fleet.frontend("u1")
+        h = fe.submit_analytics("mean", iterations=2,
+                                params={"n_values": 8})
+        _, done = h.result(timeout=30.0)
+        assert done.status == Status.DONE
+        m = fleet.metrics(timeout=15.0)
+        assert set(m) == {"user", "cloud", "c000", "c001", "c002"}
+        assert m["user"]["msgs_out.submit_assignment"] == 1
+        assert m["cloud"]["msgs_in.submit_assignment"] == 1
+        # 2 iterations x 3 clients
+        assert m["cloud"]["msgs_out.new_task"] == 6
+        assert m["cloud"]["msgs_in.task_done"] == 6
+        for cid in ("c000", "c001", "c002"):
+            assert m[cid]["msgs_in.new_task"] == 2
+            assert m[cid]["msgs_out.task_done"] == 2
+        # sent == received, tag by tag, across the whole fleet (loss-free
+        # fabric; the in-flight snapshot replies are the one exception)
+        sent: dict = {}
+        recv: dict = {}
+        for table in m.values():
+            for k, v in table.items():
+                if k.startswith("msgs_out."):
+                    tag = k.removeprefix("msgs_out.")
+                    sent[tag] = sent.get(tag, 0) + v
+                elif k.startswith("msgs_in."):
+                    tag = k.removeprefix("msgs_in.")
+                    recv[tag] = recv.get(tag, 0) + v
+        for tag, n in sent.items():
+            # the pull's own messages are mid-flight while the snapshots
+            # are being taken, so their counters are legitimately skewed
+            if tag in ("telemetry_pull", "telemetry_snapshot"):
+                continue
+            assert recv.get(tag, 0) == n, (tag, sent, recv)
+    finally:
+        fleet.shutdown()
+
+
+def test_fault_report_wired_into_flight_recorder_dump():
+    """Fleet.create wires a FaultyTransport's plan.report() into every
+    node's telemetry, so a post-mortem dump shows the injected faults."""
+    plan = FaultPlan()
+    plan.drop(tag="heartbeat", times=1)
+    fleet = Fleet.create(2, transport_wrap=_wrap(plan))
+    try:
+        tel = fleet.user_node.telemetry
+        assert tel is not None
+        assert tel.fault_report_provider is not None
+        out = tel.dump("test-dump", stream=open("/dev/null", "w"))
+        assert out["fault_report"]["rules"][0]["action"] == "drop"
+        assert out["node_id"] == "user"
+        assert out["flight_recorder"] is True
+    finally:
+        fleet.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# Flight recorder
+# ---------------------------------------------------------------------------
+
+
+def test_flight_recorder_ring_bound_enforced():
+    rec = FlightRecorder("n1", capacity=8)
+    for i in range(20):
+        rec.record("out", f"tag{i}", "peer", i)
+    assert len(rec) == 8
+    events = rec.events()
+    assert [e["tag"] for e in events] == [f"tag{i}" for i in range(12, 20)]
+    assert events[-1]["bytes"] == 19
+
+
+def test_dead_letter_leaves_artifacts_and_logs_once(caplog):
+    """The PR-5 blind spot: a message to an unknown target now bumps a
+    counter, lands in the ring, and logs the (tag, target) pair exactly
+    once — instead of vanishing."""
+    import io
+    import logging
+
+    tel = NodeTelemetry("solo", dump_stream=io.StringIO())
+    hub = InProcHub()
+    node = Node("solo", InProcTransport(hub), telemetry=tel)
+    from repro.core.fleet import Deadline
+    with caplog.at_level(logging.WARNING, logger="repro.fabric"):
+        for _ in range(3):
+            node.route("nobody@solo", Deadline(1))
+        assert _wait(lambda: tel.metrics.counter("dead_letters") == 3)
+    once = [r for r in caplog.records if "dead letter" in r.message]
+    assert len(once) == 1
+    assert "deadline" in once[0].getMessage()
+    assert "nobody" in once[0].getMessage()
+    dead = [e for e in tel.recorder.events() if e["dir"] == "dead"]
+    assert len(dead) == 3
+    # the dump that fired is valid JSON on the configured stream
+    dumped = tel._dump_stream.getvalue()
+    assert json.loads(dumped.splitlines()[0])["reason"].startswith(
+        "dead-letter:deadline")
+    node.close()
+
+
+# ---------------------------------------------------------------------------
+# Telemetry off: zero tax
+# ---------------------------------------------------------------------------
+
+
+def test_telemetry_off_fleet_has_no_observability_state():
+    fleet = Fleet.create(2, telemetry=False)
+    try:
+        assert fleet.user_node.telemetry is None
+        assert fleet.cloud_node.telemetry is None
+        for n in fleet.client_nodes:
+            assert n.telemetry is None
+        fe = fleet.frontend("u1")
+        dep = fe.deploy_code("off_mean", V1)
+        _, done = dep.result(timeout=30.0)
+        assert done.status == Status.DONE
+        # no trace was ever opened, nothing is pullable
+        assert dep.trace_id is None
+        with pytest.raises(RuntimeError):
+            dep.trace()
+        with pytest.raises(RuntimeError):
+            fleet.pull_telemetry()
+        # and no thread leaked a context
+        assert tracing.current() is None
+    finally:
+        fleet.shutdown()
+
+
+def test_telemetry_off_adds_zero_envelope_bytes():
+    """Capture real frames from a telemetry-off fleet round: none carry
+    trace keys, so the hot path pays zero extra bytes per envelope."""
+    frames = []
+
+    class Tap:
+        def __init__(self, inner):
+            self.inner = inner
+
+        def start(self, node_id, deliver):
+            self.inner.start(node_id, deliver)
+
+        def send(self, dest_node, data):
+            frames.append(data)
+            self.inner.send(dest_node, data)
+
+        @property
+        def endpoint(self):
+            return self.inner.endpoint
+
+        def add_peer(self, node_id, endpoint):
+            self.inner.add_peer(node_id, endpoint)
+
+        def forget_peer(self, node_id):
+            self.inner.forget_peer(node_id)
+
+        def close(self):
+            self.inner.close()
+
+        @property
+        def on_peer_lost(self):
+            return self.inner.on_peer_lost
+
+        @on_peer_lost.setter
+        def on_peer_lost(self, cb):
+            self.inner.on_peer_lost = cb
+
+    fleet = Fleet.create(2, telemetry=False, transport_wrap=Tap)
+    try:
+        fe = fleet.frontend("u1")
+        h = fe.submit_analytics("mean", iterations=1,
+                                params={"n_values": 8})
+        _, done = h.result(timeout=30.0)
+        assert done.status == Status.DONE
+    finally:
+        fleet.shutdown()
+    assert frames
+    for data in frames:
+        assert b'"trace_id"' not in data
+        assert b'"span_id"' not in data
+
+
+def _wait(predicate, timeout=10.0, interval=0.01):
+    deadline = time.time() + timeout
+    while not predicate():
+        if time.time() > deadline:
+            return False
+        time.sleep(interval)
+    return True
