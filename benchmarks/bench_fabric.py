@@ -24,6 +24,9 @@ import threading
 import time
 from statistics import mean, median
 
+import numpy as np
+
+from repro.core import wirefmt
 from repro.core.fleet import Fleet
 
 _V1 = """
@@ -174,6 +177,77 @@ def run_span_bench(say=print) -> list:
             say(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
     record_rows(all_rows)
     return all_rows
+
+
+# -- wire-format payload sweep ----------------------------------------------
+
+_SWEEP_SIZES = ((1 << 10, "1kb"), (100 << 10, "100kb"),
+                (1 << 20, "1mb"), (10 << 20, "10mb"))
+
+
+def _sweep_formats():
+    """json vs binary vs binary+compressed, using the best compression
+    the running interpreter actually has (zstd when installed, zlib
+    otherwise — same preference order the handshake negotiates)."""
+    comp = wirefmt.supported_compressions()[0]
+    return [("json", wirefmt.JSON_FORMAT),
+            ("binary", wirefmt.WireFormat(encoding="binary")),
+            (f"binary_{comp}",
+             wirefmt.WireFormat(encoding="binary", compression=comp))]
+
+
+def bench_payload_sweep(report) -> None:
+    """Codec-level cost of one result frame per content encoding: a
+    ``task_done`` envelope carrying a float32 payload of 1 KB .. 10 MB,
+    encoded json vs binary vs binary+compressed. Emits bytes-per-frame
+    and encode+decode round-latency rows, and asserts the wire-format
+    acceptance floor: binary+compressed ships >= 5x fewer bytes than the
+    JSON baseline at 10 MB."""
+    rng = np.random.default_rng(0)
+    bytes_10mb = {}
+    for nbytes, label in _SWEEP_SIZES:
+        arr = rng.normal(size=nbytes // 4).astype(np.float32)
+        env = {"type": "task_done", "to": "cloud.asg1@cloud",
+               "sender": "client.c000@c000",
+               "data": {"payload": arr, "iteration": 0}}
+        for fname, fmt in _sweep_formats():
+            reps = 3 if nbytes <= (1 << 20) else 1
+            best, data = None, b""
+            for _ in range(reps):
+                t0 = time.perf_counter()
+                data = wirefmt.encode_envelope(env, fmt)
+                wirefmt.decode_envelope(data)
+                dt = time.perf_counter() - t0
+                best = dt if best is None else min(best, dt)
+            report(f"fabric_wire_bytes_{fname}_{label}", float(len(data)),
+                   f"BYTES (not us) per task_done frame, {label} float32 "
+                   f"payload, on-wire label {wirefmt.frame_label(data)!r}")
+            report(f"fabric_wire_codec_{fname}_{label}", best * 1e6,
+                   f"encode+decode round trip, {label} float32 payload")
+            if label == "10mb":
+                bytes_10mb[fname] = len(data)
+    comp_name = next(n for n in bytes_10mb if n != "json" and n != "binary")
+    ratio = bytes_10mb["json"] / bytes_10mb[comp_name]
+    assert ratio >= 5.0, \
+        f"{comp_name} must ship >=5x fewer bytes than JSON at 10 MB, " \
+        f"got {ratio:.2f}x"
+    report("fabric_wire_ratio_json_over_comp_10mb", ratio,
+           f"RATIO (not us): JSON bytes / {comp_name} bytes at 10 MB "
+           f"(acceptance floor 5.0)")
+
+
+def run_payload_sweep(say=print) -> list:
+    """Standalone entry: record the payload-sweep rows into
+    BENCH_fabric.json without re-running the fleet benchmarks."""
+    rows = []
+
+    def report(name, us, derived=""):
+        rows.append({"name": name, "us_per_call": us, "derived": derived})
+        say(f"{name},{us:.1f},{derived}")
+
+    bench_payload_sweep(report)
+    record_rows(rows)
+    return rows
 
 
 # pure-python modules for the soak: no jax tracing on the hot path, so
@@ -362,11 +436,16 @@ def main(report) -> None:
                  else f"{k} shards behind the router")
         report(f"fabric_deploy_to_effect_shards_k{k}", d2e * 1e6,
                f"deploy-to-effect, 8 in-proc clients, {label}")
+    # wire-format payload sweep: bytes/frame + codec round latency per
+    # content encoding, with the >=5x-at-10MB acceptance assertion
+    bench_payload_sweep(report)
 
 
 if __name__ == "__main__":
     import sys
     if "--spans" in sys.argv:
         run_span_bench()
+    elif "--payload-sweep" in sys.argv:
+        run_payload_sweep()
     else:
         main(lambda n, us, d: print(f"{n},{us:.1f},{d}"))

@@ -48,19 +48,39 @@ def to_wire(obj: Dict[str, Any]) -> bytes:
 
 
 def from_wire(data: bytes) -> Dict[str, Any]:
-    return json.loads(data.decode("utf-8"))
+    return json.loads(data.decode("utf-8"), object_hook=_object_hook)
 
 
 def _default(o: Any):
-    # numpy / jax arrays and scalars inside result payloads: arrays
-    # (ndim >= 1) lower to nested lists, 0-d/scalars to Python numbers
-    if getattr(o, "ndim", 0) and hasattr(o, "tolist"):
-        return o.tolist()
+    # numpy / jax arrays and scalars inside result payloads: tagged
+    # single-key dicts so the dtype survives the JSON fallback — arrays
+    # as {"__nd__": [dtype, shape, nested lists]}, 0-d/scalars as
+    # {"__np__": [dtype, value]}. The binary encoding (core/wirefmt.py)
+    # carries the raw bytes instead; this path is its mandatory fallback.
+    dtype = getattr(o, "dtype", None)
+    if dtype is not None and hasattr(o, "tolist"):
+        if getattr(o, "ndim", 0):
+            return {"__nd__": [dtype.name, list(o.shape), o.tolist()]}
+        return {"__np__": [dtype.name,
+                           o.item() if hasattr(o, "item") else o.tolist()]}
     if hasattr(o, "item"):
         return o.item()
     if hasattr(o, "tolist"):
         return o.tolist()
     raise TypeError(f"not JSON serializable: {type(o)!r}")
+
+
+def _object_hook(d: Dict[str, Any]) -> Any:
+    if len(d) == 1:
+        if "__nd__" in d:
+            import numpy as np
+            dtype, shape, vals = d["__nd__"]
+            return np.asarray(vals, dtype=np.dtype(dtype)).reshape(shape)
+        if "__np__" in d:
+            import numpy as np
+            dtype, val = d["__np__"]
+            return np.dtype(dtype).type(val)
+    return d
 
 
 # ---------------------------------------------------------------------------
@@ -151,24 +171,45 @@ def message_from_wire(data: bytes) -> Any:
     return message_from_wire_dict(from_wire(data))
 
 
+#: First byte of every non-legacy frame (mirrors ``wirefmt.MAGIC`` —
+#: kept here so the JSON-only decode path never imports wirefmt).
+_WIRE_MAGIC = 0x9E
+
+
 def envelope_to_wire(to: str, sender: Optional[str], msg: Any,
-                     trace: Optional[Any] = None) -> bytes:
+                     trace: Optional[Any] = None,
+                     fmt: Optional[Any] = None) -> bytes:
     """The routed unit a Transport moves: destination actor (node-local
     name), sender address, and the tagged message payload. ``trace``
     (a ``tracing.TraceContext``) adds the additive trace-context keys
     — absent entirely when untraced, so telemetry-off envelopes are
-    byte-identical to the pre-tracing wire format."""
+    byte-identical to the pre-tracing wire format. ``fmt`` (a
+    ``wirefmt.WireFormat``, usually the one negotiated for the
+    destination peer) selects the frame encoding; ``None`` keeps the
+    legacy JSON bytes exactly."""
     d = message_to_wire_dict(msg)
     d["to"] = to
     d["sender"] = sender
     if trace is not None:
         d.update(trace.to_wire_fields())
+    if fmt is not None:
+        from repro.core import wirefmt
+        return wirefmt.encode_envelope(d, fmt)
     return to_wire(d)
+
+
+def _envelope_dict(data: bytes) -> Dict[str, Any]:
+    """Decode any frame — self-describing by first byte, so no
+    negotiation state is needed on the receive path."""
+    if data and data[0] == _WIRE_MAGIC:
+        from repro.core import wirefmt
+        return wirefmt.decode_envelope(data)
+    return from_wire(data)
 
 
 def envelope_from_wire(data: bytes) -> Tuple[str, Optional[str], Any]:
     """Returns (to, sender, decoded message)."""
-    d = from_wire(data)
+    d = _envelope_dict(data)
     return d["to"], d.get("sender"), message_from_wire_dict(d)
 
 
@@ -176,7 +217,7 @@ def envelope_from_wire_traced(
         data: bytes) -> Tuple[str, Optional[str], Any, Optional[Any]]:
     """Returns (to, sender, decoded message, trace context or None)."""
     from repro.core.tracing import TraceContext
-    d = from_wire(data)
+    d = _envelope_dict(data)
     return (d["to"], d.get("sender"), message_from_wire_dict(d),
             TraceContext.from_wire_fields(d))
 

@@ -152,6 +152,30 @@ class NewTask:
 
 
 @dataclass(frozen=True)
+class InstallModule:
+    """The broadcast leg of a client-targeted code deploy. Unlike
+    ``NewTask`` it carries no per-client task id, so its wire bytes are
+    *identical* for every client of a shard leg — which is what lets
+    ``Node.route_batch`` encode (and compress) the module source once
+    per leg instead of once per client. The receiving client node
+    synthesizes its own ``TaskSpec`` locally and replies ``TaskDone``
+    exactly as it would for a ``NewTask``."""
+
+    spec: AssignmentSpec           # carries the module code
+    iteration: int
+    handler: str                   # assignment-handler address
+
+    def to_wire_dict(self) -> Dict[str, Any]:
+        return {"spec": self.spec.to_wire_dict(),
+                "iteration": self.iteration, "handler": self.handler}
+
+    @staticmethod
+    def from_wire_dict(d: Dict[str, Any]) -> "InstallModule":
+        return InstallModule(AssignmentSpec.from_wire_dict(d["spec"]),
+                             int(d["iteration"]), d["handler"])
+
+
+@dataclass(frozen=True)
 class TaskDone:
     task: TaskSpec
     result: TaggedResult
@@ -334,6 +358,7 @@ class HeartbeatAck:
 codec.register_message("submit_assignment", SubmitAssignment)
 codec.register_message("cancel_assignment", CancelAssignment)
 codec.register_message("new_task", NewTask)
+codec.register_message("install_module", InstallModule)
 codec.register_message("task_done", TaskDone)
 codec.register_message("deadline", Deadline)
 codec.register_message("register_client", RegisterClient)
@@ -769,6 +794,16 @@ class ClientNode(Actor):
             assert self._system is not None
             self._system.spawn(TaskHandler(handler_name, self.app, msg.task,
                                            msg.handler))
+        elif isinstance(msg, InstallModule):
+            # broadcast deploy: same frame for every client — synthesize
+            # the per-client TaskSpec here instead of on the shard
+            self._task_seq += 1
+            handler_name = f"{self.name}.task{self._task_seq}"
+            task = TaskSpec.for_client(msg.spec, self.app.client_id,
+                                       msg.iteration)
+            assert self._system is not None
+            self._system.spawn(TaskHandler(handler_name, self.app, task,
+                                           msg.handler))
         elif isinstance(msg, RegisterAck):
             sys_ = self._system
             cloud_node = split_addr(msg.cloud_addr)[1]
@@ -916,8 +951,19 @@ class AssignmentHandler(Actor):
             policy=self.policy)
         # clients reply across the fabric: hand them our full address
         assert self._system is not None
-        reply_to = (self._system.node.address(self.name)
-                    if self._system.node is not None else self.name)
+        node = self._system.node
+        reply_to = (node.address(self.name) if node is not None
+                    else self.name)
+        if (self.spec.kind == AssignmentKind.CODE_REPLACEMENT
+                and node is not None):
+            # deploy fan-out: one InstallModule broadcast — the heavy
+            # module source is encoded/compressed once per shard leg
+            # (per wire format), not once per client
+            node.route_batch([self.client_nodes[cid] for cid in targets],
+                             InstallModule(self.spec, self.iteration,
+                                           reply_to),
+                             sender=self.name)
+            return
         for cid in targets:
             task = TaskSpec.for_client(self.spec, cid, self.iteration)
             self.send(self.client_nodes[cid], NewTask(task, reply_to))

@@ -173,19 +173,30 @@ class NodeTelemetry:
 
     # -- envelope path hooks (called from Node.route/_deliver) --------------
     def on_send(self, tag: str, peer: Optional[str], nbytes: int,
-                trace: Optional[TraceContext], encode_s: float) -> None:
+                trace: Optional[TraceContext], encode_s: float,
+                encoding: Optional[str] = None) -> None:
         m = self.metrics
         m.inc(f"msgs_out.{tag}")
         m.inc(f"bytes_out.{tag}", nbytes)
         m.observe("codec.encode_us", encode_s * 1e6)
+        if encoding is not None:
+            # per-frame wire-encoding label ("json", "binary",
+            # "binary+zlib", ...): frame counts plus a bytes-per-frame
+            # histogram, the bandwidth split the bench sweeps read out
+            m.inc(f"frames_out.{encoding}")
+            m.observe(f"frame_bytes_out.{encoding}", nbytes)
         self.recorder.record("out", tag, peer, nbytes, trace)
 
     def on_recv(self, tag: str, peer: Optional[str], nbytes: int,
-                trace: Optional[TraceContext], decode_s: float) -> None:
+                trace: Optional[TraceContext], decode_s: float,
+                encoding: Optional[str] = None) -> None:
         m = self.metrics
         m.inc(f"msgs_in.{tag}")
         m.inc(f"bytes_in.{tag}", nbytes)
         m.observe("codec.decode_us", decode_s * 1e6)
+        if encoding is not None:
+            m.inc(f"frames_in.{encoding}")
+            m.observe(f"frame_bytes_in.{encoding}", nbytes)
         self.recorder.record("in", tag, peer, nbytes, trace)
 
     def on_dead_letter(self, target: str, msg: Any) -> None:

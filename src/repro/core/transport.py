@@ -31,7 +31,7 @@ import threading
 import time
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
-from repro.core import codec, tracing
+from repro.core import codec, tracing, wirefmt
 from repro.core.actors import ActorSystem, Envelope
 
 # ---------------------------------------------------------------------------
@@ -391,11 +391,20 @@ class Node:
     codec for self-addressed sends), decode on arrival, deliver to the
     local mailbox. Remote sends that fail at the transport layer land in
     the local system's dead letters, like sends to dead local actors.
+
+    The frame encoding per peer is negotiated by ``self.wire`` (a
+    ``wirefmt.WireState``): the first send to a peer also fires a
+    ``Hello`` control envelope (always plain JSON), the peer's
+    ``HelloAck``/counter-``Hello`` settles the best common format, and
+    until then every frame to that peer is the legacy JSON fallback.
+    Control envelopes address the ``_wirefmt`` pseudo-actor and are
+    intercepted in ``_deliver`` before actor dispatch.
     """
 
     def __init__(self, node_id: str, transport: Transport,
                  system: Optional[ActorSystem] = None,
-                 telemetry: Optional[Any] = None):
+                 telemetry: Optional[Any] = None,
+                 wire: Optional[wirefmt.WireState] = None):
         self.node_id = node_id
         self.system = system or ActorSystem()
         self.system.node = self
@@ -404,6 +413,11 @@ class Node:
         # then skips every metric/ring/trace touch and stays byte-identical)
         self.telemetry = telemetry
         self.system.telemetry = telemetry
+        # per-peer wire-format negotiation state (pass a pinned
+        # WireState to simulate e.g. a JSON-only legacy node)
+        self.wire = wire or wirefmt.WireState(node_id=node_id)
+        if not self.wire.node_id:
+            self.wire.node_id = node_id
         self._peer_lost_watchers: List[Callable[[str], None]] = []
         transport.on_peer_lost = self._peer_lost
         transport.start(node_id, self._deliver)
@@ -419,6 +433,10 @@ class Node:
         self._peer_lost_watchers.append(cb)
 
     def _peer_lost(self, peer_node_id: str) -> None:
+        # the peer's next incarnation may have different capabilities:
+        # drop its negotiated format so contact restarts from the JSON
+        # fallback and a fresh Hello
+        self.wire.forget(peer_node_id)
         for cb in list(self._peer_lost_watchers):
             try:
                 cb(peer_node_id)
@@ -428,23 +446,55 @@ class Node:
     def spawn(self, actor, **kw):
         return self.system.spawn(actor, **kw)
 
-    # -- routing ------------------------------------------------------------
-    def route(self, target: str, msg, sender: Optional[str] = None) -> None:
-        name, node_id = split_addr(target)
-        if node_id is None:
-            self.system.send(name, msg, sender=sender)
-            return
-        if sender is not None and "@" not in sender:
-            sender = make_addr(sender, self.node_id)
+    # -- wire-format negotiation --------------------------------------------
+    def _tx_format(self, node_id: str) -> wirefmt.WireFormat:
+        """The frame format for one destination node: our own best
+        format for loopback (we know our capabilities), the negotiated
+        one — JSON until the handshake settles — for a remote peer.
+        First contact with a remote peer also fires the Hello."""
+        if node_id == self.node_id:
+            return self.wire.local_format()
+        if self.wire.mark_hello(node_id):
+            if not self._send_control(node_id, self.wire.make_hello()):
+                # peer unreachable (e.g. not yet registered with the
+                # transport): retry the handshake on a later send
+                self.wire.unmark_hello(node_id)
+        return self.wire.tx_format(node_id)
+
+    def _send_control(self, node_id: str, msg) -> bool:
+        """Move a Hello/HelloAck to ``node_id`` — always legacy JSON so
+        any peer can parse it; best-effort (False = not delivered).
+        Telemetry counts it only after a successful send, preserving the
+        fleet-wide sent==recv symmetry per tag."""
+        data = codec.envelope_to_wire(
+            wirefmt.CONTROL_ACTOR,
+            make_addr(wirefmt.CONTROL_ACTOR, self.node_id), msg)
+        try:
+            self.transport.send(node_id, data)
+        except TransportError:
+            return False
         tel = self.telemetry
-        if tel is None:
-            data = codec.envelope_to_wire(name, sender, msg)
-        else:
-            trace = tracing.current()
-            t0 = time.perf_counter()
-            data = codec.envelope_to_wire(name, sender, msg, trace=trace)
-            tel.on_send(codec.wire_tag_of(msg), node_id, len(data), trace,
-                        time.perf_counter() - t0)
+        if tel is not None:
+            tel.on_send(codec.wire_tag_of(msg), node_id, len(data), None,
+                        0.0, encoding=wirefmt.frame_label(data))
+        return True
+
+    def _handle_wire_control(self, msg, sender: Optional[str]) -> None:
+        peer = split_addr(sender)[1] if sender else None
+        if isinstance(msg, wirefmt.Hello):
+            ack = self.wire.on_hello(msg)
+            # if the ack cannot be delivered yet (TCP: the Hello beat
+            # the peer's registration, so we have no endpoint for it),
+            # the peer simply keeps sending us JSON until our own
+            # outbound Hello reaches it — negotiation still converges
+            if peer is not None:
+                self._send_control(peer, ack)
+        elif isinstance(msg, wirefmt.HelloAck):
+            self.wire.on_ack(msg)
+
+    # -- routing ------------------------------------------------------------
+    def _send_frame(self, node_id: str, target: str, msg,
+                    sender: Optional[str], data: bytes) -> None:
         if node_id == self.node_id:
             self._deliver(data)        # loopback: still crosses the codec
             return
@@ -453,8 +503,62 @@ class Node:
         except TransportError:
             with self.system._lock:
                 self.system.dead_letters.append(Envelope(sender, msg))
+            if self.telemetry is not None:
+                self.telemetry.on_dead_letter(target, msg)
+
+    def route(self, target: str, msg, sender: Optional[str] = None) -> None:
+        name, node_id = split_addr(target)
+        if node_id is None:
+            self.system.send(name, msg, sender=sender)
+            return
+        if sender is not None and "@" not in sender:
+            sender = make_addr(sender, self.node_id)
+        fmt = self._tx_format(node_id)
+        tel = self.telemetry
+        if tel is None:
+            data = codec.envelope_to_wire(name, sender, msg, fmt=fmt)
+        else:
+            trace = tracing.current()
+            t0 = time.perf_counter()
+            data = codec.envelope_to_wire(name, sender, msg, trace=trace,
+                                          fmt=fmt)
+            tel.on_send(codec.wire_tag_of(msg), node_id, len(data), trace,
+                        time.perf_counter() - t0,
+                        encoding=wirefmt.frame_label(data))
+        self._send_frame(node_id, target, msg, sender, data)
+
+    def route_batch(self, targets: List[str],
+                    msg, sender: Optional[str] = None) -> None:
+        """Fan one message out to many targets, encoding the heavy
+        payload once per distinct wire format instead of once per
+        target (``wirefmt.BatchEncoder``): the module-broadcast path of
+        a sharded deploy ships its source once per shard leg. Semantics
+        match ``route`` called per target."""
+        if sender is not None and "@" not in sender:
+            sender = make_addr(sender, self.node_id)
+        tel = self.telemetry
+        trace = tracing.current() if tel is not None else None
+        msg_dict = codec.message_to_wire_dict(msg)
+        tag = msg_dict["type"]
+        extra = trace.to_wire_fields() if trace is not None else None
+        encoders: Dict[wirefmt.WireFormat, wirefmt.BatchEncoder] = {}
+        for target in targets:
+            name, node_id = split_addr(target)
+            if node_id is None:
+                self.system.send(name, msg, sender=sender)
+                continue
+            fmt = self._tx_format(node_id)
+            t0 = time.perf_counter()
+            enc = encoders.get(fmt)
+            if enc is None:   # first target of this format pays the body
+                enc = wirefmt.BatchEncoder(msg_dict, fmt, extra)
+                encoders[fmt] = enc
+            data = enc.frame(name, sender)
             if tel is not None:
-                tel.on_dead_letter(target, msg)
+                tel.on_send(tag, node_id, len(data), trace,
+                            time.perf_counter() - t0,
+                            encoding=wirefmt.frame_label(data))
+            self._send_frame(node_id, target, msg, sender, data)
 
     def _deliver(self, data: bytes) -> None:
         tel = self.telemetry
@@ -467,7 +571,8 @@ class Node:
                 to, sender, msg, trace = codec.envelope_from_wire_traced(data)
                 tel.on_recv(codec.wire_tag_of(msg),
                             split_addr(sender)[1] if sender else None,
-                            len(data), trace, time.perf_counter() - t0)
+                            len(data), trace, time.perf_counter() - t0,
+                            encoding=wirefmt.frame_label(data))
         except Exception:  # noqa: BLE001 - a poisoned frame must not kill
             # the transport's reader thread (and with it every frame
             # queued behind this one): dead-letter the raw bytes instead
@@ -475,6 +580,9 @@ class Node:
                 self.system.dead_letters.append(Envelope(None, data))
             if tel is not None:
                 tel.on_poison_frame(len(data))
+            return
+        if to == wirefmt.CONTROL_ACTOR:
+            self._handle_wire_control(msg, sender)
             return
         self.system.send(to, msg, sender=sender, trace=trace)
 

@@ -1,0 +1,514 @@
+"""Wire-format subsystem: binary frames, negotiation, compression.
+
+Sits between the message registry (``core/codec.py``) and the byte-moving
+transports (``core/transport.py``). Three concerns, each negotiated
+per peer connection and each falling back to the PR-1 JSON wire format
+so old and new nodes always interoperate:
+
+* **Binary frame encoding** — numeric payloads travel as dtype + shape +
+  raw little-endian bytes instead of decimal text, with a msgpack map
+  framing the surrounding envelope. A 10 MB float32 weight vector ships
+  as ~10 MB instead of tens of MB of JSON, and its dtype/shape survive
+  the round trip exactly (the lossy ``tolist()`` lowering is now the
+  JSON-fallback special case). Gated on the ``msgpack`` package: a node
+  without it simply never advertises ``"binary"``.
+* **Per-connection handshake** — ``Hello``/``HelloAck`` wire messages
+  advertise the protocol version plus the encodings/compressions a node
+  can *decode*. Until a peer's capabilities are known, every frame to it
+  is plain JSON (the mandatory fallback); after the handshake each
+  direction independently settles on the best common encoding. A version
+  skew rejects cleanly: both sides stay on JSON, nothing crashes.
+* **Per-frame compression** — frames whose heavy part exceeds a size
+  threshold are compressed with zstd when both ends have it, else zlib
+  (always available). Compression is a per-frame flag, so small frames
+  pay nothing.
+
+Frame layout (see docs/protocol.md for the normative spec)::
+
+    legacy JSON          {"data": ..., "sender": ..., "to": ..., "type": ...}
+    framed               0x9E | flags | header | body
+      flags              low nibble = encoding (0 json, 1 binary)
+                         high nibble = compression (0 none, 1 zlib, 2 zstd)
+      binary             header = msgpack map {to, sender, type, trace...}
+                         body   = [compressed] msgpack of the "data" value
+      json+compressed    header empty, body = compressed legacy JSON bytes
+
+A legacy frame starts with ``{`` (0x7B) and 0x9E is not a valid UTF-8
+first byte, so decode is self-describing with a one-byte peek — a
+receiver needs no negotiation state, which is what lets negotiation be
+sender-side only and lossy-handshake safe.
+"""
+from __future__ import annotations
+
+import os
+import threading
+import zlib
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core import codec
+
+try:
+    import msgpack
+except ImportError:                       # pragma: no cover - env without it
+    msgpack = None  # type: ignore[assignment]
+
+try:
+    import zstandard as _zstd
+except ImportError:                       # zstd is optional by design
+    _zstd = None  # type: ignore[assignment]
+
+
+# ---------------------------------------------------------------------------
+# Constants
+# ---------------------------------------------------------------------------
+
+#: Protocol version carried in every Hello/HelloAck. Compatibility rule:
+#: exact match, else the pair stays on the JSON fallback.
+WIRE_VERSION = 1
+
+#: First byte of every non-legacy frame (invalid as a UTF-8 first byte,
+#: so it can never collide with the legacy JSON encoding's ``{``).
+MAGIC = 0x9E
+_MAGIC_BYTES = bytes([MAGIC])
+
+ENC_JSON = "json"
+ENC_BINARY = "binary"
+_ENC_IDS = {ENC_JSON: 0, ENC_BINARY: 1}
+_ENC_NAMES = {v: k for k, v in _ENC_IDS.items()}
+
+COMP_ZLIB = "zlib"
+COMP_ZSTD = "zstd"
+_COMP_IDS = {COMP_ZLIB: 1, COMP_ZSTD: 2}
+_COMP_NAMES = {v: k for k, v in _COMP_IDS.items()}
+
+#: Frames whose heavy part is below this never pay the compressor.
+DEFAULT_COMPRESS_THRESHOLD = 4096
+
+_ZLIB_LEVEL = 3          # fast; ratio on numeric payloads within 5% of -9
+
+#: Pseudo-actor name Hello/HelloAck envelopes are addressed to; the Node
+#: intercepts them in ``_deliver`` before actor dispatch.
+CONTROL_ACTOR = "_wirefmt"
+
+# msgpack ExtType codes for numpy/JAX values
+_EXT_NDARRAY = 1
+_EXT_SCALAR = 2
+
+
+class WireDecodeError(ValueError):
+    """A framed envelope could not be decoded (bad flags, missing
+    codec library, truncated body) — poison-frame path, not a crash."""
+
+
+def supported_encodings() -> Tuple[str, ...]:
+    """Encodings this process can encode *and* decode, best first."""
+    if msgpack is not None:
+        return (ENC_BINARY, ENC_JSON)
+    return (ENC_JSON,)
+
+
+def supported_compressions() -> Tuple[str, ...]:
+    """Compressions this process can apply/undo, best first."""
+    if _zstd is not None:
+        return (COMP_ZSTD, COMP_ZLIB)
+    return (COMP_ZLIB,)
+
+
+# ---------------------------------------------------------------------------
+# numpy / JAX <-> msgpack
+# ---------------------------------------------------------------------------
+
+
+def _pack_array(a: np.ndarray) -> bytes:
+    """dtype + shape + raw little-endian bytes, framed as one msgpack
+    triple. ``dtype.str`` keeps the byte order explicit ('<f4')."""
+    a = np.ascontiguousarray(a)
+    if a.dtype.byteorder == ">":
+        a = a.astype(a.dtype.newbyteorder("<"))
+    return msgpack.packb([a.dtype.str, list(a.shape), a.tobytes()],
+                         use_bin_type=True)
+
+
+def _msgpack_default(o: Any):
+    if isinstance(o, np.ndarray):
+        return msgpack.ExtType(_EXT_NDARRAY, _pack_array(o))
+    if isinstance(o, np.generic):
+        return msgpack.ExtType(_EXT_SCALAR, _pack_array(np.asarray(o)))
+    if hasattr(o, "__array__") and hasattr(o, "dtype"):   # jax.Array
+        a = np.asarray(o)
+        ext = _EXT_NDARRAY if a.ndim else _EXT_SCALAR
+        return msgpack.ExtType(ext, _pack_array(a))
+    if hasattr(o, "item"):
+        return o.item()
+    if hasattr(o, "tolist"):
+        return o.tolist()
+    raise TypeError(f"not wire-serializable: {type(o)!r}")
+
+
+def _ext_hook(code: int, data: bytes):
+    if code in (_EXT_NDARRAY, _EXT_SCALAR):
+        dtype_str, shape, raw = msgpack.unpackb(data, raw=False)
+        a = np.frombuffer(raw, dtype=np.dtype(dtype_str)).reshape(shape)
+        if code == _EXT_SCALAR:
+            return a.reshape(())[()]      # numpy scalar, dtype intact
+        return a.copy()                   # writable, owns its memory
+    return msgpack.ExtType(code, data)
+
+
+# ---------------------------------------------------------------------------
+# Compression
+# ---------------------------------------------------------------------------
+
+
+def _compress(comp: str, data: bytes) -> bytes:
+    if comp == COMP_ZSTD and _zstd is not None:
+        return _zstd.ZstdCompressor().compress(data)
+    return zlib.compress(data, _ZLIB_LEVEL)
+
+
+def _decompress(comp_id: int, data: bytes) -> bytes:
+    if comp_id == 0:
+        return data
+    name = _COMP_NAMES.get(comp_id)
+    if name == COMP_ZLIB:
+        return zlib.decompress(data)
+    if name == COMP_ZSTD:
+        if _zstd is None:
+            raise WireDecodeError("zstd frame received but zstandard "
+                                  "is not installed")
+        return _zstd.ZstdDecompressor().decompress(data)
+    raise WireDecodeError(f"unknown compression id {comp_id}")
+
+
+# ---------------------------------------------------------------------------
+# Negotiated per-peer format
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class WireFormat:
+    """What a sender applies to frames for one peer: the encoding, the
+    compression (None = never compress), and the size threshold below
+    which compression is skipped."""
+    encoding: str = ENC_JSON
+    compression: Optional[str] = None
+    compress_threshold: int = DEFAULT_COMPRESS_THRESHOLD
+
+
+#: The mandatory fallback: what every sender uses for a peer whose
+#: capabilities are unknown (pre-handshake, version skew, old node).
+JSON_FORMAT = WireFormat()
+
+
+# ---------------------------------------------------------------------------
+# Frame encode / decode
+# ---------------------------------------------------------------------------
+
+
+def _pack_body(data_obj: Any, fmt: WireFormat) -> Tuple[int, bytes]:
+    """The heavy part of a binary frame: msgpack of the envelope's
+    ``data`` value, compressed above the threshold. Returns (flags, body)."""
+    body = msgpack.packb(data_obj, use_bin_type=True,
+                         default=_msgpack_default)
+    comp_id = 0
+    if (fmt.compression is not None
+            and len(body) >= fmt.compress_threshold):
+        squeezed = _compress(fmt.compression, body)
+        if len(squeezed) < len(body):     # incompressible data ships raw
+            body = squeezed
+            comp_id = _COMP_IDS[fmt.compression]
+    return _ENC_IDS[ENC_BINARY] | (comp_id << 4), body
+
+
+def _pack_header(header: Dict[str, Any]) -> bytes:
+    return msgpack.packb(header, use_bin_type=True)
+
+
+def encode_envelope(d: Dict[str, Any], fmt: Optional[WireFormat]) -> bytes:
+    """Encode a full envelope dict (to/sender/type/data [+ trace keys])
+    under ``fmt``. ``None`` (or plain JSON with no compression) yields
+    bytes identical to the legacy JSON wire format."""
+    if fmt is None:
+        fmt = JSON_FORMAT
+    if fmt.encoding == ENC_BINARY and msgpack is not None:
+        header = {k: v for k, v in d.items() if k != "data"}
+        flags, body = _pack_body(d.get("data"), fmt)
+        return _MAGIC_BYTES + bytes([flags]) + _pack_header(header) + body
+    raw = codec.to_wire(d)
+    if (fmt.compression is not None
+            and len(raw) >= fmt.compress_threshold):
+        squeezed = _compress(fmt.compression, raw)
+        if len(squeezed) < len(raw):
+            flags = _ENC_IDS[ENC_JSON] | (_COMP_IDS[fmt.compression] << 4)
+            return _MAGIC_BYTES + bytes([flags]) + squeezed
+    return raw
+
+
+def decode_envelope(data: bytes) -> Dict[str, Any]:
+    """Decode any frame — legacy JSON or framed — into the envelope
+    dict. Self-describing: no negotiation state consulted."""
+    if not data or data[0] != MAGIC:
+        return codec.from_wire(data)
+    if len(data) < 2:
+        raise WireDecodeError("truncated frame: magic byte only")
+    flags = data[1]
+    enc_id, comp_id = flags & 0x0F, (flags >> 4) & 0x0F
+    if enc_id == _ENC_IDS[ENC_JSON]:
+        return codec.from_wire(_decompress(comp_id, data[2:]))
+    if enc_id != _ENC_IDS[ENC_BINARY]:
+        raise WireDecodeError(f"unknown encoding id {enc_id}")
+    if msgpack is None:
+        raise WireDecodeError("binary frame received but msgpack is "
+                              "not installed")
+    u = msgpack.Unpacker(raw=False, strict_map_key=False)
+    u.feed(data[2:])
+    header = u.unpack()
+    if not isinstance(header, dict):
+        raise WireDecodeError("binary frame header is not a map")
+    body = _decompress(comp_id, data[2 + u.tell():])
+    header["data"] = msgpack.unpackb(body, raw=False,
+                                     strict_map_key=False,
+                                     ext_hook=_ext_hook)
+    return header
+
+
+def peek_tag(data: bytes) -> str:
+    """The envelope's message tag without a full decode ('?' if opaque)
+    — what the fault harness keys its rules on."""
+    try:
+        if not data or data[0] != MAGIC:
+            return codec.from_wire(data).get("type", "?")
+        flags = data[1]
+        enc_id, comp_id = flags & 0x0F, (flags >> 4) & 0x0F
+        if enc_id == _ENC_IDS[ENC_JSON]:
+            return codec.from_wire(
+                _decompress(comp_id, data[2:])).get("type", "?")
+        u = msgpack.Unpacker(raw=False, strict_map_key=False)
+        u.feed(data[2:])
+        return u.unpack().get("type", "?")
+    except Exception:  # noqa: BLE001 - non-envelope bytes
+        return "?"
+
+
+def frame_label(data: bytes) -> str:
+    """Telemetry label for a frame: 'json', 'binary', 'binary+zlib', ...
+    (encoding plus the compression actually applied to *this* frame)."""
+    if not data or data[0] != MAGIC:
+        return ENC_JSON
+    enc = _ENC_NAMES.get(data[1] & 0x0F, "?")
+    comp = _COMP_NAMES.get((data[1] >> 4) & 0x0F)
+    return f"{enc}+{comp}" if comp else enc
+
+
+class BatchEncoder:
+    """Encode one message for fan-out to many targets: the heavy body is
+    packed (and compressed) once; only the small routing header is
+    re-packed per target. The module-broadcast path in the sharded
+    deploy uses this so a leg's module source is encoded once per leg,
+    not once per client. JSON-format peers get a plain per-target
+    encode — correctness first, the fast path is the negotiated one."""
+
+    def __init__(self, msg_dict: Dict[str, Any], fmt: Optional[WireFormat],
+                 extra_fields: Optional[Dict[str, Any]] = None):
+        self._fmt = fmt or JSON_FORMAT
+        self._extra = dict(extra_fields or {})
+        self._type = msg_dict["type"]
+        self._data = msg_dict["data"]
+        self._binary = (self._fmt.encoding == ENC_BINARY
+                        and msgpack is not None)
+        if self._binary:
+            flags, body = _pack_body(self._data, self._fmt)
+            self._prefix = _MAGIC_BYTES + bytes([flags])
+            self._body = body
+
+    def frame(self, to: str, sender: Optional[str]) -> bytes:
+        if self._binary:
+            header = {"type": self._type, "to": to, "sender": sender}
+            header.update(self._extra)
+            return self._prefix + _pack_header(header) + self._body
+        d = {"type": self._type, "data": self._data,
+             "to": to, "sender": sender}
+        d.update(self._extra)
+        return encode_envelope(d, self._fmt)
+
+
+# ---------------------------------------------------------------------------
+# Handshake messages
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Hello:
+    """First contact: what the sending node can decode, plus its
+    protocol version. Always sent as legacy JSON so any peer —
+    including one that predates this message — can parse or cleanly
+    reject it."""
+    node_id: str
+    version: int
+    encodings: Tuple[str, ...]
+    compressions: Tuple[str, ...]
+
+    def to_wire_dict(self) -> Dict[str, Any]:
+        return {"node_id": self.node_id, "version": self.version,
+                "encodings": list(self.encodings),
+                "compressions": list(self.compressions)}
+
+    @staticmethod
+    def from_wire_dict(d: Dict[str, Any]) -> "Hello":
+        return Hello(d["node_id"], int(d["version"]),
+                     tuple(d["encodings"]), tuple(d["compressions"]))
+
+
+@dataclass(frozen=True)
+class HelloAck:
+    """The answer to a Hello: the acker's own decode capabilities (so
+    one round trip negotiates both directions) and whether the versions
+    are compatible. ``accepted=False`` pins the pair to JSON."""
+    node_id: str
+    version: int
+    encodings: Tuple[str, ...]
+    compressions: Tuple[str, ...]
+    accepted: bool = True
+
+    def to_wire_dict(self) -> Dict[str, Any]:
+        return {"node_id": self.node_id, "version": self.version,
+                "encodings": list(self.encodings),
+                "compressions": list(self.compressions),
+                "accepted": self.accepted}
+
+    @staticmethod
+    def from_wire_dict(d: Dict[str, Any]) -> "HelloAck":
+        return HelloAck(d["node_id"], int(d["version"]),
+                        tuple(d["encodings"]), tuple(d["compressions"]),
+                        bool(d.get("accepted", True)))
+
+
+codec.register_message("hello", Hello)
+codec.register_message("hello_ack", HelloAck)
+
+
+# ---------------------------------------------------------------------------
+# Per-node negotiation state
+# ---------------------------------------------------------------------------
+
+
+def choose_format(tx_encodings: Tuple[str, ...],
+                  tx_compressions: Tuple[str, ...],
+                  rx_encodings: Tuple[str, ...],
+                  rx_compressions: Tuple[str, ...],
+                  threshold: int = DEFAULT_COMPRESS_THRESHOLD
+                  ) -> WireFormat:
+    """Best common format: binary beats JSON, zstd beats zlib beats
+    nothing; JSON with no compression is always in both sets by the
+    mandatory-fallback rule."""
+    enc = (ENC_BINARY if (ENC_BINARY in tx_encodings
+                          and ENC_BINARY in rx_encodings) else ENC_JSON)
+    comp = next((c for c in (COMP_ZSTD, COMP_ZLIB)
+                 if c in tx_compressions and c in rx_compressions), None)
+    return WireFormat(enc, comp, threshold)
+
+
+@dataclass
+class WireState:
+    """One node's negotiation table: its own capabilities plus the
+    per-peer formats settled so far. Unknown peers get ``JSON_FORMAT``.
+
+    Env knobs (read at construction): ``REPRO_WIRE_ENCODING=json`` pins
+    the node to the legacy format — it advertises and sends only plain
+    JSON, simulating an old node. ``REPRO_WIRE_COMPRESS_THRESHOLD``
+    overrides the per-frame compression threshold (bytes).
+    """
+    node_id: str = ""
+    encodings: Optional[Tuple[str, ...]] = None
+    compressions: Optional[Tuple[str, ...]] = None
+    compress_threshold: Optional[int] = None
+    version: int = WIRE_VERSION
+    _formats: Dict[str, WireFormat] = field(default_factory=dict)
+    _hello_marked: set = field(default_factory=set)
+    _lock: threading.Lock = field(default_factory=threading.Lock)
+
+    def __post_init__(self) -> None:
+        pin = os.environ.get("REPRO_WIRE_ENCODING", "").strip().lower()
+        if self.encodings is None:
+            self.encodings = ((ENC_JSON,) if pin == ENC_JSON
+                              else supported_encodings())
+        else:
+            self.encodings = tuple(self.encodings)
+        if self.compressions is None:
+            self.compressions = (() if pin == ENC_JSON
+                                 else supported_compressions())
+        else:
+            self.compressions = tuple(self.compressions)
+        if self.compress_threshold is None:
+            env = os.environ.get("REPRO_WIRE_COMPRESS_THRESHOLD", "")
+            self.compress_threshold = (int(env) if env.isdigit()
+                                       else DEFAULT_COMPRESS_THRESHOLD)
+        # loopback self-sends skip the handshake: we know our own caps
+        self._local = choose_format(self.encodings, self.compressions,
+                                    self.encodings, self.compressions,
+                                    self.compress_threshold)
+
+    # -- sender side --------------------------------------------------------
+    def local_format(self) -> WireFormat:
+        return self._local
+
+    def tx_format(self, peer: str) -> WireFormat:
+        with self._lock:
+            return self._formats.get(peer, JSON_FORMAT)
+
+    def negotiated(self, peer: str) -> Optional[WireFormat]:
+        """The settled format for ``peer``, None while pre-handshake."""
+        with self._lock:
+            return self._formats.get(peer)
+
+    def mark_hello(self, peer: str) -> bool:
+        """True exactly once per peer: the caller should send a Hello."""
+        with self._lock:
+            if peer in self._hello_marked:
+                return False
+            self._hello_marked.add(peer)
+            return True
+
+    def unmark_hello(self, peer: str) -> None:
+        """A Hello/HelloAck could not be delivered: allow a retry on the
+        next send to that peer."""
+        with self._lock:
+            self._hello_marked.discard(peer)
+
+    def make_hello(self) -> Hello:
+        return Hello(self.node_id, self.version,
+                     self.encodings, self.compressions)
+
+    # -- receiver side ------------------------------------------------------
+    def on_hello(self, hello: Hello) -> HelloAck:
+        """Record the peer's capabilities, settle our tx format for it,
+        and build the ack advertising our own capabilities back."""
+        compatible = hello.version == self.version
+        fmt = (choose_format(self.encodings, self.compressions,
+                             hello.encodings, hello.compressions,
+                             self.compress_threshold)
+               if compatible else JSON_FORMAT)
+        with self._lock:
+            self._formats[hello.node_id] = fmt
+        return HelloAck(self.node_id, self.version,
+                        self.encodings, self.compressions,
+                        accepted=compatible)
+
+    def on_ack(self, ack: HelloAck) -> None:
+        ok = ack.accepted and ack.version == self.version
+        fmt = (choose_format(self.encodings, self.compressions,
+                             ack.encodings, ack.compressions,
+                             self.compress_threshold)
+               if ok else JSON_FORMAT)
+        with self._lock:
+            self._formats[ack.node_id] = fmt
+
+    def forget(self, peer: str) -> None:
+        """Peer gone (eviction/failover): drop its format so a restarted
+        incarnation re-negotiates from the JSON fallback."""
+        with self._lock:
+            self._formats.pop(peer, None)
+            self._hello_marked.discard(peer)

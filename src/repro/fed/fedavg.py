@@ -128,24 +128,91 @@ class FederatedSession:
         else:
             w_out = default_client_update(w_in, xs, ys)
             md5 = "builtin:client_update"
+        comp = task.params.get("compression")
+        payload = (self._compress_payload(
+                       app, w_out, comp,
+                       float(task.params.get("compression_frac", 0.25)))
+                   if comp else w_out.tolist())
         return TaggedResult(app.client_id, task.iteration, md5,
-                            payload=w_out.tolist(),
+                            payload=payload,
                             compute_ms=(time.perf_counter() - t0) * 1e3)
+
+    @staticmethod
+    def _compress_payload(app: ClientApp, w_out: np.ndarray, comp: str,
+                          frac: float) -> Dict[str, Any]:
+        """Semantic (lossy) compression of the round payload via
+        ``optim/compression.py``, with per-client error feedback: the
+        residual (w - decode(encode(w))) is kept in ``app.fed_state``
+        and added back next round — the standard convergence fix for
+        biased compressors. Composes with frame compression: the
+        payload dicts below ride the negotiated binary+zlib/zstd wire."""
+        from repro.optim import compression as C
+        r = app.fed_state.get("residual")
+        gf = w_out + (r if r is not None else 0.0)
+        if comp in ("int8", "int8_ef"):
+            q, scale = C.int8_encode(gf)
+            q, scale = np.asarray(q), float(scale)
+            payload = {"kind": "int8_ef", "q": q, "scale": scale}
+            # residual against what the cloud will actually reconstruct
+            app.fed_state["residual"] = \
+                gf - FederatedSession.decode_payload(payload)
+            return payload
+        if comp in ("topk", "topk_ef"):
+            kept = np.asarray(C.topk_mask(gf, frac), dtype=np.float64)
+            app.fed_state["residual"] = gf - kept
+            idx = np.nonzero(kept)[0].astype(np.int32)
+            return {"kind": "topk_ef", "dim": int(gf.shape[0]),
+                    "idx": idx, "val": kept[idx].astype(np.float32)}
+        raise ValueError(f"unknown weight compression {comp!r}; "
+                         f"use 'int8_ef' or 'topk_ef'")
+
+    @staticmethod
+    def decode_payload(p: Any) -> np.ndarray:
+        """Inverse of ``_compress_payload`` (identity for plain lists)."""
+        if isinstance(p, dict):
+            kind = p.get("kind")
+            if kind == "int8_ef":
+                return np.asarray(p["q"], dtype=np.float64) * float(p["scale"])
+            if kind == "topk_ef":
+                w = np.zeros(int(p["dim"]))
+                idx = np.asarray(p["idx"], dtype=np.int64)
+                w[idx] = np.asarray(p["val"], dtype=np.float64)
+                return w
+            raise ValueError(f"unknown payload kind {kind!r}")
+        return np.asarray(p, dtype=np.float64)
 
     # -- round loop ----------------------------------------------------------
     def run_rounds(self, frontend, n_rounds: int,
-                   client_ids: Sequence[str] = ()) -> np.ndarray:
+                   client_ids: Sequence[str] = (), *,
+                   compression: Optional[str] = None,
+                   compression_frac: float = 0.25) -> np.ndarray:
         """Each round is one assignment driven through its handle; the
         per-round handle is the same control surface every other
-        submission path uses (cancel/status/typed events included)."""
+        submission path uses (cancel/status/typed events included).
+
+        ``compression`` turns on semantic weight-payload compression on
+        the clients (``"int8_ef"`` or ``"topk_ef"`` with keep-fraction
+        ``compression_frac``, both error-feedback corrected across
+        rounds); the compressed payloads are decoded here before
+        aggregation."""
         for r in range(n_rounds):
+            params: Dict[str, Any] = {"weights": self.w.tolist(),
+                                      "n_values": 64,
+                                      "code_user": self.user_id}
+            if compression is not None:
+                params["compression"] = compression
+                params["compression_frac"] = compression_frac
             handle = frontend.submit_analytics(
                 "federated_round", iterations=1, client_ids=client_ids,
-                params={"weights": self.w.tolist(), "n_values": 64,
-                        "code_user": self.user_id})
+                params=params)
             results, done = handle.result(timeout=30.0)
             (it,) = results
-            stacked = np.asarray(it.value)   # aggregated by cloud slot
+            vals = it.value
+            if (isinstance(vals, list) and vals
+                    and isinstance(vals[0], dict)):
+                stacked = np.stack([self.decode_payload(p) for p in vals])
+            else:
+                stacked = np.asarray(vals)   # aggregated by cloud slot
             if stacked.ndim == 2:            # raw per-client list: aggregate
                 agg = self.fleet.cloud_app.registry.resolve(
                     self.user_id, "fed_aggregate")
@@ -159,5 +226,6 @@ class FederatedSession:
                 "winning_md5": it.winning_md5,
                 "n_accepted": it.n_accepted,
                 "n_dropped": it.n_dropped,
+                "compression": compression,
             })
         return self.w

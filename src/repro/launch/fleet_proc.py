@@ -26,10 +26,21 @@ from __future__ import annotations
 
 import argparse
 import multiprocessing as mp
+import os
 import sys
 import threading
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Sequence
+
+
+def _env_json_clients() -> tuple:
+    """Client ids pinned to legacy JSON framing via the
+    ``REPRO_WIRE_JSON_CLIENTS`` env knob (comma-separated, e.g.
+    ``REPRO_WIRE_JSON_CLIENTS=c000``). Read in the *parent* so only the
+    named children are pinned — unlike ``REPRO_WIRE_ENCODING=json``,
+    which children inherit and which would pin the whole fleet."""
+    raw = os.environ.get("REPRO_WIRE_JSON_CLIENTS", "")
+    return tuple(c.strip() for c in raw.split(",") if c.strip())
 
 # ---------------------------------------------------------------------------
 # Child process entry points
@@ -43,6 +54,7 @@ def _client_main(cfg: Dict[str, Any]) -> None:
     StopNode."""
     import numpy as np
 
+    from repro.core import wirefmt
     from repro.core.fleet import ClientApp, ClientNode
     from repro.core.registry import ActiveCodeRegistry
     from repro.core.telemetry import NodeTelemetry
@@ -56,7 +68,12 @@ def _client_main(cfg: Dict[str, Any]) -> None:
     transport = TcpTransport()
     tel = (NodeTelemetry(cfg["node_id"])
            if cfg.get("telemetry", True) else None)
-    node = Node(cfg["node_id"], transport, telemetry=tel)
+    # a JSON-pinned client advertises nothing but the mandatory fallback,
+    # so the handshake settles every conversation with it on legacy JSON
+    wire = (wirefmt.WireState(node_id=cfg["node_id"],
+                              encodings=("json",), compressions=())
+            if cfg.get("wire_json_only") else None)
+    node = Node(cfg["node_id"], transport, telemetry=tel, wire=wire)
     transport.add_peer(cfg["cloud_node_id"], cfg["cloud_endpoint"])
 
     stop = threading.Event()
@@ -136,9 +153,16 @@ def spawn_tcp_fleet(n_clients: int, *, shards: int = 1, seed: int = 0,
                     shard_eviction_timeout_s: Optional[float] = None,
                     rehome_grace_s: float = 2.0,
                     ready_timeout_s: float = 120.0,
-                    telemetry: bool = True):
+                    telemetry: bool = True,
+                    json_clients: Sequence[str] = ()):
     """Build a ``Fleet`` whose client nodes — and, for ``shards > 1``,
     whose CloudNode shards — are child processes on TCP.
+
+    ``json_clients`` (default: the ``REPRO_WIRE_JSON_CLIENTS`` env knob)
+    names client ids pinned to legacy JSON framing — they advertise only
+    the mandatory fallback in the wire-format handshake, so the rest of
+    the fleet can negotiate binary while these peers stay readable by
+    down-rev tooling (the mixed-encoding compatibility scenario).
 
     Blocks until every shard has completed the ``RegisterShard``
     handshake and every client the ``RegisterClient`` handshake
@@ -152,6 +176,7 @@ def spawn_tcp_fleet(n_clients: int, *, shards: int = 1, seed: int = 0,
     from repro.core.transport import Node, TcpTransport
 
     policy = policy or QuorumPolicy()
+    json_pinned = frozenset(json_clients or _env_json_clients())
     ctx = mp.get_context("spawn")
 
     def make_tel(node_id: str):
@@ -241,6 +266,7 @@ def spawn_tcp_fleet(n_clients: int, *, shards: int = 1, seed: int = 0,
             "heartbeat_interval_s": heartbeat_interval_s,
             "heartbeat_miss_limit": heartbeat_miss_limit,
             "telemetry": telemetry,
+            "wire_json_only": cid in json_pinned,
         }
         p = ctx.Process(target=_client_main, args=(cfg,), daemon=True,
                         name=f"fleet-client-{cid}")
@@ -375,23 +401,31 @@ def run_shard_failover_smoke(n_clients: int = 6, shards: int = 3,
 
 
 def run_smoke(n_clients: int = 3, iterations: int = 3, shards: int = 1,
-              churn: bool = False, verbose: bool = True) -> int:
+              churn: bool = False, verbose: bool = True,
+              json_clients: Sequence[str] = ()) -> int:
     """One full active-code round over spawned processes; with ``churn``
     a client process is killed mid-run and the fleet must evict it,
-    complete the round, and redeploy to the survivors. Returns 0 on
-    success (the CI smoke contract)."""
+    complete the round, and redeploy to the survivors. ``json_clients``
+    (or ``REPRO_WIRE_JSON_CLIENTS``) pins the named clients to legacy
+    JSON framing and the smoke additionally verifies the fleet really
+    ran mixed-encoding: the rest spoke binary while the pinned peers
+    never saw a binary frame. Returns 0 on success (the CI smoke
+    contract)."""
     from repro.core.assignment import Status
 
     def say(msg: str) -> None:
         if verbose:
             print(f"[fleet_proc] {msg}", flush=True)
 
+    pinned = tuple(json_clients) or _env_json_clients()
     hb, evict = (0.25, 1.5) if churn else (None, None)
     fleet = spawn_tcp_fleet(n_clients, shards=shards,
                             heartbeat_interval_s=hb,
-                            eviction_timeout_s=evict)
+                            eviction_timeout_s=evict,
+                            json_clients=pinned)
     say(f"{n_clients} client processes registered"
-        + (f" across {shards} shard processes" if shards > 1 else ""))
+        + (f" across {shards} shard processes" if shards > 1 else "")
+        + (f"; {', '.join(pinned)} pinned to JSON framing" if pinned else ""))
     try:
         fe = fleet.frontend("ci")
         v1 = fe.deploy_code("smoke_mean", _V1)
@@ -441,6 +475,26 @@ def run_smoke(n_clients: int = 3, iterations: int = 3, shards: int = 1,
         assert results[0].winning_md5 == v1.md5, \
             "post-rollback iteration did not run v1"
         assert results[0].n_accepted == survivors
+        if pinned and fleet.telemetry and not churn:
+            # the whole round must have been genuinely mixed-encoding:
+            # somebody un-pinned spoke binary, and the pinned peers'
+            # frame counters show JSON only (negotiation never escalated
+            # a conversation with them past the mandatory fallback)
+            metrics = fleet.metrics(timeout=30.0)
+            binary_tx = {n for n, t in metrics.items()
+                         if any(k.startswith("frames_out.binary")
+                                for k in t)}
+            assert binary_tx - set(pinned), \
+                "no node sent binary frames; the fleet was not mixed"
+            for cid in pinned:
+                tbl = metrics.get(cid, {})
+                leaked = [k for k in tbl
+                          if k.startswith(("frames_in.binary",
+                                           "frames_out.binary"))]
+                assert not leaked, \
+                    f"JSON-pinned {cid} saw binary frames: {leaked}"
+            say(f"mixed encoding verified: {sorted(binary_tx)} spoke "
+                f"binary, {', '.join(pinned)} stayed JSON end to end")
         say("redeploy + rollback verified across processes: PASS")
         return 0
     finally:
@@ -541,6 +595,11 @@ def main(argv: Optional[list] = None) -> int:
     ap.add_argument("--metrics-dump", action="store_true",
                     help="print the fleet-wide per-node metrics tables "
                          "after one deploy + analytics round")
+    ap.add_argument("--pin-json", action="append", default=[],
+                    metavar="CLIENT_ID",
+                    help="pin a client to legacy JSON framing (repeatable; "
+                         "also settable via REPRO_WIRE_JSON_CLIENTS) and "
+                         "verify the round ran mixed-encoding")
     args = ap.parse_args(argv)
     if args.shard_churn:
         return run_shard_failover_smoke(args.clients, shards=args.shards)
@@ -550,7 +609,7 @@ def main(argv: Optional[list] = None) -> int:
             iterations=args.iterations,
             trace_dump=args.trace_dump, metrics_dump=args.metrics_dump)
     return run_smoke(args.clients, args.iterations, shards=args.shards,
-                     churn=args.churn)
+                     churn=args.churn, json_clients=args.pin_json)
 
 
 if __name__ == "__main__":

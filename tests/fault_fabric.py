@@ -23,21 +23,20 @@ schedule. Every decision is appended to ``plan.log`` for assertions.
 """
 from __future__ import annotations
 
-import json
 import random
 import threading
 from dataclasses import dataclass
 from typing import Callable, List, Optional, Set, Tuple
 
+from repro.core import wirefmt
 from repro.core.transport import Transport
 
 
 def frame_tag(data: bytes) -> str:
-    """The codec message tag of an encoded envelope ('?' if opaque)."""
-    try:
-        return json.loads(data.decode("utf-8")).get("type", "?")
-    except Exception:  # noqa: BLE001 - non-envelope bytes
-        return "?"
+    """The codec message tag of an encoded envelope ('?' if opaque) —
+    works for legacy JSON and binary/compressed frames alike, because
+    ``wirefmt`` keeps the tag in the uncompressed frame header."""
+    return wirefmt.peek_tag(data)
 
 
 @dataclass

@@ -1,6 +1,7 @@
 """The message-type registry: every fleet message that crosses a node
 boundary round-trips through bytes, unknown/unregistered types fail
-loudly, and numpy payloads are lowered to plain JSON types in transit."""
+loudly, and numpy payloads keep their dtype/shape in transit (tagged
+``__nd__``/``__np__`` dicts in the JSON fallback encoding)."""
 import dataclasses
 
 import numpy as np
@@ -24,6 +25,7 @@ from repro.core.fleet import (
     Evicted,
     Heartbeat,
     HeartbeatAck,
+    InstallModule,
     NewTask,
     RegisterAck,
     RegisterClient,
@@ -35,6 +37,7 @@ from repro.core.fleet import (
 )
 from repro.core.module import ActiveModule
 from repro.core.telemetry import TelemetryPull, TelemetrySnapshot
+from repro.core.wirefmt import Hello, HelloAck
 
 SOURCE = "def run(xs):\n    return 1.0\n"
 
@@ -63,6 +66,10 @@ def _examples():
         "submit_assignment": SubmitAssignment(code_spec, "sink.asg-1@user"),
         "cancel_assignment": CancelAssignment("asg-000042"),
         "new_task": NewTask(_task(code_spec), "cloud.asg1@cloud"),
+        "install_module": InstallModule(code_spec, 0, "cloud.asg1@cloud"),
+        "hello": Hello("c000", 1, ("binary", "json"), ("zstd", "zlib")),
+        "hello_ack": HelloAck("cloud", 1, ("binary", "json"), ("zlib",),
+                              accepted=True),
         "task_done": TaskDone(_task(), TaggedResult("c000", 2, "ff" * 16,
                                                     payload=[1.0, 2.5],
                                                     compute_ms=0.7)),
@@ -132,21 +139,44 @@ def test_round_trip_preserves_nested_module():
     assert back.spec.target is Target.CLIENTS
 
 
-def test_numpy_payloads_lower_to_json_types():
+def test_numpy_payloads_keep_dtype_through_json_fallback():
+    """The JSON fallback used to lower arrays to ``tolist()`` — dtype
+    destroyed in transit. Payloads now travel as tagged ``__nd__`` /
+    ``__np__`` dicts, so an ``np.float32`` array comes back as an
+    ``np.float32`` array even on the legacy encoding."""
     res = TaggedResult("c000", 0, "aa" * 16,
-                       payload=np.arange(4, dtype=np.float64),
+                       payload=np.arange(4, dtype=np.float32),
                        compute_ms=np.float32(1.5))
     back = codec.message_from_wire(codec.message_to_wire(
         TaskDone(_task(), res)))
-    assert back.result.payload == [0.0, 1.0, 2.0, 3.0]
-    assert isinstance(back.result.payload, list)
+    assert isinstance(back.result.payload, np.ndarray)
+    assert back.result.payload.dtype == np.float32
+    np.testing.assert_array_equal(back.result.payload,
+                                  [0.0, 1.0, 2.0, 3.0])
+    # compute_ms is a declared float field: from_wire_dict coerces it
+    assert isinstance(back.result.compute_ms, float)
     assert back.result.compute_ms == pytest.approx(1.5)
 
-    scalar = dataclasses.replace(res, payload=np.float64(2.25))
+    scalar = dataclasses.replace(res, payload=np.float32(2.25))
     back = codec.message_from_wire(codec.message_to_wire(
         TaskDone(_task(), scalar)))
     assert back.result.payload == 2.25
+    assert isinstance(back.result.payload, np.float32)
+
+    # np.float64 subclasses Python float: json serializes it natively,
+    # bit-identical — it comes back a plain float, losing nothing
+    f64 = dataclasses.replace(res, payload=np.float64(2.25))
+    back = codec.message_from_wire(codec.message_to_wire(
+        TaskDone(_task(), f64)))
+    assert back.result.payload == 2.25
     assert isinstance(back.result.payload, float)
+
+    shaped = dataclasses.replace(
+        res, payload=np.zeros((2, 0, 3), dtype=np.int16), compute_ms=0.1)
+    back = codec.message_from_wire(codec.message_to_wire(
+        TaskDone(_task(), shaped)))
+    assert back.result.payload.shape == (2, 0, 3)
+    assert back.result.payload.dtype == np.int16
 
 
 def test_unknown_wire_type_raises():

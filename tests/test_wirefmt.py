@@ -1,0 +1,464 @@
+"""The wire-format subsystem: golden vectors for both encodings, the
+per-peer Hello/HelloAck negotiation matrix (binary↔binary,
+binary↔json-only, version skew), compression-threshold boundaries,
+dtype/shape round-trip fidelity, and negotiated delivery over real
+node pairs (in-proc and TCP, including a JSON-pinned peer)."""
+import queue
+import time
+from dataclasses import dataclass
+from typing import Any, Dict
+
+import numpy as np
+import pytest
+
+from repro.core import codec, wirefmt
+from repro.core.actors import Actor
+from repro.core.fleet import Deadline
+from repro.core.transport import InProcHub, InProcTransport, Node, TcpTransport
+from repro.core.wirefmt import (
+    DEFAULT_COMPRESS_THRESHOLD,
+    ENC_BINARY,
+    ENC_JSON,
+    JSON_FORMAT,
+    MAGIC,
+    WIRE_VERSION,
+    Hello,
+    HelloAck,
+    WireFormat,
+    WireState,
+    choose_format,
+)
+
+from test_codec import _examples  # one example message per registered tag
+
+BINARY = WireFormat(ENC_BINARY, None)
+BINARY_ZLIB = WireFormat(ENC_BINARY, "zlib")
+
+
+@dataclass(frozen=True)
+class Blob:
+    arr: Any
+
+    def to_wire_dict(self) -> Dict[str, Any]:
+        return {"arr": self.arr}
+
+    @staticmethod
+    def from_wire_dict(d: Dict[str, Any]) -> "Blob":
+        return Blob(d["arr"])
+
+
+codec.register_message("test_blob", Blob)
+
+
+class Collector(Actor):
+    def __init__(self, name):
+        super().__init__(name)
+        self.got: "queue.Queue[Any]" = queue.Queue()
+
+    def handle(self, sender, msg):
+        self.got.put((sender, msg))
+
+
+# ---------------------------------------------------------------------------
+# Golden vectors
+# ---------------------------------------------------------------------------
+
+# Deadline(3) to "cloud" from "timer@n1": the frozen bytes of both
+# encodings. If either of these assertions ever breaks, the wire format
+# changed incompatibly — bump WIRE_VERSION and document the new layout.
+GOLDEN_JSON = (b'{"data": {"iteration": 3}, "sender": "timer@n1", '
+               b'"to": "cloud", "type": "deadline"}')
+GOLDEN_BINARY = bytes.fromhex(
+    "9e0183a474797065a8646561646c696e65a2746fa5636c6f7564a673656e646572"
+    "a874696d6572406e3181a9697465726174696f6e03")
+
+
+def test_golden_json_vector():
+    assert codec.envelope_to_wire("cloud", "timer@n1", Deadline(3)) \
+        == GOLDEN_JSON
+    # fmt=None and the explicit JSON fallback format are byte-identical
+    assert codec.envelope_to_wire("cloud", "timer@n1", Deadline(3),
+                                  fmt=JSON_FORMAT) == GOLDEN_JSON
+
+
+def test_golden_binary_vector():
+    data = codec.envelope_to_wire("cloud", "timer@n1", Deadline(3),
+                                  fmt=BINARY)
+    assert data == GOLDEN_BINARY
+    assert data[0] == MAGIC
+    to, sender, msg = codec.envelope_from_wire(data)
+    assert (to, sender, msg) == ("cloud", "timer@n1", Deadline(3))
+
+
+@pytest.mark.parametrize("tag", sorted(_examples()))
+@pytest.mark.parametrize("fmt", [None, BINARY, BINARY_ZLIB],
+                         ids=["json", "binary", "binary+zlib"])
+def test_every_registered_tag_round_trips_in_every_encoding(tag, fmt):
+    msg = _examples()[tag]
+    data = codec.envelope_to_wire("dest", "src@n1", msg, fmt=fmt)
+    assert wirefmt.peek_tag(data) == tag
+    to, sender, back = codec.envelope_from_wire(data)
+    assert (to, sender) == ("dest", "src@n1")
+    assert type(back) is type(msg)
+    assert back == msg
+
+
+def test_json_frames_have_no_magic_and_binary_frames_do():
+    for tag, msg in _examples().items():
+        j = codec.envelope_to_wire("a", None, msg)
+        b = codec.envelope_to_wire("a", None, msg, fmt=BINARY)
+        assert j[0] != MAGIC and j[:1] == b"{"
+        assert b[0] == MAGIC
+        assert wirefmt.frame_label(j) == "json"
+        assert wirefmt.frame_label(b) == "binary"
+
+
+def test_peek_tag_tolerates_garbage():
+    assert wirefmt.peek_tag(b"not json at all") == "?"
+    assert wirefmt.peek_tag(bytes([MAGIC])) == "?"
+    assert wirefmt.peek_tag(bytes([MAGIC, 0x0F, 1, 2, 3])) == "?"
+    assert wirefmt.peek_tag(b"") == "?"
+
+
+# ---------------------------------------------------------------------------
+# dtype/shape round-trip fidelity
+# ---------------------------------------------------------------------------
+
+DTYPES = ["float32", "float64", "int8", "int16", "int32", "int64",
+          "uint8", "uint32", "bool"]
+SHAPES = [(0,), (1,), (7,), (2, 3), (2, 0, 3), (1, 1, 4), (3, 2, 2)]
+
+
+@pytest.mark.parametrize("fmt", [None, BINARY, BINARY_ZLIB],
+                         ids=["json", "binary", "binary+zlib"])
+def test_array_dtype_and_shape_survive_both_encodings(fmt):
+    rng = np.random.default_rng(7)
+    for dt in DTYPES:
+        for shape in SHAPES:
+            if dt == "bool":
+                a = rng.integers(0, 2, size=shape).astype(bool)
+            elif dt.startswith(("int", "uint")):
+                a = rng.integers(0, 100, size=shape).astype(dt)
+            else:
+                a = rng.normal(size=shape).astype(dt)
+            data = codec.envelope_to_wire("x", None, Blob(a), fmt=fmt)
+            _, _, back = codec.envelope_from_wire(data)
+            assert isinstance(back.arr, np.ndarray), (dt, shape, fmt)
+            assert back.arr.dtype == np.dtype(dt), (dt, shape, fmt)
+            assert back.arr.shape == shape, (dt, shape, fmt)
+            np.testing.assert_array_equal(back.arr, a)
+
+
+@pytest.mark.parametrize("fmt", [None, BINARY],
+                         ids=["json", "binary"])
+def test_numpy_scalars_survive_both_encodings(fmt):
+    for val in (np.float32(1.5), np.int16(-7), np.uint8(255)):
+        data = codec.envelope_to_wire("x", None, Blob(val), fmt=fmt)
+        _, _, back = codec.envelope_from_wire(data)
+        assert back.arr == val
+        assert np.asarray(back.arr).dtype == val.dtype
+
+
+def test_jax_arrays_survive_binary_encoding():
+    jnp = pytest.importorskip("jax.numpy")
+    a = jnp.arange(6, dtype=jnp.float32).reshape(2, 3)
+    data = codec.envelope_to_wire("x", None, Blob(a), fmt=BINARY)
+    _, _, back = codec.envelope_from_wire(data)
+    assert isinstance(back.arr, np.ndarray)
+    assert back.arr.dtype == np.float32 and back.arr.shape == (2, 3)
+    np.testing.assert_array_equal(back.arr, np.asarray(a))
+
+
+def test_nested_containers_round_trip_binary():
+    payload = {"w": np.arange(4, dtype=np.float32), "meta": {"k": 2},
+               "mixed": [1, "two", None, True, 2.5]}
+    data = codec.envelope_to_wire("x", None, Blob(payload), fmt=BINARY)
+    _, _, back = codec.envelope_from_wire(data)
+    np.testing.assert_array_equal(back.arr["w"], payload["w"])
+    assert back.arr["w"].dtype == np.float32
+    assert back.arr["meta"] == {"k": 2}
+    assert back.arr["mixed"] == [1, "two", None, True, 2.5]
+
+
+# ---------------------------------------------------------------------------
+# Compression thresholds
+# ---------------------------------------------------------------------------
+
+
+def _frame(nbytes: int, fmt: WireFormat) -> bytes:
+    return codec.envelope_to_wire(
+        "x", None, Blob(np.zeros(nbytes // 8, dtype=np.float64)), fmt=fmt)
+
+
+def test_small_frames_skip_compression():
+    fmt = WireFormat(ENC_BINARY, "zlib", compress_threshold=10_000)
+    data = _frame(1024, fmt)
+    assert wirefmt.frame_label(data) == "binary"
+    _, _, back = codec.envelope_from_wire(data)
+    assert back.arr.shape == (128,)
+
+
+def test_frames_at_threshold_compress():
+    # body >= threshold: threshold 64 guarantees a 64 KB body crosses it
+    fmt = WireFormat(ENC_BINARY, "zlib", compress_threshold=64)
+    data = _frame(65_536, fmt)
+    assert wirefmt.frame_label(data) == "binary+zlib"
+    assert len(data) < 65_536 // 4   # zeros compress hard
+    _, _, back = codec.envelope_from_wire(data)
+    assert back.arr.shape == (8192,)
+    assert back.arr.dtype == np.float64
+
+
+def test_incompressible_bodies_ship_raw():
+    rng = np.random.default_rng(0)
+    noise = rng.integers(0, 256, size=100_000, dtype=np.uint8)
+    fmt = WireFormat(ENC_BINARY, "zlib", compress_threshold=64)
+    data = codec.envelope_to_wire("x", None, Blob(noise), fmt=fmt)
+    # random bytes do not shrink: the raw body is kept, flags say so
+    assert wirefmt.frame_label(data) == "binary"
+    _, _, back = codec.envelope_from_wire(data)
+    np.testing.assert_array_equal(back.arr, noise)
+
+
+def test_compressed_json_fallback_round_trips():
+    fmt = WireFormat(ENC_JSON, "zlib", compress_threshold=64)
+    msg = Blob(list(range(2000)))
+    data = codec.envelope_to_wire("x", "s@n", msg, fmt=fmt)
+    assert data[0] == MAGIC
+    assert wirefmt.frame_label(data) == "json+zlib"
+    assert wirefmt.peek_tag(data) == "test_blob"
+    to, sender, back = codec.envelope_from_wire(data)
+    assert (to, sender, back) == ("x", "s@n", msg)
+
+
+# ---------------------------------------------------------------------------
+# Negotiation matrix
+# ---------------------------------------------------------------------------
+
+
+def _state(node_id: str, encodings=None, compressions=None,
+           version: int = WIRE_VERSION) -> WireState:
+    return WireState(node_id=node_id, encodings=encodings,
+                     compressions=compressions, version=version)
+
+
+def _handshake(a: WireState, b: WireState) -> None:
+    """One full exchange: a's Hello reaches b, b's ack reaches a."""
+    a.on_ack(b.on_hello(a.make_hello()))
+
+
+def test_negotiation_binary_both_sides():
+    a = _state("a", ("binary", "json"), ("zlib",))
+    b = _state("b", ("binary", "json"), ("zlib",))
+    assert a.tx_format("b") == JSON_FORMAT   # pre-handshake: mandatory
+    _handshake(a, b)
+    assert a.tx_format("b").encoding == ENC_BINARY
+    assert a.tx_format("b").compression == "zlib"
+    assert b.tx_format("a").encoding == ENC_BINARY
+
+
+def test_negotiation_binary_vs_json_only_falls_back():
+    a = _state("a", ("binary", "json"), ("zlib",))
+    b = _state("b", ("json",), ())           # a legacy/pinned node
+    _handshake(a, b)
+    assert a.tx_format("b") == JSON_FORMAT
+    # the json-only node may of course still *send* json
+    assert b.tx_format("a").encoding == ENC_JSON
+    assert b.tx_format("a").compression is None
+
+
+def test_negotiation_version_skew_rejects_cleanly():
+    a = _state("a", ("binary", "json"), ("zlib",))
+    b = _state("b", ("binary", "json"), ("zlib",), version=WIRE_VERSION + 1)
+    ack = b.on_hello(a.make_hello())
+    assert ack.accepted is False
+    a.on_ack(ack)
+    assert a.tx_format("b") == JSON_FORMAT   # both directions stay JSON
+    assert b.tx_format("a") == JSON_FORMAT
+
+
+def test_negotiation_zstd_preferred_when_both_have_it():
+    a = _state("a", ("binary", "json"), ("zstd", "zlib"))
+    b = _state("b", ("binary", "json"), ("zstd", "zlib"))
+    _handshake(a, b)
+    assert a.tx_format("b").compression == "zstd"
+    # asymmetric: one side without zstd settles on zlib
+    c = _state("c", ("binary", "json"), ("zlib",))
+    _handshake(a, c)
+    assert a.tx_format("c").compression == "zlib"
+
+
+def test_choose_format_prefers_best_common():
+    f = choose_format(("binary", "json"), ("zstd", "zlib"),
+                      ("json",), ("zlib",))
+    assert f.encoding == ENC_JSON and f.compression == "zlib"
+
+
+def test_hello_marked_once_and_reset_on_forget():
+    a = _state("a")
+    assert a.mark_hello("b") is True
+    assert a.mark_hello("b") is False
+    a.forget("b")
+    assert a.mark_hello("b") is True
+    a.unmark_hello("b")
+    assert a.mark_hello("b") is True
+
+
+def test_json_pin_env_knob(monkeypatch):
+    monkeypatch.setenv("REPRO_WIRE_ENCODING", "json")
+    s = WireState(node_id="old")
+    assert s.encodings == ("json",)
+    assert s.compressions == ()
+    assert s.local_format() == JSON_FORMAT
+
+
+def test_compress_threshold_env_knob(monkeypatch):
+    monkeypatch.setenv("REPRO_WIRE_COMPRESS_THRESHOLD", "123")
+    s = WireState(node_id="n")
+    assert s.compress_threshold == 123
+
+
+# ---------------------------------------------------------------------------
+# Negotiated delivery over real nodes
+# ---------------------------------------------------------------------------
+
+
+def _await(cond, timeout=5.0, what=""):
+    deadline = time.time() + timeout
+    while time.time() < deadline:
+        if cond():
+            return
+        time.sleep(0.01)
+    raise AssertionError(f"timed out waiting for {what or cond}")
+
+
+def test_inproc_nodes_negotiate_binary_and_deliver_arrays():
+    hub = InProcHub()
+    n1 = Node("n1", InProcTransport(hub))
+    n2 = Node("n2", InProcTransport(hub))
+    try:
+        sink = Collector("sink")
+        n2.spawn(sink)
+        a = np.arange(12, dtype=np.float32).reshape(3, 4)
+        n1.route("sink@n2", Blob(a), sender="src")    # JSON + fires Hello
+        _, first = sink.got.get(timeout=5.0)
+        assert first.arr.dtype == np.float32          # fallback is faithful
+        _await(lambda: n1.wire.negotiated("n2") is not None,
+               what="hello/ack settle")
+        assert n1.wire.negotiated("n2").encoding == ENC_BINARY
+        n1.route("sink@n2", Blob(a), sender="src")    # now binary
+        _, second = sink.got.get(timeout=5.0)
+        assert second.arr.dtype == np.float32
+        assert second.arr.shape == (3, 4)
+        np.testing.assert_array_equal(second.arr, a)
+    finally:
+        n1.close()
+        n2.close()
+
+
+def test_inproc_mixed_pair_stays_on_json():
+    hub = InProcHub()
+    n1 = Node("n1", InProcTransport(hub))
+    n2 = Node("n2", InProcTransport(hub),
+              wire=WireState(node_id="n2", encodings=("json",),
+                             compressions=()))
+    try:
+        sink = Collector("sink")
+        n2.spawn(sink)
+        n1.route("sink@n2", Deadline(1), sender="s")
+        sink.got.get(timeout=5.0)
+        _await(lambda: n1.wire.negotiated("n2") is not None,
+               what="hello/ack settle")
+        assert n1.wire.negotiated("n2") == JSON_FORMAT
+        n1.route("sink@n2", Deadline(2), sender="s")
+        sink.got.get(timeout=5.0)
+    finally:
+        n1.close()
+        n2.close()
+
+
+def test_loopback_uses_local_format():
+    hub = InProcHub()
+    n1 = Node("n1", InProcTransport(hub))
+    try:
+        sink = Collector("sink")
+        n1.spawn(sink)
+        a = np.arange(3, dtype=np.int16)
+        n1.route("sink@n1", Blob(a))      # self-send: no handshake needed
+        _, msg = sink.got.get(timeout=5.0)
+        assert msg.arr.dtype == np.int16
+        np.testing.assert_array_equal(msg.arr, a)
+    finally:
+        n1.close()
+
+
+def test_tcp_pair_negotiates_and_round_trips_large_array():
+    t1, t2 = TcpTransport(port=0), TcpTransport(port=0)
+    n1 = Node("n1", t1)
+    n2 = Node("n2", t2)
+    try:
+        t1.add_peer("n2", t2.endpoint)
+        t2.add_peer("n1", t1.endpoint)
+        sink = Collector("sink")
+        n2.spawn(sink)
+        big = np.random.default_rng(1).normal(
+            size=100_000).astype(np.float32)
+        n1.route("sink@n2", Blob(big), sender="s")
+        _, first = sink.got.get(timeout=10.0)
+        np.testing.assert_array_equal(first.arr, big)
+        _await(lambda: n1.wire.negotiated("n2") is not None,
+               timeout=10.0, what="tcp hello/ack settle")
+        fmt = n1.wire.negotiated("n2")
+        assert fmt.encoding == ENC_BINARY
+        n1.route("sink@n2", Blob(big), sender="s")
+        _, second = sink.got.get(timeout=10.0)
+        assert second.arr.dtype == np.float32
+        np.testing.assert_array_equal(second.arr, big)
+    finally:
+        n1.close()
+        n2.close()
+
+
+def test_batch_encoder_shares_body_across_targets():
+    msg = Blob(np.arange(1000, dtype=np.float64))
+    d = codec.message_to_wire_dict(msg)
+    enc = wirefmt.BatchEncoder(d, BINARY_ZLIB)
+    frames = [enc.frame(f"sink{i}", "src@n0") for i in range(4)]
+    for i, f in enumerate(frames):
+        got = wirefmt.decode_envelope(f)
+        assert got["to"] == f"sink{i}"
+        assert got["sender"] == "src@n0"
+        np.testing.assert_array_equal(got["data"]["arr"],
+                                      np.arange(1000, dtype=np.float64))
+    # per-target frames share the heavy body: they differ only by the
+    # small header, so the marginal cost of one more target is tiny
+    body = frames[0][-50:]
+    assert all(f[-50:] == body for f in frames)
+    # JSON-format peers fall back to a plain per-target encode
+    jenc = wirefmt.BatchEncoder(d, JSON_FORMAT)
+    jf = jenc.frame("sinkX", "src@n0")
+    to, sender, back = codec.envelope_from_wire(jf)
+    assert to == "sinkX"
+    np.testing.assert_array_equal(back.arr, msg.arr)
+
+
+def test_route_batch_delivers_to_every_target():
+    hub = InProcHub()
+    n0 = Node("n0", InProcTransport(hub))
+    nodes = [Node(f"n{i}", InProcTransport(hub)) for i in (1, 2, 3)]
+    try:
+        sinks = []
+        for node in nodes:
+            s = Collector("sink")
+            node.spawn(s)
+            sinks.append(s)
+        targets = [f"sink@n{i}" for i in (1, 2, 3)]
+        n0.route_batch(targets, Blob([1.0, 2.0]), sender="src")
+        for s in sinks:
+            sender, msg = s.got.get(timeout=5.0)
+            assert msg == Blob([1.0, 2.0])
+            assert sender == "src@n0"
+    finally:
+        n0.close()
+        for node in nodes:
+            node.close()
