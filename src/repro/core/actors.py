@@ -54,6 +54,7 @@ class Actor:
         self.name = name
         self._mailbox: "queue.Queue[Optional[Envelope]]" = queue.Queue()
         self._thread: Optional[threading.Thread] = None
+        self._done = threading.Event()   # set once the exit fan-out ran
         self._monitors: List[str] = []
         self._monitor_lock = threading.Lock()
         self._exited = False
@@ -69,9 +70,7 @@ class Actor:
     def _start(self, system: "ActorSystem") -> None:
         self._system = system
         self._alive = True
-        self._thread = threading.Thread(target=self._loop, name=self.name,
-                                        daemon=True)
-        self._thread.start()
+        system._dispatch(self)
 
     def _loop(self) -> None:
         try:
@@ -130,6 +129,10 @@ class Actor:
 
 
 class ActorSystem:
+    #: idle worker threads kept parked for reuse; beyond this a finished
+    #: worker exits instead of parking
+    max_idle_workers = 8
+
     def __init__(self) -> None:
         self._actors: Dict[str, Actor] = {}
         self._lock = threading.RLock()
@@ -137,6 +140,13 @@ class ActorSystem:
         self._supervised: Dict[str, Callable[[], Actor]] = {}
         self.max_restarts = 3
         self.dead_letters: List[Envelope] = []
+        # recycled worker threads: spawning an actor hands it to a parked
+        # worker (a queue put, ~50 us) instead of Thread.start(), which
+        # blocks until the new thread boots — milliseconds under GIL
+        # contention, and the deploy path spawns several actors in a row
+        self._idle: "queue.Queue[queue.Queue]" = queue.Queue()
+        self._pool_lock = threading.Lock()
+        self._pool_open = True
         # set by transport.Node when this system is bound to a node; a
         # bare ActorSystem (no node) is purely local, as before
         self.node: Optional[Any] = None
@@ -156,6 +166,54 @@ class ActorSystem:
         actor._spawn_trace = tracing.current()
         actor._start(self)
         return actor
+
+    # -- worker pool --------------------------------------------------------
+    def _dispatch(self, actor: Actor) -> None:
+        """Run the actor's loop on a recycled worker if one is parked,
+        else on a fresh thread."""
+        if self._pool_open:
+            try:
+                handoff = self._idle.get_nowait()
+            except queue.Empty:
+                pass
+            else:
+                handoff.put(actor)
+                return
+        t = threading.Thread(target=self._worker_main, args=(actor,),
+                             name=actor.name, daemon=True)
+        t.start()
+
+    def _worker_main(self, actor: Optional[Actor]) -> None:
+        handoff: "queue.Queue[Optional[Actor]]" = queue.Queue()
+        while True:
+            if actor is not None:
+                me = threading.current_thread()
+                me.name = actor.name
+                actor._thread = me
+                try:
+                    actor._loop()
+                finally:
+                    actor._done.set()
+            # park for the next actor — unless the pool is closing or
+            # already holds enough spares. The park happens under the
+            # pool lock so shutdown's drain can't miss a late parker.
+            with self._pool_lock:
+                if (not self._pool_open
+                        or self._idle.qsize() >= self.max_idle_workers):
+                    return
+                self._idle.put(handoff)
+            actor = handoff.get()   # next actor, or None to retire
+            if actor is None:
+                return
+
+    def prewarm_workers(self, n: int = 2) -> None:
+        """Park ``n`` idle workers ahead of demand, so the next spawns
+        are a queue handoff instead of a Thread.start() — the same move
+        as TCP connection pre-warming, one layer down."""
+        for _ in range(n):
+            t = threading.Thread(target=self._worker_main, args=(None,),
+                                 name="actor-worker", daemon=True)
+            t.start()
 
     def whereis(self, name: str) -> Optional[Actor]:
         with self._lock:
@@ -229,9 +287,18 @@ class ActorSystem:
             a.stop()
         deadline = time.time() + timeout
         for a in actors:
-            t = a._thread
-            if t is not None:
-                t.join(max(0.0, deadline - time.time()))
+            # workers are recycled across actors, so joining the thread
+            # would wait on the *pool*, not this actor's exit
+            a._done.wait(max(0.0, deadline - time.time()))
+        # retire parked workers (under the pool lock no worker can slip
+        # into the idle queue after this drain)
+        with self._pool_lock:
+            self._pool_open = False
+            while True:
+                try:
+                    self._idle.get_nowait().put(None)
+                except queue.Empty:
+                    break
 
 
 def call(system: ActorSystem, target: str, make_msg: Callable[[queue.Queue], Any],

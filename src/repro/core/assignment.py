@@ -265,6 +265,29 @@ class DoneEvent:
 
 AssignmentEvent = Union["IterationEvent", "DeployEvent", "DoneEvent"]
 
+
+@dataclass(frozen=True)
+class EventBatch:
+    """Several assignment events for one destination, coalesced into a
+    single envelope. Emitted by the router's ``ShardAggregator`` when
+    one inbound shard event unblocks multiple user-facing emissions
+    (a merged deploy plus the iterations it was holding back, or a tail
+    of buffered iterations plus the terminal done): one frame per
+    aggregator flush instead of one per event, so a k-shard fan-in does
+    not multiply the router->user frame count. Receivers unpack in
+    order, so batching is invisible to handle semantics."""
+
+    events: Tuple[AssignmentEvent, ...]
+
+    def to_wire_dict(self) -> Dict[str, Any]:
+        return {"events": [codec.message_to_wire_dict(e)
+                           for e in self.events]}
+
+    @staticmethod
+    def from_wire_dict(d: Dict[str, Any]) -> "EventBatch":
+        return EventBatch(tuple(codec.message_from_wire_dict(e)
+                                for e in d["events"]))
+
 EVENT_TYPES: Dict[str, Any] = {
     "iteration": IterationEvent,
     "deploy": DeployEvent,
@@ -342,3 +365,4 @@ class TaskSpec:
 codec.register_message("iteration", IterationEvent)
 codec.register_message("deploy", DeployEvent)
 codec.register_message("done", DoneEvent)
+codec.register_message("event_batch", EventBatch)

@@ -62,7 +62,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
-from repro.core import codec, tracing
+from repro.core import codec, timers, tracing
 from repro.core.actors import Actor, Down
 from repro.core.telemetry import (
     NodeTelemetry,
@@ -77,6 +77,7 @@ from repro.core.assignment import (
     AssignmentSpec,
     DeployEvent,
     DoneEvent,
+    EventBatch,
     IterationEvent,
     Status,
     Target,
@@ -203,6 +204,32 @@ class Deadline:
     @staticmethod
     def from_wire_dict(d: Dict[str, Any]) -> "Deadline":
         return Deadline(int(d["iteration"]))
+
+
+@dataclass(frozen=True)
+class EmitWindow:
+    """Flow control for one sharded leg: permission from the router's
+    aggregator to run leg-local iterations strictly below ``limit``.
+    Legs outrunning the merge frontier buy nothing — merged emission is
+    bounded by the slowest leg — while their tasks and commits steal
+    cycles from exactly the leg everyone is waiting on, so a leg that
+    is ``LEG_EMIT_WINDOW`` iterations ahead parks until the frontier
+    advances."""
+
+    assignment_id: str   # leg-qualified ("<asg>#<n>")
+    limit: int           # exclusive leg-local iteration bound
+
+    def to_wire_dict(self) -> Dict[str, Any]:
+        return {"assignment_id": self.assignment_id, "limit": self.limit}
+
+    @staticmethod
+    def from_wire_dict(d: Dict[str, Any]) -> "EmitWindow":
+        return EmitWindow(d["assignment_id"], int(d["limit"]))
+
+
+#: how many iterations a sharded leg may run past the aggregator's
+#: merge frontier before pausing for an EmitWindow grant
+LEG_EMIT_WINDOW = 1
 
 
 @dataclass(frozen=True)
@@ -361,6 +388,7 @@ codec.register_message("new_task", NewTask)
 codec.register_message("install_module", InstallModule)
 codec.register_message("task_done", TaskDone)
 codec.register_message("deadline", Deadline)
+codec.register_message("emit_window", EmitWindow)
 codec.register_message("register_client", RegisterClient)
 codec.register_message("register_ack", RegisterAck)
 codec.register_message("heartbeat", Heartbeat)
@@ -396,6 +424,14 @@ class _ShardBeatTick:
 class _PeerLost:
     """Transport connection-drop signal forwarded into an actor mailbox."""
     node_id: str
+
+
+@dataclass(frozen=True)
+class _HandlerDone:
+    """Local notice from an AssignmentHandler to its CloudNode that the
+    terminal DoneEvent went straight to the sink — the cloud closes its
+    books (sink table, latency metric) without relaying anything."""
+    assignment_id: str
 
 
 @dataclass(frozen=True)
@@ -438,64 +474,13 @@ class _RehomeTimeout:
     token: int
 
 
-class _AsyncSender:
-    """One lazily-started daemon worker that moves liveness traffic
-    (heartbeats, acks, eviction notices, re-registrations) off actor
-    threads. A TCP send to a dead peer blocks in reconnect backoff for
-    many seconds; that wait must stall at most this queue, never a
-    node's message loop. FIFO per owner, so e.g. a re-registration
-    enqueued before a heartbeat reaches the wire first. Accepts thunks
-    too (e.g. ``transport.forget_peer`` after an eviction notice), run
-    in queue order."""
-
-    def __init__(self, system, name: str):
-        self._system = system
-        self._name = name
-        self._q: "queue.Queue[Any]" = queue.Queue()
-        self._started = False
-        self._lock = threading.Lock()
-
-    def _ensure(self) -> None:
-        with self._lock:
-            if self._started:
-                return
-            self._started = True
-            t = threading.Thread(target=self._loop, name=self._name,
-                                 daemon=True)
-            t.start()
-
-    def send(self, target: str, msg: Any, sender: Optional[str] = None) -> None:
-        self._ensure()
-        # capture the enqueuing thread's trace context: the worker thread
-        # re-activates it around the send so off-thread liveness traffic
-        # stays causally linked to the message that triggered it
-        self._q.put((target, msg, sender, tracing.current()))
-
-    def call(self, fn: Callable[[], None]) -> None:
-        self._ensure()
-        self._q.put(fn)
-
-    def stop(self) -> None:
-        if self._started:
-            self._q.put(None)
-
-    def _loop(self) -> None:
-        while True:
-            item = self._q.get()
-            if item is None:
-                return
-            try:
-                if callable(item):
-                    item()
-                else:
-                    target, msg, sender, trace = item
-                    prev = tracing.set_current(trace)
-                    try:
-                        self._system.send(target, msg, sender=sender)
-                    finally:
-                        tracing.set_current(prev)
-            except Exception:  # noqa: BLE001 - best-effort traffic: a
-                pass           # failed liveness send is just a missed beat
+# NOTE: liveness and fan-out traffic used to travel through a per-actor
+# ``_AsyncSender`` worker so a dead peer's reconnect backoff could not
+# stall an actor's message loop. That primitive was promoted into the
+# transport itself: every remote frame now goes through the per-peer
+# outbound writer queues on ``Node`` (``transport.OutboundQueues``), so
+# plain ``Actor.send`` is already non-blocking, FIFO per destination,
+# and dead-letters undeliverable frames — actors just send.
 
 
 # ---------------------------------------------------------------------------
@@ -702,8 +687,9 @@ class ClientNode(Actor):
     with the new owning shard and a ``RegisterAck`` module catch-up.
     While unregistered, every tick re-sends ``RegisterClient``, so a
     registration lost in flight (router blip) self-heals. Heartbeats
-    and registrations travel via an ``_AsyncSender`` so a dead peer's
-    reconnect backoff can never stall the actor's message loop.
+    and registrations ride the node's per-peer outbound writer queues
+    like all remote traffic, so a dead peer's reconnect backoff can
+    never stall the actor's message loop.
     """
 
     def __init__(self, name: str, app: ClientApp,
@@ -720,9 +706,8 @@ class ClientNode(Actor):
         self.hb_interval = heartbeat_interval_s
         self.miss_limit = heartbeat_miss_limit
         self._cloud_addr: Optional[str] = None   # learned from RegisterAck
-        self._hb_timer: Optional[threading.Timer] = None
+        self._hb_timer: Optional[timers.TimerHandle] = None
         self._pending_beats = 0                  # heartbeats since last ack
-        self._async: Optional[_AsyncSender] = None
         self._task_seq = 0
 
     def _node_id(self) -> str:
@@ -732,16 +717,13 @@ class ClientNode(Actor):
         return self.app.client_id
 
     def _register(self) -> None:
-        if self.register_with and self._async is not None:
-            self._async.send(
-                self.register_with,
-                RegisterClient(self.app.client_id, self._node_id(),
-                               self.endpoint),
-                sender=self.name)
+        if self.register_with:
+            self.send(self.register_with,
+                      RegisterClient(self.app.client_id, self._node_id(),
+                                     self.endpoint))
 
     def on_start(self) -> None:
         assert self._system is not None
-        self._async = _AsyncSender(self._system, f"async:{self.name}")
         node = self._system.node
         if node is not None:
             node.watch_peer_lost(self._peer_lost)
@@ -762,12 +744,10 @@ class ClientNode(Actor):
         sys_ = self._system
         assert sys_ is not None
         # tick lands in our own mailbox, so liveness decisions run on the
-        # actor thread, not the timer thread
-        self._hb_timer = threading.Timer(
+        # actor thread, not the timer-wheel thread
+        self._hb_timer = timers.schedule(
             self.hb_interval,
             lambda: sys_.send(self.name, _HeartbeatTick()))
-        self._hb_timer.daemon = True
-        self._hb_timer.start()
 
     def _owner_lost(self, why: str) -> None:
         """The owning cloud/shard is presumed dead: forget it and rejoin
@@ -810,6 +790,11 @@ class ClientNode(Actor):
             if (msg.endpoint and cloud_node and sys_ is not None
                     and sys_.node is not None):
                 sys_.node.transport.add_peer(cloud_node, msg.endpoint)
+                # the ack names our owning shard — a node we may never
+                # have dialled (registration went through the router):
+                # warm the reverse connection now so the first task/
+                # deploy frame to travel client->shard pays no dial
+                sys_.node.prewarm_peer(cloud_node)
             self._cloud_addr = msg.cloud_addr
             self._pending_beats = 0
             for mod in msg.modules:       # catch up on missed deployments
@@ -835,11 +820,8 @@ class ClientNode(Actor):
                     if tel is not None:
                         tel.metrics.inc("heartbeat_misses")
                 self._pending_beats += 1
-                assert self._async is not None
-                self._async.send(
-                    self._cloud_addr,
-                    Heartbeat(self.app.client_id, self._node_id()),
-                    sender=self.name)
+                self.send(self._cloud_addr,
+                          Heartbeat(self.app.client_id, self._node_id()))
             self._schedule_heartbeat()
         elif isinstance(msg, _PeerLost):
             if (self._cloud_addr is not None
@@ -857,8 +839,6 @@ class ClientNode(Actor):
     def on_stop(self) -> None:
         if self._hb_timer is not None:
             self._hb_timer.cancel()
-        if self._async is not None:
-            self._async.stop()
 
 
 def _cloud_deploy_events(spec: AssignmentSpec) -> Tuple[DeployEvent,
@@ -880,19 +860,28 @@ class AssignmentHandler(Actor):
     def __init__(self, name: str, spec: AssignmentSpec,
                  client_nodes: Dict[str, str], cloud_app: CloudApp,
                  cloud: str, policy: QuorumPolicy,
-                 straggler_grace_s: float = 0.25):
+                 straggler_grace_s: float = 0.25,
+                 sink: Optional[str] = None):
         super().__init__(name)
         self.spec = spec
         self.client_nodes = client_nodes      # client_id -> actor name
         self.cloud_app = cloud_app
         self.cloud = cloud
+        self.sink = sink                      # user sink / aggregator addr
         self.policy = policy
         self.grace = straggler_grace_s
         self.iteration = 0
         self.collector: Optional[IterationCollector] = None
-        self._timer: Optional[threading.Timer] = None
+        self._timer: Optional[timers.TimerHandle] = None
         self._committed_iterations = 0
         self._cancelled = False
+        # sharded legs run under aggregator flow control: iterations may
+        # only start strictly below this leg-local bound, which the
+        # router's aggregator raises (EmitWindow) as its merge frontier
+        # advances. Flat assignments have no merge barrier to outrun.
+        self._window: Optional[int] = (
+            LEG_EMIT_WINDOW if spec.params.get("shard_report") else None)
+        self._paused = False
         self._current_targets: List[str] = []
         self._install_span: Optional[Any] = None
 
@@ -901,6 +890,22 @@ class AssignmentHandler(Actor):
         ids = self.spec.client_ids or tuple(self.client_nodes)
         return [c for c in ids if c in self.client_nodes]
 
+    def _emit(self, ev: AssignmentEvent) -> None:
+        """Ship one event toward the submitting handle. With a known
+        sink (user-side sink actor, or the router's aggregator for a
+        sharded leg) the event goes there *directly* — one hop instead
+        of relaying through the cloud actor, which under load is a
+        serialization point for every assignment on the node. The cloud
+        still learns about completion via a local ``_HandlerDone`` so
+        its sink table, latency metric, and admission queue stay exact.
+        Handlers spawned without a sink keep the legacy relay."""
+        if self.sink is None:
+            self.send(self.cloud, ev)
+            return
+        self.send(self.sink, ev)
+        if isinstance(ev, DoneEvent):
+            self.send(self.cloud, _HandlerDone(self.spec.assignment_id))
+
     def on_start(self) -> None:
         if (self.spec.kind == AssignmentKind.CODE_REPLACEMENT
                 and self.spec.target in (Target.CLOUD, Target.BOTH)):
@@ -908,7 +913,7 @@ class AssignmentHandler(Actor):
             self.cloud_app.install(self.spec.code)
             if self.spec.target == Target.CLOUD:
                 for ev in _cloud_deploy_events(self.spec):
-                    self.send(self.cloud, ev)
+                    self._emit(ev)
                 self.stop()
                 return
         if self.spec.kind == AssignmentKind.CODE_REPLACEMENT:
@@ -932,15 +937,15 @@ class AssignmentHandler(Actor):
                 # cloud node already recorded the module, so clients that
                 # join later catch up via RegisterAck
                 assert self.spec.code is not None
-                self.send(self.cloud, DeployEvent(
+                self._emit(DeployEvent(
                     self.spec.assignment_id, self.spec.code.slot,
                     self.spec.code.md5, self.spec.code.version,
                     self.spec.target, n_installed=0, n_targets=0))
-                self.send(self.cloud, DoneEvent(
+                self._emit(DoneEvent(
                     self.spec.assignment_id, Status.DONE,
                     detail=f"0/0 clients installed {self.spec.code.md5}"))
             else:
-                self.send(self.cloud, DoneEvent(
+                self._emit(DoneEvent(
                     self.spec.assignment_id, Status.FAILED,
                     detail="no clients"))
             self.stop()
@@ -976,10 +981,8 @@ class AssignmentHandler(Actor):
             # (loopback), the same discipline as every fabric message
             addr = (sys_.node.address(self.name) if sys_.node is not None
                     else self.name)
-            self._timer = threading.Timer(
+            self._timer = timers.schedule(
                 self.grace, lambda: sys_.send(addr, Deadline(it)))
-            self._timer.daemon = True
-            self._timer.start()
 
     def handle(self, sender, msg) -> None:
         if isinstance(msg, CancelAssignment):
@@ -991,7 +994,7 @@ class AssignmentHandler(Actor):
                 self._timer.cancel()
                 self._timer = None
             self.collector = None
-            self.send(self.cloud, DoneEvent(
+            self._emit(DoneEvent(
                 self.spec.assignment_id, Status.CANCELLED,
                 detail=f"cancelled during iteration {self.iteration} "
                        f"({self._committed_iterations} committed)"))
@@ -1013,6 +1016,14 @@ class AssignmentHandler(Actor):
         elif isinstance(msg, Deadline):
             if msg.iteration == self.iteration and self.collector is not None:
                 self._commit()
+        elif isinstance(msg, EmitWindow):
+            if self._window is not None and msg.limit > self._window:
+                self._window = msg.limit
+            if (self._paused and not self._cancelled
+                    and (self._window is None
+                         or self.iteration < self._window)):
+                self._paused = False
+                self._start_iteration()
         elif isinstance(msg, Evicted):
             self._client_departed(msg.client_id)
 
@@ -1029,7 +1040,7 @@ class AssignmentHandler(Actor):
         self._current_targets.remove(client_id)
         self.collector.n_clients -= 1
         if self.collector.n_clients <= 0:
-            self.send(self.cloud, DoneEvent(
+            self._emit(DoneEvent(
                 self.spec.assignment_id, Status.FAILED,
                 detail=f"all clients departed during iteration "
                        f"{self.iteration}"))
@@ -1062,12 +1073,12 @@ class AssignmentHandler(Actor):
                                                 self._install_span.ctx)
                 self._install_span.close()
                 self._install_span = None
-            self.send(self.cloud, DeployEvent(
+            self._emit(DeployEvent(
                 self.spec.assignment_id, self.spec.code.slot,
                 self.spec.code.md5, self.spec.code.version,
                 self.spec.target, n_installed=total if ok else 0,
                 n_targets=self.collector.n_clients))
-            self.send(self.cloud, DoneEvent(
+            self._emit(DoneEvent(
                 self.spec.assignment_id,
                 Status.DONE if done else Status.FAILED,
                 detail=f"{total}/{self.collector.n_clients} clients installed "
@@ -1098,7 +1109,7 @@ class AssignmentHandler(Actor):
                     self.collector.results)
             else:
                 value = self.cloud_app.aggregate(self.spec, outcome.accepted)
-            self.send(self.cloud, IterationEvent(
+            self._emit(IterationEvent(
                 assignment_id=self.spec.assignment_id,
                 iteration=self.iteration,
                 value=value,
@@ -1112,12 +1123,18 @@ class AssignmentHandler(Actor):
         self._committed_iterations += 1
         self.collector = None
         if self._committed_iterations >= self.spec.iterations:
-            self.send(self.cloud, DoneEvent(self.spec.assignment_id,
-                                            Status.DONE))
+            self._emit(DoneEvent(self.spec.assignment_id, Status.DONE))
             self.stop()
         else:
             self.iteration += 1
-            self._start_iteration()
+            if self._window is not None and self.iteration >= self._window:
+                # ahead of the merge frontier by a full window: park until
+                # the aggregator grants more (running on would only burn
+                # cycles the slowest leg needs, buffering unmergeable
+                # events at the router)
+                self._paused = True
+            else:
+                self._start_iteration()
 
     def on_stop(self) -> None:
         if self._timer is not None:
@@ -1174,9 +1191,8 @@ class CloudNode(Actor):
         self._shard_hb_interval = shard_heartbeat_interval_s
         self._sweep_interval = sweep_interval_s or (
             heartbeat_timeout_s / 4 if heartbeat_timeout_s else None)
-        self._sweep_timer: Optional[threading.Timer] = None
-        self._shard_hb_timer: Optional[threading.Timer] = None
-        self._async: Optional[_AsyncSender] = None
+        self._sweep_timer: Optional[timers.TimerHandle] = None
+        self._shard_hb_timer: Optional[timers.TimerHandle] = None
         self._last_seen: Dict[str, float] = {
             c: time.time() for c in self.client_nodes}
         self._deployed: Dict[Tuple[str, str], ActiveModule] = {}
@@ -1222,7 +1238,8 @@ class CloudNode(Actor):
             name, spec, dict(self.client_nodes), self.cloud_app, self.name,
             self.policy,
             straggler_grace_s=float(spec.params.get("straggler_grace_s",
-                                                    self.straggler_grace)))
+                                                    self.straggler_grace)),
+            sink=msg.reply_to)
         assert self._system is not None
         self._system.spawn(handler)
         self._system.monitor(self.name, name)
@@ -1238,7 +1255,6 @@ class CloudNode(Actor):
     # -- churn: heartbeats + eviction ---------------------------------------------
     def on_start(self) -> None:
         assert self._system is not None
-        self._async = _AsyncSender(self._system, f"async:{self.name}")
         self._schedule_sweep()
         self._schedule_shard_heartbeat()
 
@@ -1250,22 +1266,18 @@ class CloudNode(Actor):
             return
         sys_ = self._system
         assert sys_ is not None
-        self._shard_hb_timer = threading.Timer(
+        self._shard_hb_timer = timers.schedule(
             self._shard_hb_interval,
             lambda: sys_.send(self.name, _ShardBeatTick()))
-        self._shard_hb_timer.daemon = True
-        self._shard_hb_timer.start()
 
     def _schedule_sweep(self) -> None:
         if self._sweep_interval is None or self.heartbeat_timeout is None:
             return
         sys_ = self._system
         assert sys_ is not None
-        self._sweep_timer = threading.Timer(
+        self._sweep_timer = timers.schedule(
             self._sweep_interval,
             lambda: sys_.send(self.name, _EvictionTick()))
-        self._sweep_timer.daemon = True
-        self._sweep_timer.start()
 
     def _sweep(self) -> None:
         now = time.time()
@@ -1294,19 +1306,18 @@ class CloudNode(Actor):
             self.send(self.router_addr, ev)
         # the evictee is usually genuinely dead: forget its endpoint
         # *now* (cheap, non-blocking) so no send to it — including the
-        # notice below — can stall the async queue in reconnect backoff
-        # and starve the acks to live clients queued behind it. The
-        # notice is therefore best-effort over TCP (it dead-letters once
-        # the peer is forgotten); a live evictee still recovers via its
-        # own unacknowledged-heartbeat counting, which makes it
-        # re-register through the entry point.
+        # notice below — can park its outbound writer in reconnect
+        # backoff for nothing. The notice is therefore best-effort over
+        # TCP (it dead-letters once the peer is forgotten); a live
+        # evictee still recovers via its own unacknowledged-heartbeat
+        # counting, which makes it re-register through the entry point.
         sys_ = self._system
-        if sys_ is not None and self._async is not None:
+        if sys_ is not None:
             node = sys_.node
             peer = split_addr(addr)[1]
             if node is not None and peer and peer != node.node_id:
                 node.transport.forget_peer(peer)
-            self._async.send(addr, ev, sender=self.name)
+            self.send(addr, ev)
 
     # -- message loop -------------------------------------------------------------
     def handle(self, sender, msg) -> None:
@@ -1333,6 +1344,10 @@ class CloudNode(Actor):
                        else None)
             if msg.endpoint and my_node is not None:
                 my_node.transport.add_peer(msg.node_id, msg.endpoint)
+                # dial the reverse (shard->client) connection during the
+                # handshake, off-thread, so the first deploy fan-out to
+                # this client never pays TCP dial latency
+                my_node.prewarm_peer(msg.node_id)
             addr = make_addr(f"client.{msg.client_id}", msg.node_id)
             self.client_nodes[msg.client_id] = addr
             self._last_seen[msg.client_id] = time.time()
@@ -1349,31 +1364,25 @@ class CloudNode(Actor):
                 # acknowledge so the client can detect *our* death by
                 # counting unacknowledged beats (duplicate heartbeats
                 # just refresh the clock and draw extra acks — harmless)
-                if self._async is not None:
-                    self._async.send(self.client_nodes[msg.client_id],
-                                     HeartbeatAck(msg.client_id),
-                                     sender=self.name)
-            elif self._async is not None:
+                self.send(self.client_nodes[msg.client_id],
+                          HeartbeatAck(msg.client_id))
+            else:
                 # heartbeat from a client we evicted (or never knew):
                 # tell it to re-register
-                self._async.send(
-                    make_addr(f"client.{msg.client_id}", msg.node_id),
-                    Evicted(msg.client_id,
-                            "unknown to this cloud node; re-register"),
-                    sender=self.name)
+                self.send(make_addr(f"client.{msg.client_id}", msg.node_id),
+                          Evicted(msg.client_id,
+                                  "unknown to this cloud node; re-register"))
         elif isinstance(msg, _EvictionTick):
             self._sweep()
             self._schedule_sweep()
         elif isinstance(msg, _ShardBeatTick):
             sys_ = self._system
             node = sys_.node if sys_ is not None else None
-            if (self.router_addr is not None and self._async is not None
-                    and node is not None):
-                self._async.send(
-                    self.router_addr,
-                    ShardHeartbeat(node.node_id, node.address(self.name),
-                                   node.transport.endpoint),
-                    sender=self.name)
+            if self.router_addr is not None and node is not None:
+                self.send(self.router_addr,
+                          ShardHeartbeat(node.node_id,
+                                         node.address(self.name),
+                                         node.transport.endpoint))
             self._schedule_shard_heartbeat()
         elif isinstance(msg, TelemetryPull):
             # answer with our own snapshot, then relay the pull to every
@@ -1412,6 +1421,16 @@ class CloudNode(Actor):
                     self._emit(DoneEvent(msg.assignment_id, Status.CANCELLED,
                                          detail="cancelled while queued"))
                     break
+        elif isinstance(msg, _HandlerDone):
+            # the terminal DoneEvent went straight to the sink: close the
+            # books without re-emitting anything
+            self._user_sinks.pop(msg.assignment_id, None)
+            t0 = self._submitted_at.pop(msg.assignment_id, None)
+            if t0 is not None:
+                tel = _node_telemetry(self)
+                if tel is not None:
+                    tel.metrics.observe("assignment_latency_ms",
+                                        (time.time() - t0) * 1e3)
         elif isinstance(msg, (IterationEvent, DeployEvent, DoneEvent)):
             self._emit(msg)
         elif isinstance(msg, Down):
@@ -1430,8 +1449,6 @@ class CloudNode(Actor):
             self._sweep_timer.cancel()
         if self._shard_hb_timer is not None:
             self._shard_hb_timer.cancel()
-        if self._async is not None:
-            self._async.stop()
 
 
 # ---------------------------------------------------------------------------
@@ -1563,6 +1580,10 @@ class _AggLeg:
     delivered: int = 0                 # contiguous leg-local iterations seen
     deploy: Optional[DeployEvent] = None
     done: Optional[DoneEvent] = None
+    handler: Optional[str] = None      # leg handler addr (from its events)
+    # highest EmitWindow limit granted; handlers start with an implicit
+    # window of LEG_EMIT_WINDOW, so grants at or below it are never sent
+    window_sent: int = LEG_EMIT_WINDOW
 
 
 class ShardAggregator(Actor):
@@ -1613,8 +1634,30 @@ class ShardAggregator(Actor):
         self._barriers: Dict[str, int] = {}   # dead leg -> resume iteration
         self._merged_deploy: Optional[DeployEvent] = None
         self._next_emit = 0                   # next global iteration to emit
+        self._out: List[AssignmentEvent] = []  # emissions this handle() pass
 
     def handle(self, sender, msg) -> None:
+        # every emission a single inbound message unblocks is buffered in
+        # self._out and shipped once at the end of the pass: one shard
+        # event that releases a merged deploy + a run of iterations + a
+        # done costs the user leg ONE envelope (an EventBatch), not one
+        # frame per event — the fan-in mirror of the fan-out batching
+        self._handle(sender, msg)
+        self._ship()
+
+    def _ship(self) -> None:
+        out, self._out = self._out, []
+        if not out:
+            return
+        if len(out) == 1:
+            self.send(self.reply_to, out[0])
+            return
+        tel = _node_telemetry(self)
+        if tel is not None:
+            tel.metrics.inc("coalesced_events", len(out))
+        self.send(self.reply_to, EventBatch(tuple(out)))
+
+    def _handle(self, sender, msg) -> None:
         if isinstance(msg, _ShardLost):
             self._shard_lost(msg.shard_id)
             return
@@ -1630,6 +1673,8 @@ class ShardAggregator(Actor):
         leg = self.legs.get(msg.assignment_id)
         if leg is None:
             return      # stray frame, or a leg already written off as lost
+        if sender is not None:
+            leg.handler = sender       # where EmitWindow grants go back
         if isinstance(msg, DeployEvent):
             leg.deploy = msg
         elif isinstance(msg, IterationEvent):
@@ -1683,6 +1728,7 @@ class ShardAggregator(Actor):
                 and all(l.deploy is not None or l.done is not None
                         for l in live)):
             self._emit_deploy()
+        advanced = False
         while True:
             g = self._next_emit
             if (g in self._iters and not self._barrier_blocks(g)
@@ -1690,12 +1736,35 @@ class ShardAggregator(Actor):
                             for leg in self.legs.values())):
                 self._emit_iteration(g, self._iters.pop(g))
                 self._next_emit += 1
+                advanced = True
             else:
                 break
+        if advanced:
+            self._send_windows()
         if (not self._barriers
                 and all(l.done is not None for l in self.legs.values())):
             self._emit_done()
             self.stop()
+
+    def _send_windows(self) -> None:
+        """The merge frontier moved: widen every live leg's emission
+        window to ``_next_emit + LEG_EMIT_WINDOW`` (in that leg's local
+        numbering). A leg handler starts with a local window of
+        ``LEG_EMIT_WINDOW``, so with W >= 1 the leg the frontier is
+        waiting on is always allowed to run the iteration it owes —
+        pacing can stall a leg that is ahead, never the one behind."""
+        for leg_id, leg in self.legs.items():
+            if leg.handler is None or leg.done is not None:
+                continue
+            # a leg's last local iteration is iterations - offset - 1, so
+            # limit = iterations - offset is the largest useful grant —
+            # anything wider targets a handler that already stopped itself
+            # (its DoneEvent racing this grant) and only makes dead letters
+            limit = min(self._next_emit + LEG_EMIT_WINDOW - leg.offset,
+                        self.spec.iterations - leg.offset)
+            if limit > leg.window_sent:
+                leg.window_sent = limit
+                self.send(leg.handler, EmitWindow(leg_id, limit))
 
     def _emit_deploy(self) -> None:
         deploys = [l.deploy for l in self.legs.values()
@@ -1706,7 +1775,7 @@ class ShardAggregator(Actor):
         self._merged_deploy = DeployEvent(
             self.spec.assignment_id, any_d.slot, any_d.md5, any_d.version,
             self.spec.target, n_installed=n_installed, n_targets=n_targets)
-        self.send(self.reply_to, self._merged_deploy)
+        self._out.append(self._merged_deploy)
 
     def _emit_iteration(self, it: int,
                         got: Dict[str, IterationEvent]) -> None:
@@ -1723,7 +1792,7 @@ class ShardAggregator(Actor):
         value = self.cloud_app.aggregate(
             self.spec,
             [TaggedResult("", it, winner or "", payload=p) for p in payloads])
-        self.send(self.reply_to, IterationEvent(
+        self._out.append(IterationEvent(
             assignment_id=self.spec.assignment_id, iteration=it, value=value,
             winning_md5=winner, n_accepted=n_accepted, n_dropped=n_dropped,
             n_stragglers=n_stragglers))
@@ -1758,8 +1827,8 @@ class ShardAggregator(Actor):
             detail = ("all shards lost during assignment"
                       if status == Status.FAILED else
                       "all shard legs lost after delivering every iteration")
-        self.send(self.reply_to,
-                  DoneEvent(self.spec.assignment_id, status, detail=detail))
+        self._out.append(
+            DoneEvent(self.spec.assignment_id, status, detail=detail))
 
 
 @dataclass
@@ -1789,7 +1858,7 @@ class _Rehome:
     resume: int
     client_ids: Tuple[str, ...]
     waiting: Set[str]
-    timer: Optional[threading.Timer] = None
+    timer: Optional[timers.TimerHandle] = None
 
 
 class RouterNode(Actor):
@@ -1841,10 +1910,9 @@ class RouterNode(Actor):
         self._sweep_interval = shard_sweep_interval_s or (
             shard_eviction_timeout_s / 4 if shard_eviction_timeout_s
             else None)
-        self._sweep_timer: Optional[threading.Timer] = None
+        self._sweep_timer: Optional[timers.TimerHandle] = None
         self._shard_last_seen: Dict[str, float] = {
             s: time.time() for s in self.shard_addrs}
-        self._async: Optional[_AsyncSender] = None
         self._agg_seq = 0
         self._assignments: Dict[str, _AsgRecord] = {}
         self._aggregators: Dict[str, Tuple[str, str]] = {}  # actor -> (asg, sink)
@@ -1864,7 +1932,6 @@ class RouterNode(Actor):
     # -- shard liveness ---------------------------------------------------------
     def on_start(self) -> None:
         assert self._system is not None
-        self._async = _AsyncSender(self._system, f"async:{self.name}")
         self._schedule_sweep()
 
     def _schedule_sweep(self) -> None:
@@ -1872,11 +1939,9 @@ class RouterNode(Actor):
             return
         sys_ = self._system
         assert sys_ is not None
-        self._sweep_timer = threading.Timer(
+        self._sweep_timer = timers.schedule(
             self._sweep_interval,
             lambda: sys_.send(self.name, _EvictionTick()))
-        self._sweep_timer.daemon = True
-        self._sweep_timer.start()
 
     def _sweep_shards(self) -> None:
         now = time.time()
@@ -1921,6 +1986,10 @@ class RouterNode(Actor):
         my_node = self._system.node if self._system is not None else None
         if endpoint and my_node is not None:
             my_node.transport.add_peer(shard_id, endpoint)
+            # warm the router->shard connection at registration so the
+            # first fan-out leg to this shard starts with an established
+            # socket and settled wire format
+            my_node.prewarm_peer(shard_id)
         self.shard_addrs[shard_id] = cloud_addr
         self.ring.add(shard_id)
         self._shard_last_seen[shard_id] = time.time()
@@ -1949,11 +2018,11 @@ class RouterNode(Actor):
                 return                      # no shards yet: client retries
             self.orphans.pop(msg.client_id, None)
             self.clients[msg.client_id] = shard
-            # forward via the async sender: the ring may still name a
-            # dying shard, and its reconnect backoff must not stall the
-            # router's mailbox (the client re-sends until acked anyway)
-            assert self._async is not None
-            self._async.send(self.shard_addrs[shard], msg, sender=self.name)
+            # the forward rides the shard's outbound writer queue: the
+            # ring may still name a dying shard, and its reconnect
+            # backoff must not stall the router's mailbox (the client
+            # re-sends until acked anyway)
+            self.send(self.shard_addrs[shard], msg)
             self._check_rehomes(msg.client_id)
         elif isinstance(msg, Evicted):
             self.clients.pop(msg.client_id, None)
@@ -1969,12 +2038,10 @@ class RouterNode(Actor):
                 if rh.assignment_id == msg.assignment_id:
                     self._cancel_rehome(token)
                     self.send(rec.agg_name, _RehomeDone(rh.leg_id))
-            assert self._async is not None
             for leg_id, leg in rec.legs.items():
                 addr = self.shard_addrs.get(leg.shard_id)
                 if addr is not None:
-                    self._async.send(addr, CancelAssignment(leg_id),
-                                     sender=self.name)
+                    self.send(addr, CancelAssignment(leg_id))
         elif isinstance(msg, _RehomeRequest):
             self._start_rehome(msg)
         elif isinstance(msg, _RehomeTimeout):
@@ -2033,15 +2100,18 @@ class RouterNode(Actor):
             rec.legs[leg_id] = _RouterLeg(shard, tuple(cids))
             self.send(rec.agg_name, _LegAdded(leg_id, shard, offset))
             minted.append(leg_id)
-        assert self._async is not None
+        # each leg's encode runs here, but the frame only *enqueues* to
+        # that shard's outbound writer: every leg is on its queue before
+        # any single send completes, so the k legs cross the wire (and,
+        # in-proc, decode on the receiving side) concurrently instead of
+        # one sendall at a time
         for leg_id in minted:
             leg = rec.legs[leg_id]
             sub = replace(spec, assignment_id=leg_id,
                           client_ids=leg.client_ids, params=params,
                           iterations=spec.iterations - offset)
-            self._async.send(self.shard_addrs[leg.shard_id],
-                             SubmitAssignment(sub, agg_addr),
-                             sender=self.name)
+            self.send(self.shard_addrs[leg.shard_id],
+                      SubmitAssignment(sub, agg_addr))
 
     def _submit(self, msg: SubmitAssignment) -> None:
         spec = msg.spec
@@ -2056,8 +2126,8 @@ class RouterNode(Actor):
         tel = _node_telemetry(self)
         # span the fan-out: we run under the submission's trace (the
         # envelope carried it), so this parents onto the user-side root,
-        # and the per-shard sub-specs shipped below inherit our context
-        # through the async sender — shard_install hangs off us
+        # and the per-shard sub-specs below are encoded on this thread
+        # and inherit our context — shard_install hangs off us
         cm: Any = (tel.span("router_fanout", assignment_id=spec.assignment_id)
                    if tel is not None else contextlib.nullcontext())
         with cm:
@@ -2118,11 +2188,9 @@ class RouterNode(Actor):
         self._rehomes[token] = rh
         sys_ = self._system
         assert sys_ is not None
-        rh.timer = threading.Timer(
+        rh.timer = timers.schedule(
             self.rehome_grace,
             lambda: sys_.send(self.name, _RehomeTimeout(token)))
-        rh.timer.daemon = True
-        rh.timer.start()
 
     def _check_rehomes(self, client_id: str) -> None:
         for token, rh in list(self._rehomes.items()):
@@ -2165,8 +2233,6 @@ class RouterNode(Actor):
             self._sweep_timer.cancel()
         for token in list(self._rehomes):
             self._cancel_rehome(token)
-        if self._async is not None:
-            self._async.stop()
 
 
 # ---------------------------------------------------------------------------
@@ -2186,6 +2252,12 @@ class HandleSink(Actor):
         self._handle = handle
 
     def handle(self, sender, msg) -> None:
+        if isinstance(msg, EventBatch):
+            # a coalesced aggregator flush: unpack in order — batching
+            # is a wire optimization, invisible to handle semantics
+            for ev in msg.events:
+                self.handle(sender, ev)
+            return
         if isinstance(msg, (IterationEvent, DeployEvent, DoneEvent)):
             tel = _node_telemetry(self)
             if tel is not None and isinstance(msg, IterationEvent):

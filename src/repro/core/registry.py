@@ -125,8 +125,13 @@ class ActiveCodeRegistry:
             key = (user_id, slot)
             version = len(self._modules.get(key, ())) + 1
             mod = ActiveModule.create(user_id, slot, source, version)
-            spec = self._slot_specs.get(slot) if validate else None
-            if validate:
+            cached = self._compiled.get(mod.md5)
+            if cached is not None:
+                # redeploying source this registry already validated and
+                # exec'd (A/B flip-flop): content hash says nothing changed
+                resolved = cached
+            elif validate:
+                spec = self._slot_specs.get(slot)
                 resolved = compile_module(mod, spec)  # raises ValidationError
             else:
                 resolved = compile_module(mod, None)
@@ -160,8 +165,15 @@ class ActiveCodeRegistry:
                 f"v{mod.version}: sha256 mismatch on arrival"])
         with self._lock:
             key = (mod.user_id, mod.slot)
-            spec = self._slot_specs.get(mod.slot) if validate else None
-            resolved = compile_module(mod, spec)
+            cached = self._compiled.get(mod.md5)
+            if cached is not None:
+                # content-hash cache hit: this registry already validated
+                # and exec'd this exact source (same rule as rollback —
+                # re-activating a known version never re-execs)
+                resolved = cached
+            else:
+                spec = self._slot_specs.get(mod.slot) if validate else None
+                resolved = compile_module(mod, spec)
             history = self._modules.setdefault(key, [])
             if all(m.md5 != mod.md5 for m in history):
                 history.append(mod)

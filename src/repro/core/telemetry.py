@@ -39,6 +39,9 @@ from repro.core.tracing import SpanRecorder, TraceContext
 
 log = logging.getLogger("repro.fabric")
 
+# strips instance numbers from actor names for dead-letter dump dedup
+_DIGITS_OUT = str.maketrans("", "", "0123456789")
+
 
 # ---------------------------------------------------------------------------
 # Metrics
@@ -82,6 +85,11 @@ class Metrics:
         with self._lock:
             return {k: v for k, v in self._counters.items()
                     if k.startswith(prefix)}
+
+    def histograms(self, prefix: str = "") -> Dict[str, Dict[str, float]]:
+        with self._lock:
+            return {k: {"count": h[0], "sum": h[1], "min": h[2], "max": h[3]}
+                    for k, h in self._hists.items() if k.startswith(prefix)}
 
     def snapshot(self) -> Dict[str, Any]:
         with self._lock:
@@ -214,7 +222,13 @@ class NodeTelemetry:
             # already-stopped actor is the documented no-op), so a stop
             # is counted and ring-recorded but never worth a post-mortem
             return
-        key = (tag, target)
+        # per-assignment temporaries (cloud.asg12, shard0.asg12#3, ...)
+        # differ only in their instance numbers; deduping on the exact
+        # name would re-dump for every new assignment, turning expected
+        # churn (a straggler task_done racing its cancelled handler)
+        # into a dump per cancel — so the post-mortem fires once per
+        # (tag, target-shape), not once per instance
+        key = (tag, target.translate(_DIGITS_OUT))
         with self._dead_lock:
             first = key not in self._dead_seen
             if first:
@@ -253,6 +267,7 @@ class NodeTelemetry:
                                "reason": reason,
                                "ts": time.time(),
                                "counters": self.metrics.counters(),
+                               "histograms": self.metrics.histograms(),
                                "events": events}
         if self.fault_report_provider is not None:
             try:

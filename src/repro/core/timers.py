@@ -1,0 +1,85 @@
+"""Shared timer wheel: one daemon thread fires every delayed callback.
+
+``threading.Timer`` is a whole thread per arm. The fleet arms timers
+constantly — an iteration deadline per commit cycle, a heartbeat per
+client per interval, eviction sweeps, re-home grace windows — so under
+load the runtime was creating (and mostly cancelling) hundreds of
+threads per second, and each ``Thread.start()`` blocks the arming actor
+for milliseconds while the new thread fights for the GIL. One parked
+wheel thread servicing a heap of deadlines replaces all of that with a
+heap push under a condition variable.
+
+``schedule(delay_s, fn)`` returns a handle whose ``cancel()`` prevents
+an unfired callback from running — the same contract as the two
+``threading.Timer`` operations the fleet used. Callbacks run on the
+wheel thread and are expected to be cheap (every fleet callback is a
+mailbox/fabric send); a callback that raises is reported to stderr and
+never kills the wheel.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import threading
+import time
+import traceback
+from typing import Callable, List, Tuple
+
+
+class TimerHandle:
+    """Cancellation token for one scheduled callback."""
+
+    __slots__ = ("_cancelled",)
+
+    def __init__(self) -> None:
+        self._cancelled = False
+
+    def cancel(self) -> None:
+        self._cancelled = True
+
+
+class TimerWheel:
+    def __init__(self) -> None:
+        self._cond = threading.Condition()
+        self._heap: List[Tuple[float, int, TimerHandle, Callable[[], None]]] = []
+        self._seq = itertools.count()
+        self._thread: threading.Thread | None = None
+
+    def schedule(self, delay_s: float, fn: Callable[[], None]) -> TimerHandle:
+        handle = TimerHandle()
+        fire_at = time.monotonic() + delay_s
+        with self._cond:
+            heapq.heappush(self._heap, (fire_at, next(self._seq), handle, fn))
+            if self._thread is None or not self._thread.is_alive():
+                self._thread = threading.Thread(
+                    target=self._run, name="timer-wheel", daemon=True)
+                self._thread.start()
+            # wake the wheel in case this deadline is now the soonest
+            self._cond.notify()
+        return handle
+
+    def _run(self) -> None:
+        while True:
+            with self._cond:
+                while not self._heap:
+                    self._cond.wait()
+                fire_at, _, handle, fn = self._heap[0]
+                now = time.monotonic()
+                if fire_at > now:
+                    self._cond.wait(fire_at - now)
+                    continue
+                heapq.heappop(self._heap)
+            if handle._cancelled:
+                continue
+            try:
+                fn()
+            except Exception:  # noqa: BLE001 - the wheel must survive
+                traceback.print_exc()
+
+
+_wheel = TimerWheel()
+
+
+def schedule(delay_s: float, fn: Callable[[], None]) -> TimerHandle:
+    """Process-wide convenience entry point onto the shared wheel."""
+    return _wheel.schedule(delay_s, fn)

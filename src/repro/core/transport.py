@@ -13,6 +13,13 @@ boundary:
   unit tests, not in production;
 * ``TcpTransport`` — length-prefixed frames over TCP sockets with
   cached outbound connections and reconnect-on-drop;
+* ``OutboundQueues`` — one bounded FIFO queue + daemon writer thread
+  per destination node. Every remote frame a ``Node`` routes is
+  *enqueued*, never sent inline: the caller (an actor loop, the router
+  mid-fan-out) returns immediately while dial latency, reconnect
+  backoff, and the peer's receive path run on the writer thread. Legs
+  of a fan-out to k peers therefore move concurrently instead of one
+  ``sendall`` at a time;
 * ``Node`` — one addressable OODIDA node: an ``ActorSystem`` bound to a
   transport. Actors address remote peers as ``"actor@node"``.
 
@@ -24,6 +31,7 @@ so every inter-node message is exercised as bytes on every topology.
 """
 from __future__ import annotations
 
+import queue
 import random
 import socket
 import struct
@@ -75,6 +83,14 @@ class Transport:
     #: cheap, non-blocking work (post a message, flip a flag).
     on_peer_lost: Optional[Callable[[str], None]] = None
 
+    #: True when ``send`` never blocks meaningfully (no dialling, no
+    #: reconnect backoff, no kernel buffers) — lets ``OutboundQueues``
+    #: take its inline fast path on an idle destination instead of
+    #: paying a writer-thread wakeup per frame. TCP keeps this False:
+    #: its first send to a peer dials, which must stay off the caller's
+    #: actor loop.
+    inline_send_ok: bool = False
+
     def start(self, node_id: str, deliver: Callable[[bytes], None]) -> None:
         raise NotImplementedError
 
@@ -95,6 +111,14 @@ class Transport:
         (``TransportError`` -> sender-side dead letters). The complement of
         ``add_peer``, used when a node has decided a peer is gone so that
         liveness traffic does not stall behind multi-second redials."""
+
+    def prewarm(self, node_id: str) -> None:
+        """Best-effort: build whatever per-peer state ``send`` would
+        otherwise create lazily (TCP: the cached outbound connection)
+        ahead of the first frame, so a registration handshake — not the
+        first deploy fan-out — pays the dial latency. Must return
+        immediately; any dialling happens in the background. No-op by
+        default."""
 
     def close(self) -> None:
         pass
@@ -140,6 +164,10 @@ class InProcTransport(Transport):
     (zero-copy), but encode/decode still runs end to end — the point is
     that serialization bugs cannot hide in a single-process topology.
     """
+
+    # a hub send is a function call (receiver decode + mailbox put,
+    # ~100 us): cheaper inline than a writer-thread wakeup
+    inline_send_ok = True
 
     def __init__(self, hub: InProcHub):
         self.hub = hub
@@ -241,6 +269,41 @@ class TcpTransport(Transport):
                 sock.close()
             except OSError:
                 pass
+
+    def prewarm(self, node_id: str) -> None:
+        """Dial ``node_id`` in the background and cache the connection
+        (under the same per-peer lock ``send`` takes, so a racing send
+        either finds the warm socket or wins the dial itself). Failures
+        are swallowed: the first real frame just pays the dial as it
+        would have anyway."""
+        if self._closed:
+            return
+        with self._lock:
+            if node_id in self._conns or node_id not in self._peers:
+                return
+            lock = self._send_locks.setdefault(node_id, threading.Lock())
+
+        def dial() -> None:
+            with lock:
+                with self._lock:
+                    if node_id in self._conns or self._closed:
+                        return
+                try:
+                    sock = self._connect(node_id)
+                except TransportError:
+                    return
+                with self._lock:
+                    if self._closed:
+                        try:
+                            sock.close()
+                        except OSError:
+                            pass
+                        return
+                    self._conns[node_id] = sock
+
+        threading.Thread(target=dial, daemon=True,
+                         name=f"tcp-prewarm:{self.node_id}->{node_id}"
+                         ).start()
 
     # -- inbound ------------------------------------------------------------
     def _accept_loop(self) -> None:
@@ -379,6 +442,234 @@ class TcpTransport(Transport):
 
 
 # ---------------------------------------------------------------------------
+# Per-peer outbound writers
+# ---------------------------------------------------------------------------
+
+#: sentinel a closing OutboundQueues appends after the queued frames so a
+#: writer flushes what it has, then exits
+_WRITER_STOP = object()
+
+
+class _PeerQueue:
+    __slots__ = ("q", "thread", "send_lock", "count_lock", "pending")
+
+    def __init__(self, maxsize: int):
+        self.q: "queue.Queue[Any]" = queue.Queue(maxsize)
+        self.thread: Optional[threading.Thread] = None
+        # serializes actual transport.send calls for this destination
+        # (writer vs inline fast path) so FIFO survives the mix
+        self.send_lock = threading.Lock()
+        self.count_lock = threading.Lock()
+        # frames accepted but not yet fully sent; 0 <=> the destination
+        # is idle and an inline send cannot overtake anything
+        self.pending = 0
+
+
+class OutboundQueues:
+    """Per-destination outbound writer threads over one transport — the
+    transport-level promotion of the ad-hoc ``_AsyncSender`` the fleet
+    actors used to carry for liveness traffic.
+
+    One bounded FIFO queue and one lazily-started daemon writer per
+    destination node. ``enqueue`` is what callers see: it returns as
+    soon as the frame is queued, so connection dialling, reconnect
+    backoff, ``sendall``, and (in-proc) the receiver's decode all run on
+    the writer thread instead of the caller's actor loop. Because every
+    frame from this node to a given peer funnels through that peer's one
+    queue, per-(src, dst) FIFO order is exactly what the blocking path
+    guaranteed — while frames to *different* peers now move in parallel,
+    which is what flattens the fan-out.
+
+    **Inline fast path.** A writer-thread handoff costs two scheduler
+    wakeups per hop — milliseconds under GIL pressure, which dwarfs an
+    in-proc "wire" time of ~100 us. So when the transport declares
+    ``inline_send_ok`` (sends never block meaningfully) *and* the
+    destination is idle (``pending == 0``: nothing queued, nothing
+    mid-send), ``enqueue`` sends on the caller's thread under the same
+    per-destination ``send_lock`` the writer uses. FIFO is preserved
+    exactly: inline is only taken when no earlier frame can still be in
+    flight, and any frame enqueued *during* an inline send queues behind
+    its lock. A busy or slow destination falls back to the writer, so
+    bursts still pipeline and one wedged peer still cannot stall the
+    caller. TCP never takes the fast path — its first send dials.
+
+    Backpressure: a full queue blocks ``enqueue`` (bounded memory, and a
+    wedged peer eventually slows its producers instead of OOMing them).
+    Failure: a frame whose send raises gets its ``on_error`` callback on
+    the writer thread — the ``Node`` routes that to dead letters, so a
+    queued frame lost to a dead peer is counted, never silently dropped.
+
+    Telemetry (when a ``NodeTelemetry`` is attached): a
+    ``send_queue_depth.<peer>`` gauge and ``send_queue_wait_us.<peer>``/
+    ``send_wire_us.<peer>`` histograms, the queue-health view
+    ``Fleet.metrics()`` and flight-recorder dumps surface.
+    """
+
+    def __init__(self, transport: Transport, *, maxsize: int = 1024,
+                 telemetry: Optional[Any] = None,
+                 name: str = ""):
+        self.transport = transport
+        self.telemetry = telemetry
+        self._name = name
+        self._maxsize = maxsize
+        self._lock = threading.Lock()
+        self._queues: Dict[str, _PeerQueue] = {}
+        self._closed = False
+        self._inline_ok = bool(getattr(transport, "inline_send_ok", False))
+
+    def enqueue(self, dest_node: str, data: bytes, *,
+                on_sent: Optional[Callable[[], None]] = None,
+                on_error: Optional[Callable[[Exception], None]] = None
+                ) -> bool:
+        """Hand one frame to ``dest_node``'s writer (or send it inline
+        on an idle fast-path destination); blocks only when that peer's
+        queue is full. Returns False (frame not taken) after ``close``
+        — callers dead-letter it themselves."""
+        with self._lock:
+            if self._closed:
+                return False
+            pq = self._queues.get(dest_node)
+            if pq is None:
+                pq = _PeerQueue(self._maxsize)
+                self._queues[dest_node] = pq
+        if self._inline_ok:
+            with pq.count_lock:
+                if pq.pending == 0:
+                    pq.pending += 1     # claim: nothing can overtake us
+                    inline = True
+                else:
+                    inline = False
+            if inline:
+                self._send_one(dest_node, pq, data, on_sent, on_error,
+                               wait_us=None)
+                return True
+        with pq.count_lock:
+            pq.pending += 1
+        if pq.thread is None:           # first queued frame: start writer
+            with self._lock:
+                if pq.thread is None and not self._closed:
+                    pq.thread = threading.Thread(
+                        target=self._writer, args=(dest_node, pq),
+                        daemon=True,
+                        name=f"outbound:{self._name}->{dest_node}")
+                    pq.thread.start()
+        pq.q.put((data, time.perf_counter(), on_sent, on_error))
+        # close() may have run between the flag check and the put: if the
+        # writer is gone (or never started), our frame would sit in a
+        # dead queue forever. Drain it to on_error ourselves — taken-and-
+        # failed, not silently dropped (and not False, which would
+        # double-account).
+        if self._closed and (pq.thread is None
+                             or not pq.thread.is_alive()):
+            self._drain(pq, TransportError(
+                "outbound queues closed with frame in flight"))
+            return True
+        tel = self.telemetry
+        if tel is not None:
+            tel.metrics.set_gauge(f"send_queue_depth.{dest_node}",
+                                  pq.q.qsize())
+        return True
+
+    def depth(self, dest_node: str) -> int:
+        with self._lock:
+            pq = self._queues.get(dest_node)
+        return pq.q.qsize() if pq is not None else 0
+
+    def _writer(self, dest_node: str, pq: _PeerQueue) -> None:
+        while True:
+            item = pq.q.get()
+            if item is _WRITER_STOP:
+                return
+            data, t_enq, on_sent, on_error = item
+            tel = self.telemetry
+            if tel is not None:
+                tel.metrics.set_gauge(f"send_queue_depth.{dest_node}",
+                                      pq.q.qsize())
+            self._send_one(dest_node, pq, data, on_sent, on_error,
+                           wait_us=(time.perf_counter() - t_enq) * 1e6)
+
+    def _send_one(self, dest_node: str, pq: _PeerQueue, data: bytes,
+                  on_sent: Optional[Callable[[], None]],
+                  on_error: Optional[Callable[[Exception], None]],
+                  wait_us: Optional[float]) -> None:
+        """Move one frame (writer thread or inline fast path) under the
+        destination's send lock; the frame's fate is the callback's to
+        record — a failure must never kill the writer or the caller."""
+        tel = self.telemetry
+        if tel is not None and wait_us is not None:
+            tel.metrics.observe(f"send_queue_wait_us.{dest_node}", wait_us)
+        try:
+            t0 = time.perf_counter()
+            with pq.send_lock:
+                self.transport.send(dest_node, data)
+        except Exception as e:  # noqa: BLE001 - survive to move the
+            # frames queued behind this one
+            if on_error is not None:
+                try:
+                    on_error(e)
+                except Exception:  # noqa: BLE001
+                    pass
+        else:
+            if tel is not None:
+                tel.metrics.observe(f"send_wire_us.{dest_node}",
+                                    (time.perf_counter() - t0) * 1e6)
+            if on_sent is not None:
+                try:
+                    on_sent()
+                except Exception:  # noqa: BLE001
+                    pass
+        finally:
+            with pq.count_lock:
+                pq.pending -= 1
+
+    def close(self, timeout: float = 2.0) -> None:
+        """Flush-then-stop: a stop sentinel lands *behind* the queued
+        frames, so writers drain what actors enqueued before shutdown.
+        Whatever a wedged writer (blocked in reconnect backoff against a
+        dead peer) still holds when the timeout expires is routed to
+        ``on_error`` — undeliverable frames become dead letters, not
+        silence."""
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+            queues = dict(self._queues)
+        err = TransportError("outbound queues closed with frame in flight")
+        for pq in queues.values():
+            try:
+                pq.q.put_nowait(_WRITER_STOP)
+            except queue.Full:
+                # no room for the sentinel: this queue's frames cannot
+                # all flush anyway — fail them now and stop the writer
+                self._drain(pq, err)
+                pq.q.put(_WRITER_STOP)
+        deadline = time.monotonic() + timeout
+        for pq in queues.values():
+            if pq.thread is not None:
+                pq.thread.join(max(0.01, deadline - time.monotonic()))
+        for pq in queues.values():
+            self._drain(pq, err)
+
+    @staticmethod
+    def _drain(pq: _PeerQueue, err: Exception) -> None:
+        while True:
+            try:
+                item = pq.q.get_nowait()
+            except queue.Empty:
+                return
+            if item is _WRITER_STOP:
+                continue
+            on_error = item[3]
+            if on_error is not None:
+                try:
+                    on_error(err)
+                except Exception:  # noqa: BLE001
+                    pass
+            with pq.count_lock:
+                pq.pending -= 1
+
+
+# ---------------------------------------------------------------------------
 # Node: ActorSystem + Transport
 # ---------------------------------------------------------------------------
 
@@ -387,10 +678,14 @@ class Node:
     """One addressable OODIDA node: an actor system bound to a transport.
 
     ``route`` is the single choke point every ``@``-addressed send goes
-    through: encode the envelope, move bytes (or loop back through the
-    codec for self-addressed sends), decode on arrival, deliver to the
-    local mailbox. Remote sends that fail at the transport layer land in
-    the local system's dead letters, like sends to dead local actors.
+    through: encode the envelope (on the caller's thread, so trace
+    context and telemetry attribution stay with the sender), then hand
+    the bytes to the destination peer's outbound writer queue (or loop
+    back through the codec for self-addressed sends); the writer moves
+    them, the receiver decodes and delivers to the local mailbox. A
+    queued frame whose send fails lands in the local system's dead
+    letters — asynchronously, from the writer thread — like sends to
+    dead local actors.
 
     The frame encoding per peer is negotiated by ``self.wire`` (a
     ``wirefmt.WireState``): the first send to a peer also fires a
@@ -404,7 +699,8 @@ class Node:
     def __init__(self, node_id: str, transport: Transport,
                  system: Optional[ActorSystem] = None,
                  telemetry: Optional[Any] = None,
-                 wire: Optional[wirefmt.WireState] = None):
+                 wire: Optional[wirefmt.WireState] = None,
+                 outbound_queue_depth: int = 1024):
         self.node_id = node_id
         self.system = system or ActorSystem()
         self.system.node = self
@@ -418,9 +714,18 @@ class Node:
         self.wire = wire or wirefmt.WireState(node_id=node_id)
         if not self.wire.node_id:
             self.wire.node_id = node_id
+        # per-destination writer threads: every remote frame is enqueued
+        # here, never sent on the caller's thread
+        self.outbound = OutboundQueues(transport,
+                                       maxsize=outbound_queue_depth,
+                                       telemetry=telemetry, name=node_id)
         self._peer_lost_watchers: List[Callable[[str], None]] = []
         transport.on_peer_lost = self._peer_lost
         transport.start(node_id, self._deliver)
+        # a fabric node spawns short-lived handler actors on its hot
+        # paths (deploy fan-out, per-task temporaries): park workers now
+        # so those spawns never pay a Thread.start() mid-deploy
+        self.system.prewarm_workers()
 
     # -- helpers ------------------------------------------------------------
     def address(self, actor_name: str) -> str:
@@ -446,6 +751,24 @@ class Node:
     def spawn(self, actor, **kw):
         return self.system.spawn(actor, **kw)
 
+    def prewarm_peer(self, node_id: str) -> None:
+        """Pre-pay first-contact costs at registration time: dial the
+        peer's TCP connection in the background and fire the wire-format
+        Hello now, so the first deploy fan-out finds a warm connection
+        and (usually) a settled binary encoding instead of paying dial +
+        negotiation latency inside the measured path. Strictly
+        best-effort; duck-typed so wrapped/stub transports without a
+        ``prewarm`` are simply skipped."""
+        if node_id == self.node_id:
+            return
+        pw = getattr(self.transport, "prewarm", None)
+        if callable(pw):
+            try:
+                pw(node_id)
+            except Exception:  # noqa: BLE001 - never let a warm-up fail
+                pass           # the registration that triggered it
+        self._tx_format(node_id)
+
     # -- wire-format negotiation --------------------------------------------
     def _tx_format(self, node_id: str) -> wirefmt.WireFormat:
         """The frame format for one destination node: our own best
@@ -455,29 +778,36 @@ class Node:
         if node_id == self.node_id:
             return self.wire.local_format()
         if self.wire.mark_hello(node_id):
-            if not self._send_control(node_id, self.wire.make_hello()):
-                # peer unreachable (e.g. not yet registered with the
-                # transport): retry the handshake on a later send
+            if not self._send_control(
+                    node_id, self.wire.make_hello(),
+                    # peer unreachable (e.g. not yet registered with the
+                    # transport): retry the handshake on a later send
+                    on_error=lambda e: self.wire.unmark_hello(node_id)):
                 self.wire.unmark_hello(node_id)
         return self.wire.tx_format(node_id)
 
-    def _send_control(self, node_id: str, msg) -> bool:
-        """Move a Hello/HelloAck to ``node_id`` — always legacy JSON so
-        any peer can parse it; best-effort (False = not delivered).
+    def _send_control(self, node_id: str, msg,
+                      on_error: Optional[Callable[[Exception], None]] = None
+                      ) -> bool:
+        """Queue a Hello/HelloAck for ``node_id`` — always legacy JSON
+        so any peer can parse it, through the same per-peer writer as
+        data frames (so the Hello reaches the wire before the frames
+        enqueued behind it). Best-effort: False = not even queued;
+        ``on_error`` fires from the writer if the send itself fails.
         Telemetry counts it only after a successful send, preserving the
         fleet-wide sent==recv symmetry per tag."""
         data = codec.envelope_to_wire(
             wirefmt.CONTROL_ACTOR,
             make_addr(wirefmt.CONTROL_ACTOR, self.node_id), msg)
-        try:
-            self.transport.send(node_id, data)
-        except TransportError:
-            return False
-        tel = self.telemetry
-        if tel is not None:
-            tel.on_send(codec.wire_tag_of(msg), node_id, len(data), None,
-                        0.0, encoding=wirefmt.frame_label(data))
-        return True
+
+        def counted() -> None:
+            tel = self.telemetry
+            if tel is not None:
+                tel.on_send(codec.wire_tag_of(msg), node_id, len(data),
+                            None, 0.0, encoding=wirefmt.frame_label(data))
+
+        return self.outbound.enqueue(node_id, data, on_sent=counted,
+                                     on_error=on_error)
 
     def _handle_wire_control(self, msg, sender: Optional[str]) -> None:
         peer = split_addr(sender)[1] if sender else None
@@ -498,13 +828,24 @@ class Node:
         if node_id == self.node_id:
             self._deliver(data)        # loopback: still crosses the codec
             return
-        try:
-            self.transport.send(node_id, data)
-        except TransportError:
-            with self.system._lock:
-                self.system.dead_letters.append(Envelope(sender, msg))
-            if self.telemetry is not None:
-                self.telemetry.on_dead_letter(target, msg)
+        queued = self.outbound.enqueue(
+            node_id, data,
+            on_error=lambda e: self._undeliverable(target, msg, sender))
+        if not queued:                 # writers already shut down
+            self._undeliverable(target, msg, sender)
+
+    def _undeliverable(self, target: str, msg, sender: Optional[str]
+                       ) -> None:
+        """A remote frame could not be moved (dead peer, closed
+        writers): dead-letter it exactly as a send to a dead local actor
+        would be. Runs on the writer thread for queued frames — the
+        exactly-once ``on_peer_lost`` signal for an established
+        connection failing stays with ``TcpTransport.send`` and now also
+        fires from there."""
+        with self.system._lock:
+            self.system.dead_letters.append(Envelope(sender, msg))
+        if self.telemetry is not None:
+            self.telemetry.on_dead_letter(target, msg)
 
     def route(self, target: str, msg, sender: Optional[str] = None) -> None:
         name, node_id = split_addr(target)
@@ -589,4 +930,8 @@ class Node:
     # -- teardown -----------------------------------------------------------
     def close(self, timeout: float = 5.0) -> None:
         self.system.shutdown(timeout)
+        # flush the writers after the actors stop (their last sends are
+        # already queued) and before the transport goes away; stragglers
+        # behind a wedged connection land in dead letters
+        self.outbound.close(min(timeout, 2.0))
         self.transport.close()

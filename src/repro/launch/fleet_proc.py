@@ -75,6 +75,9 @@ def _client_main(cfg: Dict[str, Any]) -> None:
             if cfg.get("wire_json_only") else None)
     node = Node(cfg["node_id"], transport, telemetry=tel, wire=wire)
     transport.add_peer(cfg["cloud_node_id"], cfg["cloud_endpoint"])
+    # dial the entry node + fire the wire Hello before the first
+    # registration frame needs them
+    node.prewarm_peer(cfg["cloud_node_id"])
 
     stop = threading.Event()
     actor = ClientNode(
@@ -103,6 +106,8 @@ def _shard_main(cfg: Dict[str, Any]) -> None:
            if cfg.get("telemetry", True) else None)
     node = Node(cfg["shard_id"], transport, telemetry=tel)
     transport.add_peer(cfg["router_node_id"], cfg["router_endpoint"])
+    # warm the shard->router connection ahead of RegisterShard
+    node.prewarm_peer(cfg["router_node_id"])
 
     stop = threading.Event()
     cloud = CloudNode(
@@ -249,6 +254,10 @@ def spawn_tcp_fleet(n_clients: int, *, shards: int = 1, seed: int = 0,
     server_addr = server_node.address(server.name)
     user_transport.add_peer(server_node.node_id, server_transport.endpoint)
     server_transport.add_peer("user", user_transport.endpoint)
+    # both directions of the user<->server pair are known now: warm them
+    # so the first submission and its first event reply skip the dial
+    user_node.prewarm_peer(server_node.node_id)
+    server_node.prewarm_peer("user")
 
     procs = []
     for i in range(n_clients):

@@ -213,6 +213,12 @@ class FaultyTransport(Transport):
         self.plan = plan
         self.node_id: Optional[str] = None
 
+    @property
+    def inline_send_ok(self) -> bool:
+        # plan decisions (drop / park / duplicate) never block, so the
+        # fast path is exactly as safe as the wrapped transport's
+        return bool(getattr(self.inner, "inline_send_ok", False))
+
     def start(self, node_id: str, deliver: Callable[[bytes], None]) -> None:
         self.node_id = node_id
         # chain the drop signal: the inner transport observes it, the
@@ -239,6 +245,10 @@ class FaultyTransport(Transport):
 
     def forget_peer(self, node_id: str) -> None:
         self.inner.forget_peer(node_id)
+
+    def prewarm(self, node_id: str) -> None:
+        # connection warm-up moves no frames, so the plan has no say
+        self.inner.prewarm(node_id)
 
     def close(self) -> None:
         self.inner.close()

@@ -13,6 +13,7 @@ from repro.core.assignment import (
     AssignmentSpec,
     DeployEvent,
     DoneEvent,
+    EventBatch,
     IterationEvent,
     Status,
     Target,
@@ -22,6 +23,7 @@ from repro.core.consistency import TaggedResult
 from repro.core.fleet import (
     CancelAssignment,
     Deadline,
+    EmitWindow,
     Evicted,
     Heartbeat,
     HeartbeatAck,
@@ -74,6 +76,7 @@ def _examples():
                                                     payload=[1.0, 2.5],
                                                     compute_ms=0.7)),
         "deadline": Deadline(7),
+        "emit_window": EmitWindow("asg-000042#1", 5),
         "register_client": RegisterClient("c000", "c000", "127.0.0.1:4711"),
         "register_ack": RegisterAck("c000", "cloud@shard0", "127.0.0.1:4712",
                                     modules=(_module(),)),
@@ -97,6 +100,12 @@ def _examples():
         "deploy": DeployEvent("asg-2", "slot", "cd" * 16, 2, Target.CLIENTS,
                               4, 4),
         "done": DoneEvent("asg-3", Status.CANCELLED, "cancelled"),
+        # a coalesced aggregator flush: deploy + the iteration it was
+        # holding back + the terminal done, one envelope
+        "event_batch": EventBatch((
+            DeployEvent("asg-4", "slot", "ab" * 16, 1, Target.CLIENTS, 2, 2),
+            IterationEvent("asg-4", 0, [0.5], "ab" * 16, 2, 0, 0),
+            DoneEvent("asg-4", Status.DONE, "2/2 clients installed"))),
         "telemetry_pull": TelemetryPull("pull-0-aabb", "collector@user"),
         "telemetry_snapshot": TelemetrySnapshot(
             "c000", "pull-0-aabb",

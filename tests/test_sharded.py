@@ -149,6 +149,39 @@ def test_sharded_full_scenario_handle_api_unchanged():
         fleet.shutdown()
 
 
+def test_emission_window_paces_sharded_legs():
+    """Sharded legs run under aggregator flow control: a leg may only
+    start iterations inside its EmitWindow, and the aggregator re-arms
+    every live leg as its merge frontier advances — so grants must flow
+    router -> shard for an analytics assignment, while results still
+    arrive complete, in order, and fully accounted."""
+    from repro.core.fleet import EmitWindow
+
+    # the grant survives the wire codec like any other fabric message
+    w = EmitWindow("a1#2", 7)
+    assert EmitWindow.from_wire_dict(w.to_wire_dict()) == w
+
+    fleet = Fleet.create(4, shards=2, seed=7)
+    try:
+        fe = fleet.frontend("u1")
+        handle = fe.submit_analytics("mean", iterations=6,
+                                     params={"n_values": 8})
+        results, done = handle.result(timeout=30.0)
+        assert done.status == Status.DONE
+        assert [r.iteration for r in results] == list(range(6))
+        assert all(r.n_accepted + r.n_dropped + r.n_stragglers == 4
+                   for r in results)
+        m = fleet.metrics()
+        granted = sum(t.get("msgs_in.emit_window", 0)
+                      for node, t in m.items() if node.startswith("shard"))
+        # 6 iterations across 2 legs, initial window 1: all but the very
+        # first leg-local iteration waited on a grant
+        assert granted > 0
+        assert m["router"]["msgs_out.emit_window"] == granted
+    finally:
+        fleet.shutdown()
+
+
 def test_sharded_aggregation_runs_once_at_the_router():
     """cloud_method aggregation must merge across shards, not per shard:
     the fleet-wide mean over clients on different shards equals the mean

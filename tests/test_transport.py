@@ -1,6 +1,7 @@
 """The wire-transport fabric: in-proc hub, TCP frames, reconnect-on-drop,
 and node routing (plain names local, '@'-addresses through the codec)."""
 import queue
+import time
 from dataclasses import dataclass
 from typing import Any, Dict
 
@@ -270,6 +271,11 @@ def test_node_remote_failure_lands_in_dead_letters():
     n = Node("n1", t)
     try:
         n.route("sink@nowhere", Ping(1), sender="me")
+        # the send fails on the outbound writer thread, so the dead
+        # letter lands asynchronously
+        deadline = time.time() + 5.0
+        while not n.system.dead_letters and time.time() < deadline:
+            time.sleep(0.005)
         assert len(n.system.dead_letters) == 1
         assert n.system.dead_letters[0].msg == Ping(1)
     finally:
