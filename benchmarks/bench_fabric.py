@@ -94,6 +94,49 @@ def bench_deploy_to_effect(topology: str, n_clients: int = 4,
         fleet.shutdown()
 
 
+# constant-output rollout candidates: per-client data streams are
+# heterogeneous, so value-differing builds would genuinely diverge on a
+# small canary and trip the health gate — these differ by md5 only
+_RO_A = "def run(xs):\n    return 1.0\n"
+_RO_B = "def run(xs):\n    # build B, identical math\n    return 1.0\n"
+
+
+def bench_rollout_promote_to_effect(n_clients: int = 8, shards: int = 2,
+                                    repeats: int = 3):
+    """Staged-rollout promotion latency: time from the health gate
+    deciding PROMOTE (the ``on_decision`` seam) to the first committed
+    iteration whose winning hash is the promoted candidate — i.e. what
+    the canary detour adds *after* the gate is satisfied."""
+    from repro.core.rollout import GateDecision, HealthPolicy
+
+    fleet = Fleet.create(n_clients, shards=shards)
+    try:
+        fe = fleet.frontend("bench")
+        fe.deploy_code("ro_mean", _RO_A).result(timeout=60.0)
+        times = []
+        src = _RO_B
+        for _ in range(repeats):
+            mark = {}
+
+            def _at_decision(decision, mark=mark):
+                assert decision is GateDecision.PROMOTE
+                mark["t0"] = time.perf_counter()
+
+            plan = fe.start_rollout("ro_mean", src, fraction=0.25, seed=0,
+                                    health=HealthPolicy(window=1),
+                                    on_decision=_at_decision)
+            assert plan.run(timeout=60.0) is GateDecision.PROMOTE
+            handle = fe.submit_analytics("ro_mean", iterations=1,
+                                         params={"n_values": 16})
+            iters, _ = handle.result(timeout=60.0)
+            assert iters[0].winning_md5 == plan.deployment.md5
+            times.append(time.perf_counter() - mark["t0"])
+            src = _RO_A if src is _RO_B else _RO_B   # alternate builds
+        return median(times)
+    finally:
+        fleet.shutdown()
+
+
 def bench_deploy_spans(n_clients: int = 8, shards: int = 1,
                        repeats: int = 3):
     """The same mid-assignment redeploy as ``bench_deploy_to_effect``,
@@ -540,6 +583,11 @@ def main(report) -> None:
         d2e = bench_deploy_to_effect(topology)
         report(f"fabric_deploy_to_effect_{topology}", d2e * 1e6,
                "deploy_code -> first committed iteration on new version")
+    # staged rollouts: what promotion costs once the gate says yes
+    p2e = bench_rollout_promote_to_effect()
+    report("rollout_promote_to_effect", p2e * 1e6,
+           "gate PROMOTE decision -> first committed iteration on the "
+           "promoted version, 8 in-proc clients, 2 shards")
     # wire-format payload sweep: bytes/frame + codec round latency per
     # content encoding, with the >=5x-at-10MB acceptance assertion
     bench_payload_sweep(report)

@@ -136,7 +136,16 @@ class IterationEvent:
     the fleet-wide commit is *exact*: identical to running
     ``majority_filter`` over the flat, unpartitioned result multiset.
     Both fields are ``None`` on user-facing events (unsharded commits
-    and the router's merged stream)."""
+    and the router's merged stream).
+
+    ``arm_stats`` is the staged-rollout health signal: when the
+    assignment carries an arm map (``params["arms"]``: client_id ->
+    arm name, set by a ``RolloutPlan`` watch), the committing handler
+    splits its *raw* results per arm into summable summaries
+    (``core/rollout.arm_report``) — count, error count, numeric-payload
+    sum — and the router's aggregator sums them across shard legs
+    (``merge_arm_reports``), so canary-vs-control accounting is exact
+    under sharding. ``None`` on assignments without arms."""
 
     assignment_id: str
     iteration: int
@@ -147,6 +156,7 @@ class IterationEvent:
     n_stragglers: int
     hash_counts: Optional[Dict[str, int]] = None
     hash_payloads: Optional[Dict[str, list]] = None
+    arm_stats: Optional[Dict[str, Dict[str, Any]]] = None
 
     def to_wire_dict(self) -> Dict[str, Any]:
         d: Dict[str, Any] = {
@@ -162,6 +172,8 @@ class IterationEvent:
             d["hash_counts"] = self.hash_counts
         if self.hash_payloads is not None:
             d["hash_payloads"] = self.hash_payloads
+        if self.arm_stats is not None:
+            d["arm_stats"] = self.arm_stats
         return d
 
     def to_wire(self) -> bytes:
@@ -185,6 +197,7 @@ class IterationEvent:
             hash_counts=({h: int(n) for h, n in counts.items()}
                          if counts is not None else None),
             hash_payloads=d.get("hash_payloads"),
+            arm_stats=d.get("arm_stats"),
         )
 
 
@@ -317,9 +330,15 @@ class TaskSpec:
     params: Dict[str, Any] = field(default_factory=dict)
     code: Optional[ActiveModule] = None
     method: str = ""
+    # staged rollouts: which arm ("canary"/"control") this client runs
+    # under, resolved from the assignment's arm map at fan-out time. The
+    # client echoes it on its TaggedResult so per-arm accounting works
+    # even where client ids are no longer visible. "" = no arms.
+    arm: str = ""
 
     @staticmethod
     def for_client(a: AssignmentSpec, client_id: str, iteration: int) -> "TaskSpec":
+        arms = a.params.get("arms") or {}
         return TaskSpec(
             task_id=_next_id("tsk"),
             assignment_id=a.assignment_id,
@@ -329,6 +348,7 @@ class TaskSpec:
             params=a.params,
             code=a.code,
             method=a.method,
+            arm=arms.get(client_id, ""),
         )
 
     def to_wire_dict(self) -> Dict[str, Any]:
@@ -343,6 +363,8 @@ class TaskSpec:
         }
         if self.code is not None:
             d["code"] = self.code.to_wire()
+        if self.arm:
+            d["arm"] = self.arm
         return d
 
     @staticmethod
@@ -356,6 +378,7 @@ class TaskSpec:
             params=d["params"],
             method=d["method"],
             code=ActiveModule.from_wire(d["code"]) if "code" in d else None,
+            arm=d.get("arm", ""),
         )
 
 

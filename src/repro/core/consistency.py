@@ -30,17 +30,24 @@ class TaggedResult:
     code_md5: str
     payload: Any = None
     compute_ms: float = 0.0
+    # staged rollouts: the arm ("canary"/"control") the producing task
+    # ran under, echoed from TaskSpec.arm so per-arm health accounting
+    # survives paths where client identity is not at hand. "" = no arms.
+    arm: str = ""
 
     def to_wire_dict(self) -> Dict[str, Any]:
         # payload must be JSON-able; numpy scalars/arrays are lowered by
         # the codec's default hook (item()/tolist()) at encode time
-        return {
+        d = {
             "client_id": self.client_id,
             "iteration": self.iteration,
             "code_md5": self.code_md5,
             "payload": self.payload,
             "compute_ms": self.compute_ms,
         }
+        if self.arm:
+            d["arm"] = self.arm
+        return d
 
     @staticmethod
     def from_wire_dict(d: Dict[str, Any]) -> "TaggedResult":
@@ -50,6 +57,7 @@ class TaggedResult:
             code_md5=d["code_md5"],
             payload=d["payload"],
             compute_ms=float(d["compute_ms"]),
+            arm=d.get("arm", ""),
         )
 
 

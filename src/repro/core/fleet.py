@@ -82,6 +82,7 @@ from repro.core.assignment import (
     Status,
     Target,
     TaskSpec,
+    _next_id,
 )
 from repro.core.consistency import (
     FilterOutcome,
@@ -93,6 +94,18 @@ from repro.core.consistency import (
 )
 from repro.core.module import ActiveModule
 from repro.core.registry import ActiveCodeRegistry
+from repro.core.rollout import (
+    ArmStats,
+    CohortSplit,
+    GateDecision,
+    HealthPolicy,
+    RolloutEvent,
+    arm_report,
+    evaluate_gate,
+    iteration_health,
+    merge_arm_reports,
+    select_cohorts,
+)
 from repro.core.transport import (
     InProcHub,
     InProcTransport,
@@ -537,7 +550,7 @@ class ClientApp:
             self.registry.install(task.code)  # re-validates on the client
             return TaggedResult(self.client_id, task.iteration,
                                 task.code.md5, payload="installed",
-                                compute_ms=_ms(t0))
+                                compute_ms=_ms(t0), arm=task.arm)
 
         if task.method in self.method_handlers:
             return self.method_handlers[task.method](self, task)
@@ -549,7 +562,7 @@ class ClientApp:
             value = BUILTIN_METHODS[task.method](window)
             return TaggedResult(self.client_id, task.iteration,
                                 f"builtin:{task.method}", payload=value,
-                                compute_ms=_ms(t0))
+                                compute_ms=_ms(t0), arm=task.arm)
 
         # custom method: resolve *now* (reload-per-iteration semantics)
         resolved = self.registry.resolve(task.params.get("code_user", ""),
@@ -560,7 +573,8 @@ class ClientApp:
                 f"{task.method!r}")
         value = resolved.fn(window)
         return TaggedResult(self.client_id, task.iteration, resolved.md5,
-                            payload=_to_py(value), compute_ms=_ms(t0))
+                            payload=_to_py(value), compute_ms=_ms(t0),
+                            arm=task.arm)
 
 
 class CloudApp:
@@ -655,7 +669,7 @@ class TaskHandler(Actor):
         except Exception as e:  # noqa: BLE001 - report, don't crash the node
             err = f"{type(e).__name__}: {e}"
             dummy = TaggedResult(self.task.client_id, self.task.iteration,
-                                 "error", payload=None)
+                                 "error", payload=None, arm=self.task.arm)
             self.send(self.handler, TaskDone(self.task, dummy, error=err))
         finally:
             self.stop()
@@ -1109,6 +1123,12 @@ class AssignmentHandler(Actor):
                     self.collector.results)
             else:
                 value = self.cloud_app.aggregate(self.spec, outcome.accepted)
+            # staged rollouts: per-arm accounting runs over the *raw*
+            # result multiset (canary and control run different md5s, so
+            # the majority filter would hide exactly the arm we watch)
+            arms = self.spec.params.get("arms")
+            arm_stats = (arm_report(self.collector.results, arms)
+                         if arms else None)
             self._emit(IterationEvent(
                 assignment_id=self.spec.assignment_id,
                 iteration=self.iteration,
@@ -1119,6 +1139,7 @@ class AssignmentHandler(Actor):
                 n_stragglers=n_strag,
                 hash_counts=hash_counts,
                 hash_payloads=hash_payloads,
+                arm_stats=arm_stats,
             ))
         self._committed_iterations += 1
         self.collector = None
@@ -1195,7 +1216,15 @@ class CloudNode(Actor):
         self._shard_hb_timer: Optional[timers.TimerHandle] = None
         self._last_seen: Dict[str, float] = {
             c: time.time() for c in self.client_nodes}
-        self._deployed: Dict[Tuple[str, str], ActiveModule] = {}
+        # newest client-targeted deployments per (user, slot), each with
+        # the client subset it was aimed at (None = fleet-wide). Kept as
+        # a list because a staged rollout legitimately has two current
+        # versions at once — the canary cohort's and everyone else's —
+        # and catch-up must not leak canary code to reconnecting
+        # control clients.
+        self._deployed: Dict[
+            Tuple[str, str],
+            List[Tuple[ActiveModule, Optional[frozenset]]]] = {}
         self._user_sinks: Dict[str, str] = {}            # asg id -> address
         self._handler_seq = 0
         self._handler_assignments: Dict[str, str] = {}   # actor -> asg id
@@ -1210,6 +1239,19 @@ class CloudNode(Actor):
         """Registered-client count (read by launchers polling readiness;
         a plain len() is safe to read from other threads)."""
         return len(self.client_nodes)
+
+    def _catchup_modules(self, client_id: str) -> Tuple[ActiveModule, ...]:
+        """Modules a (re)registering client should install: per slot, the
+        newest deployment whose target subset includes it (fleet-wide
+        entries match everyone). A control client reconnecting while a
+        canary is in flight gets the incumbent, not the canary build."""
+        out: List[ActiveModule] = []
+        for entries in self._deployed.values():
+            mine = [mod for mod, pins in entries
+                    if pins is None or client_id in pins]
+            if mine:
+                out.append(mine[-1])
+        return tuple(out)
 
     def _emit(self, ev: AssignmentEvent) -> None:
         """Send the event over the fabric to the owning handle's sink
@@ -1328,7 +1370,22 @@ class CloudNode(Actor):
             if (spec.kind == AssignmentKind.CODE_REPLACEMENT
                     and spec.code is not None
                     and spec.target in (Target.CLIENTS, Target.BOTH)):
-                self._deployed[(spec.user_id, spec.code.slot)] = spec.code
+                # when this node is a shard, spec.client_ids was already
+                # narrowed to the shard's slice — origin_client_ids
+                # carries the submitter's original subset (empty list =
+                # genuinely fleet-wide) so the pin survives the fan-out
+                origin = spec.params.get("origin_client_ids")
+                subset = (tuple(origin) if origin is not None
+                          else spec.client_ids)
+                pins = frozenset(subset) or None
+                key = (spec.user_id, spec.code.slot)
+                if pins is None:
+                    # fleet-wide deploy supersedes every cohort pin
+                    self._deployed[key] = [(spec.code, None)]
+                else:
+                    entries = self._deployed.setdefault(key, [])
+                    entries[:] = [e for e in entries if e[1] != pins]
+                    entries.append((spec.code, pins))
             self._user_sinks[spec.assignment_id] = msg.reply_to
             self._submitted_at[spec.assignment_id] = time.time()
             if (self.max_concurrent is not None
@@ -1357,7 +1414,7 @@ class CloudNode(Actor):
                             else self.name),
                 endpoint=(my_node.transport.endpoint if my_node is not None
                           else None),
-                modules=tuple(self._deployed.values())))
+                modules=self._catchup_modules(msg.client_id)))
         elif isinstance(msg, Heartbeat):
             if msg.client_id in self.client_nodes:
                 self._last_seen[msg.client_id] = time.time()
@@ -1792,10 +1849,15 @@ class ShardAggregator(Actor):
         value = self.cloud_app.aggregate(
             self.spec,
             [TaggedResult("", it, winner or "", payload=p) for p in payloads])
+        # per-arm reports are summable exactly like hash counts: shards
+        # partition the clients, so the pointwise sum over legs IS the
+        # fleet-wide arm accounting (same exact-merge argument)
+        reports = [ev.arm_stats for ev in events if ev.arm_stats]
+        arm_stats = merge_arm_reports(reports) if reports else None
         self._out.append(IterationEvent(
             assignment_id=self.spec.assignment_id, iteration=it, value=value,
             winning_md5=winner, n_accepted=n_accepted, n_dropped=n_dropped,
-            n_stragglers=n_stragglers))
+            n_stragglers=n_stragglers, arm_stats=arm_stats))
 
     def _emit_done(self) -> None:
         dones = {leg_id: leg.done for leg_id, leg in self.legs.items()
@@ -2084,6 +2146,10 @@ class RouterNode(Actor):
         # shards report raw per-hash results; the router aggregates once
         p = {k: v for k, v in spec.params.items() if k != "cloud_method"}
         p["shard_report"] = True
+        # each leg sees only its shard's slice of client_ids, losing the
+        # fleet-wide-vs-subset distinction — preserve the submitter's
+        # original target set so shard-side catch-up pins stay correct
+        p.setdefault("origin_client_ids", list(spec.client_ids))
         return p
 
     def _fan_out(self, rec: _AsgRecord, groups: Dict[str, List[str]],
@@ -2421,6 +2487,11 @@ class Deployment(AssignmentHandle):
         self.frontend = frontend
         self.module = module
         self.client_ids = client_ids
+        # rollback() is idempotent: the first call ships install frames,
+        # every later call returns that same child handle (a retry after
+        # a slow first attempt must not re-install fleet-wide)
+        self._rollback_lock = threading.Lock()
+        self._rolled_back: Optional["Deployment"] = None
 
     @property
     def slot(self) -> str:
@@ -2440,8 +2511,14 @@ class Deployment(AssignmentHandle):
 
     def rollback(self) -> "Deployment":
         """Re-activate and re-ship the version deployed before this one
-        (instant on every target: the compiled module is still cached)."""
-        return self.frontend.rollback(self)
+        (instant on every target: the compiled module is still cached).
+
+        Idempotent: calling twice returns the same child ``Deployment``
+        without sending a second round of install frames."""
+        with self._rollback_lock:
+            if self._rolled_back is None:
+                self._rolled_back = self.frontend.rollback(self)
+            return self._rolled_back
 
 
 # ---------------------------------------------------------------------------
@@ -2549,6 +2626,228 @@ class UserFrontend:
         handle = AssignmentHandle(spec, self.node, self.cloud)
         self._submit(spec, handle)
         return handle
+
+    # -- staged rollouts --------------------------------------------------------
+    def start_rollout(self, slot: str, source: str, *,
+                      fraction: float = 0.25, seed: int = 0,
+                      health: Optional[HealthPolicy] = None,
+                      client_ids: Sequence[str] = (),
+                      watch_iterations: Optional[int] = None,
+                      params: Optional[Dict[str, Any]] = None,
+                      on_decision: Optional[Callable[[GateDecision], None]]
+                      = None) -> "RolloutPlan":
+        """Stage ``source`` into ``slot`` as a canary rollout over
+        ``fraction`` of the fleet: deploy to a seeded canary cohort,
+        watch per-arm health, then promote fleet-wide or auto-rollback
+        (``RolloutPlan.run()`` drives the whole lifecycle). The slot
+        must already have an incumbent version — that is what the
+        control cohort runs and what an unhealthy canary rolls back to.
+        """
+        ids = tuple(client_ids)
+        if not ids:
+            if self.fleet is None:
+                raise RuntimeError(
+                    "start_rollout needs explicit client_ids or a "
+                    "fleet-bound frontend (Fleet.frontend)")
+            ids = self.fleet.client_ids()
+        return RolloutPlan(self, slot, source, client_ids=ids,
+                           fraction=fraction, seed=seed, health=health,
+                           watch_iterations=watch_iterations, params=params,
+                           on_decision=on_decision)
+
+
+class RolloutPlan:
+    """One staged rollout, end to end — the orchestration (impure) half
+    of ``repro.core.rollout``:
+
+    1. deploy the candidate to the canary cohort only (subset-targeted
+       code replacement) and pin the cohort in the registry;
+    2. watch a canary+control analytics assignment, folding each
+       iteration's per-arm summaries (computed by the assignment
+       handlers from *raw*, pre-majority-filter results) into the
+       health window;
+    3. let the pure ``evaluate_gate`` decide, then promote fleet-wide
+       or auto-rollback the canary to the incumbent version,
+
+    emitting a typed ``RolloutEvent`` at every step (``events`` keeps
+    the full sequence; the node's telemetry plane counts them and dumps
+    the flight recorder on auto-rollback).
+
+    Synchronous and pull-driven: ``run()`` walks the watch handle's
+    event stream, so the lifecycle is a deterministic function of the
+    fleet's results — no wall-clock sampling. That is what lets the
+    fault-injection suite replay rollouts under seeded chaos.
+
+    Concurrency rule (single winner): if another fleet-wide
+    ``deploy_code`` lands while the gate is deciding, the rollout
+    concedes — it ships nothing and reports ``rolled_back`` with a
+    "superseded" detail, leaving the newer deploy as the slot's only
+    version in flight.
+    """
+
+    def __init__(self, frontend: UserFrontend, slot: str, source: str, *,
+                 client_ids: Sequence[str],
+                 fraction: float = 0.25, seed: int = 0,
+                 health: Optional[HealthPolicy] = None,
+                 watch_iterations: Optional[int] = None,
+                 params: Optional[Dict[str, Any]] = None,
+                 on_decision: Optional[Callable[[GateDecision], None]]
+                 = None):
+        if len(set(client_ids)) < 2:
+            raise ValueError(
+                "a staged rollout needs at least 2 registered clients "
+                "(one canary, one control)")
+        self.frontend = frontend
+        self.slot = slot
+        self.source = source
+        self.health = health if health is not None else HealthPolicy()
+        self.split = select_cohorts(client_ids, fraction, seed)
+        self.watch_iterations = (watch_iterations
+                                 if watch_iterations is not None
+                                 else self.health.window * 2)
+        self.params = dict(params or {})
+        self.on_decision = on_decision
+        self.rollout_id = _next_id("rollout")
+        self.events: List[RolloutEvent] = []
+        self.window: List[Tuple[ArmStats, ArmStats]] = []
+        self.deployment: Optional[Deployment] = None
+        self.watch: Optional[AssignmentHandle] = None
+        self.promotion: Optional[Deployment] = None
+        self.rollback_deployment: Optional[Deployment] = None
+        self.decision: Optional[GateDecision] = None
+
+    @property
+    def canary(self) -> Tuple[str, ...]:
+        return self.split.canary
+
+    @property
+    def control(self) -> Tuple[str, ...]:
+        return self.split.control
+
+    def _emit(self, kind: str, *, md5: str, version: int,
+              iteration: int = -1, detail: str = "") -> RolloutEvent:
+        ev = RolloutEvent(rollout_id=self.rollout_id, kind=kind,
+                          slot=self.slot, md5=md5, version=version,
+                          iteration=iteration, detail=detail)
+        self.events.append(ev)
+        tel = self.frontend.node.telemetry
+        if tel is not None:
+            tel.on_rollout_event(ev)
+        return ev
+
+    # -- lifecycle ----------------------------------------------------------
+    def run(self, timeout: float = 30.0) -> GateDecision:
+        """Drive the full lifecycle; returns (and stores) the terminal
+        decision. ``timeout`` bounds each wire round trip, not the
+        whole rollout."""
+        fe = self.frontend
+        reg = fe._frontend_registry
+        if reg.active_hash(fe.user_id, self.slot) is None:
+            raise ValueError(
+                f"slot {self.slot!r} has no incumbent version to canary "
+                f"against — deploy_code() it fleet-wide first")
+        dep = fe.deploy_code(self.slot, self.source,
+                             client_ids=self.split.canary)
+        self.deployment = dep
+        self._emit("canary_started", md5=dep.md5, version=dep.version,
+                   detail=(f"canary={len(self.split.canary)} "
+                           f"control={len(self.split.control)} "
+                           f"fraction={self.split.fraction} "
+                           f"seed={self.split.seed}"))
+        _, done = dep.result(timeout)
+        if done.status != Status.DONE:
+            return self._finish(
+                GateDecision.ROLLBACK,
+                f"canary install failed: {done.detail}", timeout)
+        reg.pin_cohort(fe.user_id, self.slot, self.split.canary, dep.md5)
+        decision, detail = self._watch(timeout)
+        if self.on_decision is not None:
+            # test seam: deterministic injection point between "gate
+            # decided" and "frames shipped" (e.g. a racing deploy_code)
+            self.on_decision(decision)
+        return self._finish(decision, detail, timeout)
+
+    def _watch(self, timeout: float) -> Tuple[GateDecision, str]:
+        fe = self.frontend
+        dep = self.deployment
+        assert dep is not None
+        arms = {cid: "canary" for cid in self.split.canary}
+        arms.update((cid, "control") for cid in self.split.control)
+        watch = fe.submit_analytics(
+            self.slot, iterations=self.watch_iterations,
+            client_ids=self.split.canary + self.split.control,
+            params={**self.params, "arms": arms})
+        self.watch = watch
+        decision, detail = GateDecision.WATCH, ""
+        try:
+            for ev in watch.events(timeout=timeout):
+                if not isinstance(ev, IterationEvent) \
+                        or ev.arm_stats is None:
+                    continue
+                entry = (ArmStats.from_report(ev.arm_stats.get("canary")),
+                         ArmStats.from_report(ev.arm_stats.get("control")))
+                self.window.append(entry)
+                healthy = iteration_health(entry[0], entry[1], self.health)
+                if healthy is not None:
+                    self._emit(
+                        "canary_healthy" if healthy else "canary_unhealthy",
+                        md5=dep.md5, version=dep.version,
+                        iteration=ev.iteration,
+                        detail=(f"canary {entry[0].n_results} results / "
+                                f"{entry[0].n_errors} errors, control "
+                                f"{entry[1].n_results} results"))
+                decision = evaluate_gate(self.window, self.health)
+                if decision is not GateDecision.WATCH:
+                    detail = f"gate decided at watch iteration {ev.iteration}"
+                    break
+        except queue.Empty:
+            decision = GateDecision.ROLLBACK
+            detail = (f"watch timed out after "
+                      f"{len(self.window)} iteration(s)")
+        if decision is GateDecision.WATCH:
+            # stream ended (or every entry was inconclusive) without the
+            # healthy window filling up: not enough evidence to promote
+            decision = GateDecision.ROLLBACK
+            detail = (f"watch exhausted ({self.watch_iterations} "
+                      f"iterations) without {self.health.window} "
+                      f"conclusive healthy ones")
+        if not watch.done:
+            watch.cancel()
+        return decision, detail
+
+    def _finish(self, decision: GateDecision, detail: str,
+                timeout: float) -> GateDecision:
+        fe = self.frontend
+        reg = fe._frontend_registry
+        dep = self.deployment
+        assert dep is not None
+        reg.unpin_cohort(fe.user_id, self.slot)
+        active = reg.active_hash(fe.user_id, self.slot)
+        if active != dep.md5:
+            # single-winner rule: a concurrent deploy re-activated the
+            # slot mid-rollout; ship nothing (promote frames would
+            # clobber the newer version, rollback frames would resurrect
+            # a version older than it)
+            self.decision = GateDecision.ROLLBACK
+            self._emit("rolled_back", md5=dep.md5, version=dep.version,
+                       detail=f"superseded by concurrent deploy of "
+                              f"{active}")
+            return self.decision
+        if decision is GateDecision.PROMOTE:
+            promo = fe._ship_module(dep.module, dep.target, ())
+            _, done = promo.result(timeout)
+            self.promotion = promo
+            self._emit("promoted", md5=dep.md5, version=dep.version,
+                       detail=detail or done.detail)
+        else:
+            prev = reg.rollback_prior(fe.user_id, self.slot, dep.version)
+            rb = fe._ship_module(prev, dep.target, self.split.canary)
+            _, done = rb.result(timeout)
+            self.rollback_deployment = rb
+            self._emit("rolled_back", md5=prev.md5, version=prev.version,
+                       detail=detail or done.detail)
+        self.decision = decision
+        return decision
 
 
 @dataclass
@@ -2811,6 +3110,23 @@ class Fleet:
         entry point (the cloud node, or the router when sharded)."""
         return UserFrontend(user_id, self.user_node, self.cloud_addr,
                             slot_specs, fleet=self)
+
+    def client_ids(self) -> Tuple[str, ...]:
+        """Currently registered client ids, sorted — the population a
+        ``RolloutPlan`` splits into canary and control cohorts. Reads the
+        server's live registration table when the server actor is local
+        (so evicted clients drop out), else falls back to the launch-time
+        roster."""
+        if self.server is not None:
+            # RouterNode keeps `clients`, CloudNode keeps `client_nodes`
+            table = getattr(self.server, "clients", None)
+            if table is None:
+                table = getattr(self.server, "client_nodes", None)
+            if table:
+                return tuple(sorted(table))
+        if self.client_addrs:
+            return tuple(sorted(self.client_addrs))
+        return tuple(sorted(self.client_apps))
 
     # -- observability ------------------------------------------------------
     def pull_telemetry(self, timeout: float = 5.0

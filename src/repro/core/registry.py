@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import threading
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core import codec
 from repro.core.module import ActiveModule, ResolvedModule, compile_module
@@ -101,6 +101,10 @@ class ActiveCodeRegistry:
         self._compiled: Dict[str, ResolvedModule] = {}  # by md5
         self._active: Dict[Tuple[str, str], str] = {}   # (user, slot) -> md5
         self._slot_specs: Dict[str, SlotSpec] = {}
+        # staged rollouts: per-(user, slot) cohort pins — client_id ->
+        # md5 overriding the slot's active version for that client while
+        # a canary is in flight (see cohort pinning API below)
+        self._cohort_pins: Dict[Tuple[str, str], Dict[str, str]] = {}
         self._epoch = 0
         self.store_root = store_root
 
@@ -229,4 +233,57 @@ class ActiveCodeRegistry:
 
     def active_hash(self, user_id: str, slot: str) -> Optional[str]:
         with self._lock:
+            return self._active.get((user_id, slot))
+
+    # -- cohort pinning (staged rollouts) -----------------------------------
+    # While a canary is in flight the slot runs two versions at once: the
+    # canary cohort on the candidate, everyone else on the incumbent. The
+    # pin table records which clients are deliberately off the slot's
+    # active version, so orchestration (RolloutPlan) and catch-up paths
+    # can answer "which version should THIS client run?" instead of
+    # assuming active == everywhere. Pins are bookkeeping only — they
+    # never change what ``resolve``/``active_hash`` return.
+
+    def pin_cohort(self, user_id: str, slot: str,
+                   client_ids: Sequence[str], md5: str) -> None:
+        """Pin ``client_ids`` of (user, slot) to ``md5`` (a deployed
+        version of that slot); bumps the epoch so watchers notice."""
+        with self._lock:
+            if all(m.md5 != md5
+                   for m in self._modules.get((user_id, slot), ())):
+                raise KeyError(f"no version {md5} for {user_id}/{slot}")
+            pins = self._cohort_pins.setdefault((user_id, slot), {})
+            for cid in client_ids:
+                pins[cid] = md5
+            self._epoch += 1
+
+    def unpin_cohort(self, user_id: str, slot: str,
+                     client_ids: Optional[Sequence[str]] = None) -> None:
+        """Drop pins for ``client_ids`` (default: all) of (user, slot) —
+        the cohort rejoins the slot's single active version."""
+        with self._lock:
+            pins = self._cohort_pins.get((user_id, slot))
+            if not pins:
+                return
+            if client_ids is None:
+                pins.clear()
+            else:
+                for cid in client_ids:
+                    pins.pop(cid, None)
+            if not pins:
+                self._cohort_pins.pop((user_id, slot), None)
+            self._epoch += 1
+
+    def cohort_pins(self, user_id: str, slot: str) -> Dict[str, str]:
+        with self._lock:
+            return dict(self._cohort_pins.get((user_id, slot), ()))
+
+    def pinned_hash(self, user_id: str, slot: str,
+                    client_id: str) -> Optional[str]:
+        """The version ``client_id`` should run: its cohort pin if one
+        exists, else the slot's active version."""
+        with self._lock:
+            pins = self._cohort_pins.get((user_id, slot))
+            if pins and client_id in pins:
+                return pins[client_id]
             return self._active.get((user_id, slot))

@@ -1,0 +1,290 @@
+"""Staged rollouts: the pure half of canary deploys with health-gated
+promotion and auto-rollback.
+
+This module holds everything about a rollout that can be computed
+without a fleet, so the promotion logic is exhaustively checkable in
+isolation (property tests drive these functions directly):
+
+* ``select_cohorts`` — deterministic, seeded split of the registered
+  clients into a canary cohort (~x% of the fleet) and its control.
+  Selection ranks clients by a per-client seeded hash, so the split is
+  a pure function of (client set, fraction, seed): re-registration
+  churn, duplicate ids, and listing order cannot reshuffle it.
+* ``ArmStats`` / ``arm_report`` / ``merge_arm_reports`` — the per-arm
+  iteration summaries. Assignment handlers build one report per
+  iteration from their raw (pre-majority-filter) results; shard legs
+  attach it to their ``IterationEvent`` and the router's aggregator
+  sums the reports across legs — arm accounting stays exact under
+  sharding for the same reason the md5-majority merge does (sums of
+  per-leg counts equal the flat counts).
+* ``evaluate_gate`` — the health gate itself: a pure function from a
+  window of per-arm summaries to PROMOTE / ROLLBACK / WATCH.
+* ``RolloutEvent`` — the typed, wire-registered event a
+  ``RolloutPlan`` (``core/fleet.py``) emits as the rollout advances.
+
+Gate semantics (see ``HealthPolicy``): an iteration is *unhealthy* if
+the canary's error rate exceeds ``max_error_rate`` or the canary mean
+diverges from the control mean by more than ``max_divergence``
+(relative). Any unhealthy iteration anywhere in the window decides
+ROLLBACK; ``window`` conclusive healthy iterations with no unhealthy
+one decide PROMOTE; anything else keeps watching. Iterations where
+either arm returned fewer than ``min_results`` results (stragglers,
+mid-watch re-homing) are *inconclusive*: they neither trip the gate
+nor count toward the healthy window, so a canary shard crash cannot
+corrupt the health signal. PROMOTE requires zero unhealthy entries and
+ROLLBACK requires at least one, so no window can decide both.
+"""
+from __future__ import annotations
+
+import enum
+import hashlib
+from dataclasses import dataclass
+from typing import Any, Dict, Mapping, Optional, Sequence, Tuple
+
+from repro.core import codec
+
+# ---------------------------------------------------------------------------
+# Cohort selection
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class CohortSplit:
+    """A deterministic canary/control partition of the registered
+    clients (both sorted; disjoint; union = input set)."""
+
+    canary: Tuple[str, ...]
+    control: Tuple[str, ...]
+    fraction: float = 0.0
+    seed: int = 0
+
+
+def _rank_key(seed: int, client_id: str) -> str:
+    return hashlib.md5(f"{seed}:{client_id}".encode()).hexdigest()
+
+
+def select_cohorts(client_ids: Sequence[str], fraction: float,
+                   seed: int = 0) -> CohortSplit:
+    """Pick ``round(fraction * n)`` canary clients (clamped so neither
+    cohort is empty for 0 < fraction < 1) by seeded-hash rank.
+
+    Properties (property-tested in tests/test_rollout_props.py):
+    deterministic for a given (set, fraction, seed); canary and control
+    are disjoint and cover the set; canary size is within +-1 of
+    ``fraction * n``; stable under churn re-registration (duplicates
+    and ordering of ``client_ids`` never change the split).
+    """
+    if not 0.0 <= fraction <= 1.0:
+        raise ValueError(f"canary fraction must be in [0, 1], got {fraction}")
+    ids = sorted(set(client_ids))
+    n = len(ids)
+    k = int(round(fraction * n))
+    if n > 0 and fraction > 0.0 and k == 0:
+        k = 1                      # a nonzero canary ask always canaries
+    if n > 1 and fraction < 1.0 and k == n:
+        k = n - 1                  # ... but never eats the whole control
+    ranked = sorted(ids, key=lambda c: (_rank_key(seed, c), c))
+    return CohortSplit(canary=tuple(sorted(ranked[:k])),
+                       control=tuple(sorted(ranked[k:])),
+                       fraction=fraction, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# Per-arm iteration summaries
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ArmStats:
+    """One arm's summary of one committed iteration, in summable form
+    (sums, not means, so per-shard reports merge exactly)."""
+
+    n_results: int = 0
+    n_errors: int = 0
+    value_sum: float = 0.0
+    value_n: int = 0               # results with a numeric payload
+
+    @property
+    def error_rate(self) -> float:
+        return self.n_errors / self.n_results if self.n_results else 0.0
+
+    @property
+    def mean(self) -> Optional[float]:
+        return self.value_sum / self.value_n if self.value_n else None
+
+    @staticmethod
+    def from_report(d: Optional[Mapping[str, Any]]) -> "ArmStats":
+        if not d:
+            return ArmStats()
+        return ArmStats(n_results=int(d.get("n", 0)),
+                        n_errors=int(d.get("errors", 0)),
+                        value_sum=float(d.get("value_sum", 0.0)),
+                        value_n=int(d.get("value_n", 0)))
+
+
+def arm_report(results: Sequence[Any],
+               arm_of: Mapping[str, str]) -> Dict[str, Dict[str, float]]:
+    """Summarize one iteration's *raw* results (before the majority
+    filter — a canary running different code must not vanish from its
+    own health signal) into per-arm sums. ``arm_of`` maps client_id ->
+    arm name; results may also carry their own ``arm`` tag (set by the
+    client from its TaskSpec), which wins when present."""
+    out: Dict[str, Dict[str, float]] = {}
+    for r in results:
+        arm = getattr(r, "arm", "") or arm_of.get(r.client_id, "")
+        if not arm:
+            continue
+        s = out.setdefault(arm, {"n": 0, "errors": 0,
+                                 "value_sum": 0.0, "value_n": 0})
+        s["n"] += 1
+        if r.code_md5.startswith("error"):
+            s["errors"] += 1
+        elif isinstance(r.payload, (int, float)) \
+                and not isinstance(r.payload, bool):
+            s["value_sum"] += float(r.payload)
+            s["value_n"] += 1
+    return out
+
+
+def merge_arm_reports(reports: Sequence[Mapping[str, Mapping[str, Any]]]
+                      ) -> Dict[str, Dict[str, float]]:
+    """Pointwise sum of per-leg arm reports — the arm-accounting mirror
+    of ``merge_iteration_exact``: summing per-shard sums equals the
+    flat, unpartitioned report."""
+    out: Dict[str, Dict[str, float]] = {}
+    for rep in reports:
+        for arm, s in rep.items():
+            t = out.setdefault(arm, {"n": 0, "errors": 0,
+                                     "value_sum": 0.0, "value_n": 0})
+            t["n"] += int(s.get("n", 0))
+            t["errors"] += int(s.get("errors", 0))
+            t["value_sum"] += float(s.get("value_sum", 0.0))
+            t["value_n"] += int(s.get("value_n", 0))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# The health gate (pure)
+# ---------------------------------------------------------------------------
+
+
+class GateDecision(str, enum.Enum):
+    PROMOTE = "promote"
+    ROLLBACK = "rollback"
+    WATCH = "watch"
+
+
+@dataclass(frozen=True)
+class HealthPolicy:
+    """What "healthy" means and how much evidence promotion needs.
+
+    ``window`` — conclusive healthy iterations required to promote;
+    ``max_error_rate`` — largest tolerated canary error fraction per
+    iteration (default: any canary error is unhealthy);
+    ``max_divergence`` — largest tolerated relative divergence of the
+    canary mean from the control mean (skipped when either arm has no
+    numeric payloads);
+    ``min_results`` — per-arm floor below which an iteration is
+    inconclusive rather than judged.
+    """
+
+    window: int = 3
+    max_error_rate: float = 0.0
+    max_divergence: float = 0.5
+    min_results: int = 1
+
+
+WindowEntry = Tuple[ArmStats, ArmStats]            # (canary, control)
+
+_EPS = 1e-12
+
+
+def iteration_health(canary: ArmStats, control: ArmStats,
+                     policy: HealthPolicy) -> Optional[bool]:
+    """One iteration's verdict: True (healthy), False (unhealthy), or
+    None (inconclusive — too few results in either arm to judge)."""
+    if (canary.n_results < policy.min_results
+            or control.n_results < policy.min_results):
+        return None
+    if canary.error_rate > policy.max_error_rate + _EPS:
+        return False
+    c_mean, k_mean = canary.mean, control.mean
+    if c_mean is not None and k_mean is not None:
+        base = max(abs(k_mean), 1e-9)
+        if abs(c_mean - k_mean) / base > policy.max_divergence + _EPS:
+            return False
+    return True
+
+
+def evaluate_gate(window: Sequence[WindowEntry],
+                  policy: HealthPolicy) -> GateDecision:
+    """The gate: pure function of the accumulated watch window.
+
+    ROLLBACK iff any entry is unhealthy; PROMOTE iff no entry is
+    unhealthy and at least ``policy.window`` entries are conclusively
+    healthy; WATCH otherwise. The two terminal conditions are mutually
+    exclusive by construction, and improving any entry's health (fewer
+    errors, less divergence) can never turn a PROMOTE into a ROLLBACK.
+    """
+    healths = [iteration_health(c, k, policy) for c, k in window]
+    if any(h is False for h in healths):
+        return GateDecision.ROLLBACK
+    if sum(1 for h in healths if h is True) >= max(1, policy.window):
+        return GateDecision.PROMOTE
+    return GateDecision.WATCH
+
+
+# ---------------------------------------------------------------------------
+# RolloutEvent (wire-registered)
+# ---------------------------------------------------------------------------
+
+ROLLOUT_EVENT_KINDS = ("canary_started", "canary_healthy",
+                       "canary_unhealthy", "promoted", "rolled_back")
+
+
+@dataclass(frozen=True)
+class RolloutEvent:
+    """One step of a staged rollout, as surfaced on the RolloutPlan's
+    event stream (and, like every fabric event, wire-codec
+    round-trippable so a remote orchestrator can stream it)."""
+
+    rollout_id: str
+    kind: str                      # one of ROLLOUT_EVENT_KINDS
+    slot: str
+    md5: str                       # the candidate module under rollout
+    version: int
+    iteration: int = -1            # watch iteration (health events only)
+    detail: str = ""
+
+    @property
+    def terminal(self) -> bool:
+        return self.kind in ("promoted", "rolled_back")
+
+    def to_wire_dict(self) -> Dict[str, Any]:
+        return {
+            "rollout_id": self.rollout_id,
+            "kind": self.kind,
+            "slot": self.slot,
+            "md5": self.md5,
+            "version": self.version,
+            "iteration": self.iteration,
+            "detail": self.detail,
+        }
+
+    @staticmethod
+    def from_wire_dict(d: Dict[str, Any]) -> "RolloutEvent":
+        kind = d["kind"]
+        if kind not in ROLLOUT_EVENT_KINDS:
+            raise ValueError(f"unknown rollout event kind: {kind!r}")
+        return RolloutEvent(
+            rollout_id=d["rollout_id"],
+            kind=kind,
+            slot=d["slot"],
+            md5=d["md5"],
+            version=int(d["version"]),
+            iteration=int(d["iteration"]),
+            detail=d["detail"],
+        )
+
+
+codec.register_message("rollout_event", RolloutEvent)

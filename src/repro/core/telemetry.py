@@ -165,6 +165,9 @@ class NodeTelemetry:
         # won by that md5 pops it and parents a "first_commit" span there
         self._pending_effects: Dict[str, TraceContext] = {}
         self._effects_lock = threading.Lock()
+        # staged rollouts: in-flight canary count behind the
+        # rollouts_active gauge (see on_rollout_event)
+        self._rollouts_active = 0
 
     # -- deploy-to-effect ---------------------------------------------------
     def register_pending_effect(self, md5: str, ctx: TraceContext) -> None:
@@ -178,6 +181,28 @@ class NodeTelemetry:
     # -- spans --------------------------------------------------------------
     def span(self, name: str, **attrs: Any):
         return self.spans.span(name, **attrs)
+
+    # -- staged rollouts ----------------------------------------------------
+    def on_rollout_event(self, ev: Any) -> None:
+        """Rollout-state bookkeeping on the orchestrating node: one
+        counter per event kind, a ``rollouts_active`` gauge, terminal
+        decisions under ``rollout_decisions.*``, and — on auto-rollback
+        — a flight-recorder dump so the frames around the unhealthy
+        canary are preserved for post-mortem. ``ev`` is any object with
+        the ``RolloutEvent`` surface (kind / rollout_id / slot / md5 /
+        detail); duck-typed so telemetry stays import-light."""
+        kind = ev.kind
+        self.metrics.inc(f"rollout.{kind}")
+        if kind == "canary_started":
+            self._rollouts_active += 1
+        elif kind in ("promoted", "rolled_back"):
+            self._rollouts_active = max(0, self._rollouts_active - 1)
+            self.metrics.inc(f"rollout_decisions.{kind}")
+        self.metrics.set_gauge("rollouts_active",
+                               float(self._rollouts_active))
+        if kind == "rolled_back":
+            self.dump(f"rollout-auto-rollback:{ev.rollout_id}:"
+                      f"{ev.slot}@{ev.md5}: {ev.detail}")
 
     # -- envelope path hooks (called from Node.route/_deliver) --------------
     def on_send(self, tag: str, peer: Optional[str], nbytes: int,

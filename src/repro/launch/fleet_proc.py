@@ -409,6 +409,94 @@ def run_shard_failover_smoke(n_clients: int = 6, shards: int = 3,
         fleet.shutdown()
 
 
+_ROLLOUT_V1 = """
+def run(xs):
+    return 1.0
+"""
+
+# identical math, different md5 — the healthy canary candidate
+_ROLLOUT_V2 = """
+def run(xs):
+    # tuned build, identical output
+    return 1.0
+"""
+
+_ROLLOUT_BAD = """
+def run(xs):
+    raise RuntimeError('canary build is broken')
+"""
+
+
+def run_rollout_smoke(n_clients: int = 6, shards: int = 2,
+                      verbose: bool = True) -> int:
+    """The staged-rollout acceptance scenario over real processes: on a
+    router + shard-process fleet of TCP clients, (a) canary an unhealthy
+    build and require auto-rollback to leave every client on the
+    incumbent, then (b) canary a healthy build and require promotion to
+    land it fleet-wide. Returns 0 on success (the CI
+    ``canary-rollout-smoke`` contract)."""
+    from repro.core.assignment import Status
+    from repro.core.rollout import GateDecision, HealthPolicy
+
+    def say(msg: str) -> None:
+        if verbose:
+            print(f"[fleet_proc] {msg}", flush=True)
+
+    fleet = spawn_tcp_fleet(n_clients, shards=shards)
+    say(f"{n_clients} client processes across {shards} shard processes")
+    try:
+        fe = fleet.frontend("ci")
+        v1 = fe.deploy_code("rollout_mean", _ROLLOUT_V1)
+        _, done = v1.result(timeout=120.0)
+        assert done.status == Status.DONE, f"deploy failed: {done.detail}"
+        assert f"{n_clients}/{n_clients}" in done.detail, done.detail
+        say(f"incumbent v1 ({v1.md5[:8]}) on all {n_clients} clients")
+
+        # (a) unhealthy canary: errors trip the gate, auto-rollback
+        bad = fe.start_rollout("rollout_mean", _ROLLOUT_BAD, fraction=0.34,
+                               seed=7, health=HealthPolicy(window=2))
+        say(f"canarying broken build to {len(bad.canary)} clients "
+            f"({', '.join(bad.canary)})")
+        decision = bad.run(timeout=120.0)
+        assert decision is GateDecision.ROLLBACK, \
+            f"broken canary was not rolled back: {decision}"
+        kinds = [e.kind for e in bad.events]
+        assert "canary_unhealthy" in kinds and kinds[-1] == "rolled_back", \
+            f"unexpected rollout events: {kinds}"
+        results, done = fe.submit_analytics(
+            "rollout_mean", iterations=1,
+            params={"n_values": 16}).result(timeout=120.0)
+        assert done.status == Status.DONE, done.detail
+        assert results[0].winning_md5 == v1.md5, \
+            "fleet not restored to the incumbent after auto-rollback"
+        assert results[0].n_accepted == n_clients, results[0]
+        say(f"auto-rollback verified: all {n_clients} clients back on "
+            f"v1 ({v1.md5[:8]})")
+
+        # (b) healthy canary: the gate fills its window, then promotes
+        good = fe.start_rollout("rollout_mean", _ROLLOUT_V2, fraction=0.34,
+                                seed=7, health=HealthPolicy(window=2))
+        decision = good.run(timeout=120.0)
+        assert decision is GateDecision.PROMOTE, \
+            f"healthy canary was not promoted: {decision}"
+        kinds = [e.kind for e in good.events]
+        assert kinds[-1] == "promoted" and "canary_unhealthy" not in kinds, \
+            f"unexpected rollout events: {kinds}"
+        results, done = fe.submit_analytics(
+            "rollout_mean", iterations=1,
+            params={"n_values": 16}).result(timeout=120.0)
+        assert done.status == Status.DONE, done.detail
+        assert results[0].winning_md5 == good.deployment.md5, \
+            "promotion did not land fleet-wide"
+        assert results[0].n_accepted == n_clients, results[0]
+        say(f"promotion verified: all {n_clients} clients on "
+            f"v2 ({good.deployment.md5[:8]})")
+        say("staged rollout (auto-rollback + promote) over TCP: PASS")
+        return 0
+    finally:
+        fleet.shutdown()
+
+
 def run_smoke(n_clients: int = 3, iterations: int = 3, shards: int = 1,
               churn: bool = False, verbose: bool = True,
               json_clients: Sequence[str] = ()) -> int:
@@ -598,6 +686,10 @@ def main(argv: Optional[list] = None) -> int:
     ap.add_argument("--shards", type=int, default=1)
     ap.add_argument("--churn", action="store_true")
     ap.add_argument("--shard-churn", action="store_true")
+    ap.add_argument("--rollout", action="store_true",
+                    help="run the staged-rollout scenario: an unhealthy "
+                         "canary auto-rolls-back, then a healthy canary "
+                         "promotes fleet-wide")
     ap.add_argument("--trace-dump", action="store_true",
                     help="deploy over TCP, then assemble and print the "
                          "deploy trace pulled from every node")
@@ -612,6 +704,8 @@ def main(argv: Optional[list] = None) -> int:
     args = ap.parse_args(argv)
     if args.shard_churn:
         return run_shard_failover_smoke(args.clients, shards=args.shards)
+    if args.rollout:
+        return run_rollout_smoke(max(args.clients, 4), shards=args.shards)
     if args.trace_dump or args.metrics_dump:
         return run_telemetry_smoke(
             max(args.clients, 4), shards=args.shards,

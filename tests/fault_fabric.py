@@ -26,7 +26,7 @@ from __future__ import annotations
 import random
 import threading
 from dataclasses import dataclass
-from typing import Callable, List, Optional, Set, Tuple
+from typing import Callable, List, Optional, Sequence, Set, Tuple
 
 from repro.core import wirefmt
 from repro.core.transport import Transport
@@ -103,6 +103,13 @@ class FaultPlan:
         """Drop everything between nodes ``a`` and ``b`` until heal()."""
         with self._lock:
             self._partitions.add(frozenset((a, b)))
+
+    def isolate(self, node: str, peers: Sequence[str]) -> None:
+        """Partition ``node`` from every peer in one call — the shape of
+        a real outage (one box falls off the network, not one link).
+        Heal with ``heal()`` or per-pair ``heal(node, peer)``."""
+        for p in peers:
+            self.partition(node, p)
 
     def heal(self, a: Optional[str] = None, b: Optional[str] = None) -> None:
         """Remove one partition (or all of them with no arguments)."""

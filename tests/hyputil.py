@@ -1,0 +1,23 @@
+"""Shared gate for the hypothesis-based property suites.
+
+Locally, hypothesis is optional: suites that need it skip with a clear
+reason when the package is absent (the classic ``importorskip``).
+In CI it is mandatory: the workflow sets ``REPRO_REQUIRE_HYPOTHESIS=1``
+after installing the ``test`` extras, turning a missing install into a
+hard failure instead of a silent skip — so the property suites can
+never quietly drop out of the build again.
+"""
+import importlib
+import os
+
+import pytest
+
+
+def require_hypothesis():
+    """Import and return the ``hypothesis`` module, skipping the calling
+    module when it is absent — unless REPRO_REQUIRE_HYPOTHESIS is set,
+    in which case absence is a test failure (CI must run these)."""
+    if os.environ.get("REPRO_REQUIRE_HYPOTHESIS"):
+        return importlib.import_module("hypothesis")
+    return pytest.importorskip(
+        "hypothesis", reason="property tests need the hypothesis package")

@@ -38,6 +38,7 @@ from repro.core.fleet import (
     TaskDone,
 )
 from repro.core.module import ActiveModule
+from repro.core.rollout import RolloutEvent
 from repro.core.telemetry import TelemetryPull, TelemetrySnapshot
 from repro.core.wirefmt import Hello, HelloAck
 
@@ -106,6 +107,9 @@ def _examples():
             DeployEvent("asg-4", "slot", "ab" * 16, 1, Target.CLIENTS, 2, 2),
             IterationEvent("asg-4", 0, [0.5], "ab" * 16, 2, 0, 0),
             DoneEvent("asg-4", Status.DONE, "2/2 clients installed"))),
+        "rollout_event": RolloutEvent("rollout-000007", "canary_unhealthy",
+                                      "slot", "ab" * 16, 2, iteration=1,
+                                      detail="canary 2 results / 1 errors"),
         "telemetry_pull": TelemetryPull("pull-0-aabb", "collector@user"),
         "telemetry_snapshot": TelemetrySnapshot(
             "c000", "pull-0-aabb",

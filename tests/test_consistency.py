@@ -4,8 +4,9 @@ import string
 
 import pytest
 
-pytest.importorskip(
-    "hypothesis", reason="property tests need the hypothesis package")
+from hyputil import require_hypothesis
+
+require_hypothesis()
 from hypothesis import given, settings, strategies as st
 
 from repro.core.consistency import (

@@ -4,8 +4,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytest.importorskip(
-    "hypothesis", reason="property tests need the hypothesis package")
+from hyputil import require_hypothesis
+
+require_hypothesis()
 from hypothesis import given, settings, strategies as st
 from hypothesis.extra import numpy as hnp
 

@@ -1,0 +1,393 @@
+"""Staged rollouts: cohort selection, the pure health gate, registry
+cohort pins, and the full canary lifecycle over a live fleet — promote
+on a healthy window, auto-rollback on an unhealthy one — plus the
+idempotent-rollback regression on plain deployments.
+
+Non-hypothesis coverage of the same properties the property suites
+drive (tests/test_rollout_props.py): these seeded spot checks run even
+where hypothesis is not installed, so the gate logic is never entirely
+unguarded locally.
+"""
+import pytest
+
+from repro.core.fleet import Fleet, RolloutPlan
+from repro.core.registry import ActiveCodeRegistry
+from repro.core.rollout import (
+    ArmStats,
+    GateDecision,
+    HealthPolicy,
+    RolloutEvent,
+    arm_report,
+    evaluate_gate,
+    iteration_health,
+    merge_arm_reports,
+    select_cohorts,
+)
+from repro.core.consistency import TaggedResult
+
+V1 = "def run(xs):\n    return 1.0\n"
+# same output as V1, different md5 — a healthy canary candidate
+V2 = "def run(xs):\n    # tuned build, identical math\n    return 1.0\n"
+VBAD = "def run(xs):\n    raise RuntimeError('boom')\n"
+VDIVERGENT = "def run(xs):\n    return 100.0\n"
+
+
+# ---------------------------------------------------------------------------
+# cohort selection (pure)
+# ---------------------------------------------------------------------------
+
+
+def _ids(n):
+    return [f"c{i:03d}" for i in range(n)]
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_cohorts_deterministic_disjoint_and_sized(seed):
+    ids = _ids(20)
+    split = select_cohorts(ids, 0.25, seed)
+    again = select_cohorts(ids, 0.25, seed)
+    assert split == again
+    assert not set(split.canary) & set(split.control)
+    assert sorted(split.canary + split.control) == ids
+    assert abs(len(split.canary) - 0.25 * 20) <= 1
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_cohorts_stable_under_churn_reregistration(seed):
+    """Duplicated ids and arbitrary listing order (what a re-registering
+    client looks like to the roster) never reshuffle the split."""
+    ids = _ids(12)
+    split = select_cohorts(ids, 0.3, seed)
+    churned = list(reversed(ids)) + ids[3:7]      # dupes + reordering
+    assert select_cohorts(churned, 0.3, seed) == split
+
+
+def test_cohorts_clamped_never_empty():
+    ids = _ids(4)
+    tiny = select_cohorts(ids, 0.01, seed=1)
+    assert len(tiny.canary) == 1                  # nonzero ask -> 1 canary
+    huge = select_cohorts(ids, 0.99, seed=1)
+    assert len(huge.control) == 1                 # ... but never no control
+    assert select_cohorts(ids, 0.0, seed=1).canary == ()
+    assert select_cohorts(ids, 1.0, seed=1).control == ()
+
+
+def test_cohorts_rejects_bad_fraction():
+    with pytest.raises(ValueError):
+        select_cohorts(_ids(4), 1.5)
+
+
+# ---------------------------------------------------------------------------
+# arm accounting (pure)
+# ---------------------------------------------------------------------------
+
+
+def _res(cid, md5, payload, arm=""):
+    return TaggedResult(cid, 0, md5, payload=payload, arm=arm)
+
+
+def test_arm_report_counts_errors_and_values():
+    arms = {"c000": "canary", "c001": "control", "c002": "control"}
+    rep = arm_report(
+        [_res("c000", "error:RuntimeError: boom", None),
+         _res("c001", "aa" * 16, 2.0),
+         _res("c002", "aa" * 16, 4.0),
+         _res("c999", "aa" * 16, 9.0)],        # not in any arm: ignored
+        arms)
+    canary = ArmStats.from_report(rep["canary"])
+    control = ArmStats.from_report(rep["control"])
+    assert (canary.n_results, canary.n_errors) == (1, 1)
+    assert (control.n_results, control.n_errors) == (2, 0)
+    assert control.mean == 3.0
+    assert canary.mean is None                  # no numeric payloads
+
+
+def test_arm_report_result_tag_wins_over_roster():
+    """A result's own arm tag (set by the client from its TaskSpec)
+    beats the roster map — re-homed legs keep correct arm accounting
+    even when the roster snapshot is stale."""
+    rep = arm_report([_res("c000", "aa" * 16, 1.0, arm="canary")],
+                     {"c000": "control"})
+    assert "canary" in rep and "control" not in rep
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_merged_shard_reports_equal_flat_report(seed):
+    """Arm accounting is exact under sharding: summing per-shard
+    reports equals the flat report (seeded spot check of the
+    hypothesis property)."""
+    import random
+    rng = random.Random(seed)
+    arms = {f"c{i:03d}": ("canary" if i % 3 == 0 else "control")
+            for i in range(15)}
+    results = [_res(cid, "error" if rng.random() < 0.3 else "aa" * 16,
+                    rng.uniform(-5, 5)) for cid in arms]
+    flat = arm_report(results, arms)
+    shards = [[], [], []]
+    for r in results:
+        shards[rng.randrange(3)].append(r)
+    merged = merge_arm_reports([arm_report(s, arms) for s in shards])
+    assert merged == flat
+
+
+# ---------------------------------------------------------------------------
+# the health gate (pure)
+# ---------------------------------------------------------------------------
+
+H = HealthPolicy(window=3)
+HEALTHY = (ArmStats(4, 0, 4.0, 4), ArmStats(12, 0, 12.0, 12))
+ERRORED = (ArmStats(4, 1, 3.0, 3), ArmStats(12, 0, 12.0, 12))
+DIVERGED = (ArmStats(4, 0, 400.0, 4), ArmStats(12, 0, 12.0, 12))
+THIN = (ArmStats(0, 0, 0.0, 0), ArmStats(12, 0, 12.0, 12))
+
+
+def test_iteration_health_verdicts():
+    assert iteration_health(*HEALTHY, H) is True
+    assert iteration_health(*ERRORED, H) is False
+    assert iteration_health(*DIVERGED, H) is False
+    assert iteration_health(*THIN, H) is None   # inconclusive, not judged
+
+
+def test_gate_promotes_after_window_of_healthy():
+    assert evaluate_gate([HEALTHY] * 2, H) is GateDecision.WATCH
+    assert evaluate_gate([HEALTHY] * 3, H) is GateDecision.PROMOTE
+
+
+def test_gate_rolls_back_on_any_unhealthy():
+    assert evaluate_gate([HEALTHY, ERRORED], H) is GateDecision.ROLLBACK
+    assert evaluate_gate([HEALTHY] * 5 + [DIVERGED], H) \
+        is GateDecision.ROLLBACK
+
+
+def test_gate_inconclusive_entries_neither_trip_nor_count():
+    """A crashed canary shard mid-watch shows up as thin iterations;
+    they must not fail the canary, and must not count as evidence."""
+    assert evaluate_gate([THIN] * 10, H) is GateDecision.WATCH
+    assert evaluate_gate([HEALTHY, THIN, HEALTHY, THIN, HEALTHY], H) \
+        is GateDecision.PROMOTE
+
+
+def test_gate_never_promotes_and_rolls_back():
+    """PROMOTE needs zero unhealthy entries, ROLLBACK needs one — no
+    window can satisfy both (seeded sweep; the hypothesis suite searches
+    the same space exhaustively)."""
+    import random
+    rng = random.Random(7)
+    entries = [HEALTHY, ERRORED, DIVERGED, THIN]
+    for _ in range(200):
+        window = [entries[rng.randrange(4)]
+                  for _ in range(rng.randrange(1, 8))]
+        d = evaluate_gate(window, H)
+        unhealthy = any(
+            iteration_health(c, k, H) is False for c, k in window)
+        if d is GateDecision.PROMOTE:
+            assert not unhealthy
+        if unhealthy:
+            assert d is GateDecision.ROLLBACK
+
+
+# ---------------------------------------------------------------------------
+# registry cohort pins
+# ---------------------------------------------------------------------------
+
+
+def test_registry_cohort_pin_lifecycle():
+    reg = ActiveCodeRegistry()
+    m1 = reg.deploy("u1", "score", V1)
+    m2 = reg.deploy("u1", "score", V2)
+    reg.rollback("u1", "score", m1.md5)           # incumbent active again
+    reg.pin_cohort("u1", "score", ["c000", "c001"], m2.md5)
+    assert reg.pinned_hash("u1", "score", "c000") == m2.md5
+    assert reg.pinned_hash("u1", "score", "c777") == m1.md5
+    assert reg.cohort_pins("u1", "score") == {"c000": m2.md5,
+                                              "c001": m2.md5}
+    # pins are bookkeeping only: resolution is unchanged
+    assert reg.active_hash("u1", "score") == m1.md5
+    reg.unpin_cohort("u1", "score", ["c000"])
+    assert reg.pinned_hash("u1", "score", "c000") == m1.md5
+    reg.unpin_cohort("u1", "score")
+    assert reg.cohort_pins("u1", "score") == {}
+
+
+def test_registry_pin_requires_deployed_version():
+    reg = ActiveCodeRegistry()
+    reg.deploy("u1", "score", V1)
+    with pytest.raises(KeyError):
+        reg.pin_cohort("u1", "score", ["c000"], "ff" * 16)
+
+
+def test_registry_pin_bumps_epoch():
+    reg = ActiveCodeRegistry()
+    m = reg.deploy("u1", "score", V1)
+    e0 = reg.epoch
+    reg.pin_cohort("u1", "score", ["c000"], m.md5)
+    assert reg.epoch > e0
+    e1 = reg.epoch
+    reg.unpin_cohort("u1", "score")
+    assert reg.epoch > e1
+
+
+# ---------------------------------------------------------------------------
+# rollout events
+# ---------------------------------------------------------------------------
+
+
+def test_rollout_event_wire_round_trip_rejects_unknown_kind():
+    ev = RolloutEvent("rollout-1", "promoted", "score", "ab" * 16, 2)
+    assert RolloutEvent.from_wire_dict(ev.to_wire_dict()) == ev
+    bad = ev.to_wire_dict() | {"kind": "exploded"}
+    with pytest.raises(ValueError):
+        RolloutEvent.from_wire_dict(bad)
+
+
+# ---------------------------------------------------------------------------
+# full lifecycle over a live fleet
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture
+def fleet():
+    f = Fleet.create(8, seed=1)
+    yield f
+    f.shutdown()
+
+
+def _eventkinds(plan):
+    return [e.kind for e in plan.events]
+
+
+def test_healthy_canary_promotes_fleet_wide(fleet):
+    fe = fleet.frontend("u1")
+    fe.deploy_code("score", V1).result(10.0)
+    plan = fe.start_rollout("score", V2, fraction=0.25, seed=3,
+                            health=HealthPolicy(window=2))
+    assert len(plan.canary) == 2 and len(plan.control) == 6
+    assert plan.run(timeout=10.0) is GateDecision.PROMOTE
+    assert _eventkinds(plan) == ["canary_started", "canary_healthy",
+                                 "canary_healthy", "promoted"]
+    # fleet-wide effect: every client now commits the candidate version
+    iters, done = fe.submit_analytics("score", iterations=1).result(10.0)
+    assert iters[0].winning_md5 == plan.deployment.md5
+    assert iters[0].n_accepted == 8
+    # pins cleared once the rollout is terminal
+    assert fe._frontend_registry.cohort_pins("u1", "score") == {}
+
+
+def test_erroring_canary_auto_rolls_back(fleet):
+    fe = fleet.frontend("u1")
+    v1 = fe.deploy_code("score", V1)
+    v1.result(10.0)
+    plan = fe.start_rollout("score", VBAD, fraction=0.25, seed=3,
+                            health=HealthPolicy(window=2))
+    assert plan.run(timeout=10.0) is GateDecision.ROLLBACK
+    assert _eventkinds(plan) == ["canary_started", "canary_unhealthy",
+                                 "rolled_back"]
+    rb = plan.events[-1]
+    assert rb.md5 == v1.md5                     # restored the incumbent
+    iters, _ = fe.submit_analytics("score", iterations=1).result(10.0)
+    assert iters[0].winning_md5 == v1.md5
+    assert iters[0].n_accepted == 8             # nobody left on the canary
+
+
+def test_divergent_canary_auto_rolls_back(fleet):
+    fe = fleet.frontend("u1")
+    v1 = fe.deploy_code("score", V1)
+    v1.result(10.0)
+    plan = fe.start_rollout("score", VDIVERGENT, fraction=0.25, seed=3,
+                            health=HealthPolicy(window=2,
+                                                max_divergence=0.5))
+    assert plan.run(timeout=10.0) is GateDecision.ROLLBACK
+    assert "canary_unhealthy" in _eventkinds(plan)
+    iters, _ = fe.submit_analytics("score", iterations=1).result(10.0)
+    assert iters[0].winning_md5 == v1.md5
+
+
+def test_rollout_requires_incumbent_version(fleet):
+    fe = fleet.frontend("u1")
+    plan = fe.start_rollout("score", V2, fraction=0.25)
+    with pytest.raises(ValueError, match="incumbent"):
+        plan.run(timeout=10.0)
+
+
+def test_rollout_requires_two_clients(fleet):
+    fe = fleet.frontend("u1")
+    with pytest.raises(ValueError, match="2 registered clients"):
+        RolloutPlan(fe, "score", V2, client_ids=["c000"])
+
+
+def test_rollout_telemetry_counters(fleet):
+    fe = fleet.frontend("u1")
+    fe.deploy_code("score", V1).result(10.0)
+    plan = fe.start_rollout("score", V2, fraction=0.25, seed=3,
+                            health=HealthPolicy(window=2))
+    plan.run(timeout=10.0)
+    plan2 = fe.start_rollout("score", VBAD, fraction=0.25, seed=3,
+                             health=HealthPolicy(window=2))
+    plan2.run(timeout=10.0)
+    counters = fleet.metrics(5.0)["user"]
+    assert counters["rollout.canary_started"] == 2
+    assert counters["rollout_decisions.promoted"] == 1
+    assert counters["rollout_decisions.rolled_back"] == 1
+    assert counters["rollouts_active"] == 0
+
+
+def test_sharded_rollout_promotes(request):
+    """Same lifecycle through a router + 2 shards: per-arm reports are
+    computed on shard legs and summed exactly at the aggregator."""
+    f = Fleet.create(8, seed=1, shards=2)
+    request.addfinalizer(f.shutdown)
+    fe = f.frontend("u1")
+    fe.deploy_code("score", V1).result(10.0)
+    plan = fe.start_rollout("score", V2, fraction=0.25, seed=3,
+                            health=HealthPolicy(window=2))
+    assert plan.run(timeout=10.0) is GateDecision.PROMOTE
+    iters, _ = fe.submit_analytics("score", iterations=1).result(10.0)
+    assert iters[0].winning_md5 == plan.deployment.md5
+    assert iters[0].n_accepted == 8
+
+
+def test_reconnecting_control_client_does_not_catch_up_to_canary(fleet):
+    """The catch-up path must respect cohort targeting: a control client
+    that re-registers mid-canary gets the incumbent, not the canary
+    build that was deployed to a 2-client subset."""
+    fe = fleet.frontend("u1")
+    v1 = fe.deploy_code("score", V1)
+    v1.result(10.0)
+    split = select_cohorts(fleet.client_ids(), 0.25, seed=3)
+    v2 = fe.deploy_code("score", V2, client_ids=split.canary)
+    v2.result(10.0)
+    server = fleet.server
+    canary_mods = server._catchup_modules(split.canary[0])
+    control_mods = server._catchup_modules(split.control[0])
+    assert [m.md5 for m in canary_mods] == [v2.md5]
+    assert [m.md5 for m in control_mods] == [v1.md5]
+    # a later fleet-wide deploy supersedes the cohort entries for everyone
+    v3 = fe.deploy_code("score", V2 + "# v3\n")
+    v3.result(10.0)
+    assert [m.md5 for m in server._catchup_modules(split.canary[0])] \
+        == [v3.md5]
+    assert [m.md5 for m in server._catchup_modules(split.control[0])] \
+        == [v3.md5]
+
+
+# ---------------------------------------------------------------------------
+# idempotent Deployment.rollback (regression)
+# ---------------------------------------------------------------------------
+
+
+def test_double_rollback_does_not_reship(fleet):
+    fe = fleet.frontend("u1")
+    v1 = fe.deploy_code("score", V1)
+    v1.result(10.0)
+    v2 = fe.deploy_code("score", V2)
+    v2.result(10.0)
+    rb1 = v2.rollback()
+    rb1.result(10.0)
+    installs_after_first = fleet.metrics(5.0)["cloud"].get(
+        "msgs_out.install_module", 0)
+    rb2 = v2.rollback()
+    assert rb2 is rb1                        # same handle, no second ship
+    assert rb2.md5 == v1.md5
+    installs_after_second = fleet.metrics(5.0)["cloud"].get(
+        "msgs_out.install_module", 0)
+    assert installs_after_second == installs_after_first

@@ -1,0 +1,215 @@
+"""Deterministic fault injection for staged rollouts, driven through
+the FaultyTransport wrapper (tests/fault_fabric.py) under real in-proc
+fleets — no real sleeps: injected delays are parked frames, and every
+wait below polls observable fleet state.
+
+Three scenarios from the issue:
+
+1. a canary shard crashes mid-watch — its legs re-home without
+   corrupting the health window (re-home gaps are *inconclusive*
+   iterations, which neither trip the gate nor count as evidence), and
+   the rollout still promotes;
+2. a partition lands exactly between the gate's PROMOTE decision and
+   the promotion frames — the fleet still heals into one consistent
+   fleet-wide version;
+3. an auto-rollback races a concurrent fleet-wide ``deploy_code`` —
+   the single-winner rule resolves it: the newer deploy wins and the
+   rollout ships nothing.
+"""
+import threading
+import time
+
+import pytest
+
+from fault_fabric import FaultPlan, FaultyTransport
+from repro.core import Status
+from repro.core.fleet import Fleet, GateDecision, HealthPolicy
+
+V1 = "def run(xs):\n    return 1.0\n"
+V2 = "def run(xs):\n    # tuned build, identical math\n    return 1.0\n"
+V3 = "def run(xs):\n    # the racing fleet-wide deploy\n    return 1.0\n"
+VBAD = "def run(xs):\n    raise RuntimeError('boom')\n"
+
+
+def _wait(predicate, timeout=15.0, interval=0.01):
+    deadline = time.time() + timeout
+    while not predicate():
+        if time.time() > deadline:
+            return False
+        time.sleep(interval)
+    return True
+
+
+def _wrap(plan):
+    return lambda inner: FaultyTransport(inner, plan)
+
+
+def _rollout_fleet(plan, n=4, shards=2):
+    # clients slowed slightly so the watch is still in flight across the
+    # multi-hundred-ms detect -> evict -> re-home window
+    return Fleet.create(
+        n, shards=shards, seed=3,
+        delay_fns={f"c{i:03d}": (lambda task: 0.02) for i in range(n)},
+        heartbeat_interval_s=0.05, eviction_timeout_s=0.4,
+        shard_heartbeat_interval_s=0.05, shard_eviction_timeout_s=0.4,
+        rehome_grace_s=5.0,
+        transport_wrap=_wrap(plan))
+
+
+def _fleet_committed(fe, md5, n, slot="score"):
+    """One post-round analytics pass: every client commits ``md5``."""
+    iters, done = fe.submit_analytics(slot, iterations=1).result(30.0)
+    assert done.status == Status.DONE, done.detail
+    return iters[0].winning_md5 == md5 and iters[0].n_accepted == n
+
+
+# ---------------------------------------------------------------------------
+# Scenario 1: canary shard crash mid-watch
+# ---------------------------------------------------------------------------
+
+
+def test_canary_shard_crash_mid_watch_rehomes_without_corrupting_gate():
+    """Kill a shard while the health window is filling. The dead legs
+    re-home; iterations merged with too-thin arms are inconclusive (the
+    gate neither fails nor credits them); a healthy canary still
+    promotes, and the fleet converges on the candidate version."""
+    plan = FaultPlan(seed=11)
+    fleet = _rollout_fleet(plan)
+    try:
+        fe = fleet.frontend("u1")
+        v1 = fe.deploy_code("score", V1)
+        _, done = v1.result(30.0)
+        assert done.status == Status.DONE
+
+        # a wide gate (30 conclusive healthy iterations) keeps the watch
+        # undecided long enough for the crash to land mid-window
+        rollout = fe.start_rollout(
+            "score", V2, fraction=0.5, seed=3,
+            health=HealthPolicy(window=30), watch_iterations=120)
+        result = {}
+
+        def drive():
+            result["decision"] = rollout.run(timeout=60.0)
+
+        t = threading.Thread(target=drive, daemon=True)
+        t.start()
+        assert _wait(lambda: len(rollout.window) >= 3, timeout=30.0), \
+            "watch never started filling the health window"
+
+        owners = dict(fleet.server.clients)       # client_id -> shard id
+        victim_sid = next(iter(owners.values()))
+        assert 0 < sum(1 for s in owners.values() if s == victim_sid) < 4
+        victim_node = fleet.shard_nodes[
+            int(victim_sid.removeprefix("shard"))]
+        victim_node.close(2.0)                    # the shard "crashes"
+        assert _wait(lambda: fleet.server.n_shards == 1), \
+            "router never evicted the silent shard"
+
+        t.join(timeout=120.0)
+        assert not t.is_alive(), "rollout never reached a decision"
+        assert result["decision"] is GateDecision.PROMOTE
+        kinds = [e.kind for e in rollout.events]
+        assert "canary_unhealthy" not in kinds, \
+            f"re-homing legs corrupted the health window: {rollout.events}"
+        assert kinds[-1] == "promoted"
+        # the window only ever held healthy or inconclusive entries
+        assert sum(1 for c, k in rollout.window
+                   if c.n_results and c.n_errors) == 0
+        # survivors took over the orphans and run the promoted version
+        assert _wait(lambda: fleet.server.n_clients == 4)
+        assert _fleet_committed(fe, rollout.deployment.md5, 4)
+    finally:
+        fleet.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# Scenario 2: partition during promotion
+# ---------------------------------------------------------------------------
+
+
+def test_partition_during_promotion_heals_into_consistent_version():
+    """Cut one shard off from the router and its clients at the exact
+    instant the gate decides PROMOTE (the on_decision seam fires between
+    decision and frames). The router evicts the unreachable shard,
+    re-homes its clients, and re-fans the promotion out to them — then
+    the healed shard is re-admitted and the whole fleet runs one
+    version."""
+    plan = FaultPlan(seed=12)
+    fleet = _rollout_fleet(plan)
+    try:
+        fe = fleet.frontend("u1")
+        v1 = fe.deploy_code("score", V1)
+        _, done = v1.result(30.0)
+        assert done.status == Status.DONE
+
+        owners = dict(fleet.server.clients)
+        victim_sid = next(iter(owners.values()))
+        victim_clients = [c for c, s in owners.items() if s == victim_sid]
+
+        def cut(decision):
+            assert decision is GateDecision.PROMOTE
+            plan.isolate(victim_sid, ["router"] + victim_clients)
+
+        rollout = fe.start_rollout("score", V2, fraction=0.5, seed=3,
+                                   health=HealthPolicy(window=2),
+                                   on_decision=cut)
+        assert rollout.run(timeout=60.0) is GateDecision.PROMOTE
+        assert [e.kind for e in rollout.events][-1] == "promoted"
+        # the partition really bit while the promotion was in flight
+        assert plan.count(action="partitioned") > 0
+        # promotion completed by re-homing the cut shard's clients
+        _, done = rollout.promotion.result(30.0)
+        assert done.status == Status.DONE, done.detail
+        assert "4/4" in done.detail
+
+        plan.heal()
+        assert _wait(lambda: fleet.server.n_shards == 2), \
+            "healed shard never re-admitted"
+        assert _wait(lambda: fleet.server.n_clients == 4)
+        assert _fleet_committed(fe, rollout.deployment.md5, 4)
+    finally:
+        fleet.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# Scenario 3: auto-rollback racing a concurrent deploy
+# ---------------------------------------------------------------------------
+
+
+def test_rollback_racing_concurrent_deploy_resolves_to_single_winner():
+    """While an unhealthy canary is being decided, a fleet-wide
+    deploy_code lands. Exactly one writer may win the slot: the rollout
+    detects it was superseded, ships nothing (no rollback frames that
+    would resurrect an older version), and the fleet converges on the
+    racing deploy."""
+    plan = FaultPlan(seed=13)
+    fleet = Fleet.create(4, seed=3, transport_wrap=_wrap(plan))
+    try:
+        fe = fleet.frontend("u1")
+        v1 = fe.deploy_code("score", V1)
+        _, done = v1.result(30.0)
+        assert done.status == Status.DONE
+        race = {}
+
+        def racing_deploy(decision):
+            assert decision is GateDecision.ROLLBACK
+            race["dep"] = fe.deploy_code("score", V3)
+            _, d = race["dep"].result(30.0)
+            assert d.status == Status.DONE
+
+        rollout = fe.start_rollout("score", VBAD, fraction=0.5, seed=3,
+                                   health=HealthPolicy(window=2),
+                                   on_decision=racing_deploy)
+        assert rollout.run(timeout=60.0) is GateDecision.ROLLBACK
+        last = rollout.events[-1]
+        assert last.kind == "rolled_back"
+        assert "superseded" in last.detail
+        # the rollout conceded: no rollback install frames were shipped
+        assert rollout.rollback_deployment is None
+        assert rollout.promotion is None
+        # single winner fleet-wide: the racing deploy's version
+        assert _fleet_committed(fe, race["dep"].md5, 4)
+        # and its pins are gone — nothing holds the canary cohort back
+        assert fe._frontend_registry.cohort_pins("u1", "score") == {}
+    finally:
+        fleet.shutdown()

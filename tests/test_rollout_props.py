@@ -1,0 +1,175 @@
+"""Property tests (hypothesis) for the staged-rollout pure core:
+cohort selection and the health-gate evaluator.
+
+The gate must be a pure function of the watch window, so hypothesis can
+search the input space directly — no fleet, no wire. Each property here
+has a seeded spot-check twin in tests/test_rollout.py so the logic is
+covered even where hypothesis is absent; in CI, REPRO_REQUIRE_HYPOTHESIS
+makes this suite mandatory (see tests/hyputil.py).
+"""
+import pytest
+
+from hyputil import require_hypothesis
+
+require_hypothesis()
+from hypothesis import given, settings, strategies as st
+
+from repro.core.consistency import TaggedResult
+from repro.core.rollout import (
+    ArmStats,
+    GateDecision,
+    HealthPolicy,
+    arm_report,
+    evaluate_gate,
+    iteration_health,
+    merge_arm_reports,
+    select_cohorts,
+)
+
+IDS = st.lists(st.from_regex(r"c[0-9]{1,3}", fullmatch=True),
+               min_size=2, max_size=40, unique=True)
+FRACTIONS = st.floats(min_value=0.0, max_value=1.0,
+                      allow_nan=False, allow_infinity=False)
+SEEDS = st.integers(min_value=0, max_value=2**31)
+
+
+# ---------------------------------------------------------------------------
+# cohort selection
+# ---------------------------------------------------------------------------
+
+
+@given(ids=IDS, fraction=FRACTIONS, seed=SEEDS)
+@settings(max_examples=200, deadline=None)
+def test_cohorts_partition_the_fleet(ids, fraction, seed):
+    split = select_cohorts(ids, fraction, seed)
+    assert not set(split.canary) & set(split.control)
+    assert sorted(split.canary + split.control) == sorted(set(ids))
+
+
+@given(ids=IDS, fraction=FRACTIONS, seed=SEEDS)
+@settings(max_examples=200, deadline=None)
+def test_cohorts_deterministic_per_seed(ids, fraction, seed):
+    assert select_cohorts(ids, fraction, seed) \
+        == select_cohorts(ids, fraction, seed)
+
+
+@given(ids=IDS, fraction=FRACTIONS, seed=SEEDS)
+@settings(max_examples=200, deadline=None)
+def test_cohort_size_within_one_of_ask(ids, fraction, seed):
+    split = select_cohorts(ids, fraction, seed)
+    assert abs(len(split.canary) - fraction * len(set(ids))) <= 1
+
+
+@given(ids=IDS, fraction=FRACTIONS, seed=SEEDS,
+       dupes=st.data())
+@settings(max_examples=200, deadline=None)
+def test_cohorts_stable_under_churn_reregistration(ids, fraction, seed,
+                                                   dupes):
+    """Re-registration churn presents the same client population as a
+    multiset in arbitrary order; the split must not move."""
+    base = select_cohorts(ids, fraction, seed)
+    extra = dupes.draw(st.lists(st.sampled_from(ids), max_size=10))
+    shuffled = dupes.draw(st.permutations(list(ids) + extra))
+    assert select_cohorts(shuffled, fraction, seed) == base
+
+
+# ---------------------------------------------------------------------------
+# arm accounting: sharded merge == flat report
+# ---------------------------------------------------------------------------
+
+RESULTS = st.lists(
+    st.tuples(st.integers(min_value=0, max_value=30),          # client idx
+              st.booleans(),                                   # errored?
+              st.floats(min_value=-1e6, max_value=1e6,
+                        allow_nan=False)),                     # payload
+    min_size=0, max_size=40)
+
+
+@given(rows=RESULTS, assignment=st.lists(
+    st.integers(min_value=0, max_value=3), min_size=40, max_size=40))
+@settings(max_examples=200, deadline=None)
+def test_merged_arm_reports_equal_flat(rows, assignment):
+    arms = {f"c{i:03d}": ("canary" if i % 3 == 0 else "control")
+            for i in range(31)}
+    results = [TaggedResult(f"c{i:03d}", 0,
+                            "error:boom" if err else "aa" * 16,
+                            payload=val)
+               for (i, err, val) in rows]
+    flat = arm_report(results, arms)
+    shards = {}
+    for r, shard in zip(results, assignment):
+        shards.setdefault(shard, []).append(r)
+    merged = merge_arm_reports(
+        [arm_report(s, arms) for s in shards.values()])
+    assert merged.keys() == flat.keys()
+    for arm in flat:
+        for k in ("n", "errors", "value_n"):
+            assert merged[arm][k] == flat[arm][k]
+        assert merged[arm]["value_sum"] == pytest.approx(
+            flat[arm]["value_sum"])
+
+
+# ---------------------------------------------------------------------------
+# the health gate
+# ---------------------------------------------------------------------------
+
+STATS = st.builds(
+    ArmStats,
+    n_results=st.integers(min_value=0, max_value=50),
+    n_errors=st.integers(min_value=0, max_value=50),
+    value_sum=st.floats(min_value=-1e6, max_value=1e6, allow_nan=False),
+    value_n=st.integers(min_value=0, max_value=50),
+)
+WINDOWS = st.lists(st.tuples(STATS, STATS), min_size=0, max_size=12)
+POLICIES = st.builds(
+    HealthPolicy,
+    window=st.integers(min_value=1, max_value=6),
+    max_error_rate=st.floats(min_value=0.0, max_value=1.0,
+                             allow_nan=False),
+    max_divergence=st.floats(min_value=0.0, max_value=10.0,
+                             allow_nan=False),
+    min_results=st.integers(min_value=1, max_value=5),
+)
+
+
+@given(window=WINDOWS, policy=POLICIES)
+@settings(max_examples=300, deadline=None)
+def test_gate_never_promotes_and_rolls_back(window, policy):
+    """The two terminal verdicts are mutually exclusive: PROMOTE implies
+    zero unhealthy entries, ROLLBACK implies at least one."""
+    d = evaluate_gate(window, policy)
+    unhealthy = [iteration_health(c, k, policy) for c, k in window]
+    if d is GateDecision.PROMOTE:
+        assert not any(h is False for h in unhealthy)
+        assert sum(1 for h in unhealthy if h is True) >= policy.window
+    if d is GateDecision.ROLLBACK:
+        assert any(h is False for h in unhealthy)
+    if any(h is False for h in unhealthy):
+        assert d is GateDecision.ROLLBACK
+
+
+def _healthier(entry, policy):
+    """A strictly-no-worse version of one window entry: drop canary
+    errors and move the canary mean onto the control mean."""
+    canary, control = entry
+    better = ArmStats(n_results=canary.n_results, n_errors=0,
+                      value_sum=(control.mean or 0.0) * canary.value_n,
+                      value_n=canary.value_n)
+    return (better, control)
+
+
+@given(window=st.lists(st.tuples(STATS, STATS), min_size=1, max_size=12),
+       policy=POLICIES, data=st.data())
+@settings(max_examples=300, deadline=None)
+def test_gate_promotion_monotone_in_health(window, policy, data):
+    """Improving any entry's health can never turn PROMOTE into
+    ROLLBACK: healthier evidence is never punished."""
+    before = evaluate_gate(window, policy)
+    idx = data.draw(st.integers(min_value=0, max_value=len(window) - 1))
+    improved = list(window)
+    improved[idx] = _healthier(window[idx], policy)
+    after = evaluate_gate(improved, policy)
+    # the improved entry is never unhealthy (zero errors, zero
+    # divergence), so a non-ROLLBACK window stays non-ROLLBACK
+    if before is not GateDecision.ROLLBACK:
+        assert after is not GateDecision.ROLLBACK

@@ -8,6 +8,7 @@ the flat result multiset (property-tested below; the hierarchical merge
 this replaced provably diverges)."""
 import pytest
 
+from hyputil import require_hypothesis
 from repro.core import Status
 from repro.core.assignment import IterationEvent, Target
 from repro.core.consistency import TaggedResult, majority_filter
@@ -358,7 +359,7 @@ def test_exact_merge_property_any_partition_equals_flat_filter():
     """The satellite property test proper: hypothesis searches the space
     of (result multiset, shard partition) for any case where the sharded
     merge diverges from consistency.majority_filter on the flat set."""
-    hypothesis = pytest.importorskip("hypothesis")
+    hypothesis = require_hypothesis()
     st = pytest.importorskip("hypothesis.strategies")
     given, settings = hypothesis.given, hypothesis.settings
 
