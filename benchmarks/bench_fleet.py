@@ -66,6 +66,33 @@ def run(xs):
     return (n_users * 5) / dt, len(hashes)
 
 
+def bench_fed_ab(n_clients: int = 8, shards: int = 2,
+                 n_rounds: int = 10, swap_round: int = 5):
+    """The paper's headline scenario as a measured artifact: one
+    federated A/B session over a real sharded TCP fleet, arm B's
+    optimizer rule hot-swapped mid-session. Returns (s_per_round,
+    per-arm ab_log rows) — the per-arm convergence traces become
+    ``fed_ab_*`` rows in BENCH_fleet.json."""
+    from repro.fed.fedavg import FederatedSession
+    from repro.launch.fleet_proc import spawn_tcp_fleet
+
+    fleet = spawn_tcp_fleet(n_clients, shards=shards)
+    try:
+        sess = FederatedSession(fleet, seed=3)
+        fe = fleet.frontend(sess.user_id)
+        t0 = time.perf_counter()
+        log = sess.run_ab(fe, n_rounds=n_rounds, swap_round=swap_round,
+                          cloud_aggregate=True)
+        dt = time.perf_counter() - t0
+        return dt / n_rounds, log
+    finally:
+        fleet.shutdown()
+
+
+def _arm_trace(log, arm, key):
+    return [r[key] for r in log if r["arm"] == arm]
+
+
 def main(report) -> None:
     thr, n = bench_round_throughput()
     report("fleet_rounds_per_s_16c", 1e6 / thr, f"{thr:.1f} rounds/s")
@@ -78,6 +105,23 @@ def main(report) -> None:
     thr2, nh = bench_concurrent_users()
     report("fleet_concurrent_users", 1e6 / thr2,
            f"{thr2:.1f} rounds/s across 4 users, {nh} distinct versions")
+
+    n_rounds, swap = 10, 5
+    s_per_round, log = bench_fed_ab(n_rounds=n_rounds, swap_round=swap)
+    report("fed_ab_round_tcp", s_per_round * 1e6,
+           f"one federated round, both arms, over 2 shard + 8 tcp client "
+           f"processes; arm B's rule hot-swapped at round {swap}")
+    for arm in ("A", "B"):
+        errs = _arm_trace(log, arm, "err")
+        losses = [x for x in _arm_trace(log, arm, "loss") if x is not None]
+        swapped = "constant rule" if arm == "A" else \
+            f"rule hot-swapped at round {swap}"
+        report(f"fed_ab_final_err_arm_{arm.lower()}", errs[-1] * 1e6,
+               f"final ||w - w*|| after {n_rounds} rounds ({swapped}); "
+               f"err trace "
+               + "->".join(f"{e:.3f}" for e in errs)
+               + "; mean-loss trace "
+               + "->".join(f"{x:.3f}" for x in losses))
 
 
 if __name__ == "__main__":

@@ -34,6 +34,11 @@ class TaggedResult:
     # ran under, echoed from TaskSpec.arm so per-arm health accounting
     # survives paths where client identity is not at hand. "" = no arms.
     arm: str = ""
+    # optional per-result scalar metric (e.g. local training loss for a
+    # federated round) — rides alongside the payload so per-arm loss
+    # traces can be accumulated even when the payload itself is a weight
+    # vector or a compressed dict. None = no metric reported.
+    metric: Optional[float] = None
 
     def to_wire_dict(self) -> Dict[str, Any]:
         # payload must be JSON-able; numpy scalars/arrays are lowered by
@@ -47,10 +52,13 @@ class TaggedResult:
         }
         if self.arm:
             d["arm"] = self.arm
+        if self.metric is not None:
+            d["metric"] = self.metric
         return d
 
     @staticmethod
     def from_wire_dict(d: Dict[str, Any]) -> "TaggedResult":
+        metric = d.get("metric")
         return TaggedResult(
             client_id=d["client_id"],
             iteration=int(d["iteration"]),
@@ -58,6 +66,7 @@ class TaggedResult:
             payload=d["payload"],
             compute_ms=float(d["compute_ms"]),
             arm=d.get("arm", ""),
+            metric=float(metric) if metric is not None else None,
         )
 
 

@@ -53,6 +53,7 @@ from __future__ import annotations
 
 import bisect
 import contextlib
+import inspect
 import queue
 import threading
 import time
@@ -529,6 +530,10 @@ class ClientApp:
         self._lock = threading.Lock()
         # extension point (federated learning etc.)
         self.method_handlers: Dict[str, Callable[["ClientApp", TaskSpec], TaggedResult]] = {}
+        # per-method persistent scratch state for context-aware active
+        # modules (``run(window, ctx)``): survives across iterations and
+        # module hot-swaps, e.g. compression error-feedback residuals
+        self.method_state: Dict[str, Dict[str, Any]] = {}
 
     # -- data stream ----------------------------------------------------------
     def next_window(self, n_values: int) -> np.ndarray:
@@ -565,16 +570,52 @@ class ClientApp:
                                 compute_ms=_ms(t0), arm=task.arm)
 
         # custom method: resolve *now* (reload-per-iteration semantics)
-        resolved = self.registry.resolve(task.params.get("code_user", ""),
-                                         task.method)
+        code_user = task.params.get("code_user", "")
+        resolved = self.registry.resolve(code_user, task.method)
         if resolved is None:
             raise KeyError(
                 f"client {self.client_id}: no custom code for slot "
                 f"{task.method!r}")
-        value = resolved.fn(window)
+        if _module_wants_ctx(resolved.fn):
+            value = resolved.fn(window, self._task_context(task, code_user))
+        else:
+            value = resolved.fn(window)
+        if isinstance(value, dict) and value.get("__tagged__"):
+            # context-aware modules may return a pre-tagged envelope:
+            # override the code hash (e.g. tag the optimizer rule the
+            # round actually ran, not the round driver) and attach a
+            # scalar metric alongside a non-scalar payload
+            metric = value.get("metric")
+            return TaggedResult(self.client_id, task.iteration,
+                                str(value.get("code_md5") or resolved.md5),
+                                payload=_to_py(value.get("payload")),
+                                compute_ms=_ms(t0), arm=task.arm,
+                                metric=(float(metric)
+                                        if metric is not None else None))
         return TaggedResult(self.client_id, task.iteration, resolved.md5,
                             payload=_to_py(value), compute_ms=_ms(t0),
                             arm=task.arm)
+
+    def _task_context(self, task: TaskSpec, code_user: str) -> Dict[str, Any]:
+        """The ``ctx`` argument handed to context-aware active modules
+        (``def run(window, ctx)``): identity, task params, per-method
+        persistent state, and a resolver for composing sibling slots
+        (e.g. a federated round driver invoking the current optimizer
+        rule) without cross-process closures."""
+        def resolve(slot: str):
+            mod = self.registry.resolve(code_user, slot)
+            if mod is None:
+                return None
+            return mod.fn, mod.md5
+
+        return {
+            "client_id": self.client_id,
+            "iteration": task.iteration,
+            "arm": task.arm,
+            "params": dict(task.params),
+            "state": self.method_state.setdefault(task.method, {}),
+            "resolve": resolve,
+        }
 
 
 class CloudApp:
@@ -609,6 +650,18 @@ def _to_py(v: Any) -> Any:
     if hasattr(v, "tolist"):
         return v.tolist()
     return v
+
+
+def _module_wants_ctx(fn: Callable[..., Any]) -> bool:
+    """A module opts into the task context by naming its second
+    positional parameter ``ctx`` (``def run(window, ctx)``). Matching on
+    the name, not the arity, keeps one-argument modules with defaulted
+    extras on the classic ``fn(window)`` path."""
+    try:
+        params = list(inspect.signature(fn).parameters.values())
+    except (TypeError, ValueError):
+        return False
+    return len(params) >= 2 and params[1].name == "ctx"
 
 
 # ---------------------------------------------------------------------------

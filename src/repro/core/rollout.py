@@ -103,6 +103,11 @@ class ArmStats:
     n_errors: int = 0
     value_sum: float = 0.0
     value_n: int = 0               # results with a numeric payload
+    # explicit per-result scalar metrics (TaggedResult.metric, e.g. a
+    # federated round's local training loss) — separate from value_sum
+    # because metric-carrying results usually have non-scalar payloads
+    metric_sum: float = 0.0
+    metric_n: int = 0              # results that reported a metric
 
     @property
     def error_rate(self) -> float:
@@ -112,6 +117,10 @@ class ArmStats:
     def mean(self) -> Optional[float]:
         return self.value_sum / self.value_n if self.value_n else None
 
+    @property
+    def metric_mean(self) -> Optional[float]:
+        return self.metric_sum / self.metric_n if self.metric_n else None
+
     @staticmethod
     def from_report(d: Optional[Mapping[str, Any]]) -> "ArmStats":
         if not d:
@@ -119,7 +128,9 @@ class ArmStats:
         return ArmStats(n_results=int(d.get("n", 0)),
                         n_errors=int(d.get("errors", 0)),
                         value_sum=float(d.get("value_sum", 0.0)),
-                        value_n=int(d.get("value_n", 0)))
+                        value_n=int(d.get("value_n", 0)),
+                        metric_sum=float(d.get("metric_sum", 0.0)),
+                        metric_n=int(d.get("metric_n", 0)))
 
 
 def arm_report(results: Sequence[Any],
@@ -135,7 +146,8 @@ def arm_report(results: Sequence[Any],
         if not arm:
             continue
         s = out.setdefault(arm, {"n": 0, "errors": 0,
-                                 "value_sum": 0.0, "value_n": 0})
+                                 "value_sum": 0.0, "value_n": 0,
+                                 "metric_sum": 0.0, "metric_n": 0})
         s["n"] += 1
         if r.code_md5.startswith("error"):
             s["errors"] += 1
@@ -143,6 +155,10 @@ def arm_report(results: Sequence[Any],
                 and not isinstance(r.payload, bool):
             s["value_sum"] += float(r.payload)
             s["value_n"] += 1
+        metric = getattr(r, "metric", None)
+        if metric is not None and not r.code_md5.startswith("error"):
+            s["metric_sum"] += float(metric)
+            s["metric_n"] += 1
     return out
 
 
@@ -155,11 +171,14 @@ def merge_arm_reports(reports: Sequence[Mapping[str, Mapping[str, Any]]]
     for rep in reports:
         for arm, s in rep.items():
             t = out.setdefault(arm, {"n": 0, "errors": 0,
-                                     "value_sum": 0.0, "value_n": 0})
+                                     "value_sum": 0.0, "value_n": 0,
+                                     "metric_sum": 0.0, "metric_n": 0})
             t["n"] += int(s.get("n", 0))
             t["errors"] += int(s.get("errors", 0))
             t["value_sum"] += float(s.get("value_sum", 0.0))
             t["value_n"] += int(s.get("value_n", 0))
+            t["metric_sum"] += float(s.get("metric_sum", 0.0))
+            t["metric_n"] += int(s.get("metric_n", 0))
     return out
 
 

@@ -497,6 +497,73 @@ def run_rollout_smoke(n_clients: int = 6, shards: int = 2,
         fleet.shutdown()
 
 
+def run_fed_ab_smoke(n_clients: int = 8, shards: int = 2,
+                     n_rounds: int = 12, swap_round: int = 6,
+                     verbose: bool = True) -> int:
+    """The federated-A/B acceptance scenario over real processes (the CI
+    ``fed-ab-smoke`` contract): a sharded TCP fleet runs one ongoing
+    ``FederatedSession.run_ab`` — deployable ``federated_round`` driver,
+    cloud-side ``fed_aggregate`` on the router path, arm B's optimizer
+    rule hot-swapped on a 50% cohort *between rounds* — and the smoke
+    asserts both arms' loss traces are complete and no round ever mixed
+    rules. A short compressed ``run_rounds`` tail exercises the
+    compressed-weight payloads on the same fleet. Returns 0 on success."""
+    from repro.fed.fedavg import FederatedSession
+
+    def say(msg: str) -> None:
+        if verbose:
+            print(f"[fleet_proc] {msg}", flush=True)
+
+    fleet = spawn_tcp_fleet(n_clients, shards=shards)
+    say(f"{n_clients} client processes across {shards} shard processes")
+    try:
+        sess = FederatedSession(fleet, seed=3)
+        fe = fleet.frontend(sess.user_id)
+        log = sess.run_ab(fe, n_rounds=n_rounds, swap_round=swap_round,
+                          cloud_aggregate=True)
+        by_arm: Dict[str, list] = {}
+        for row in log:
+            by_arm.setdefault(row["arm"], []).append(row)
+        assert sorted(by_arm) == ["A", "B"], sorted(by_arm)
+        for arm, rows in by_arm.items():
+            # trace completeness: every round contributed a row with a
+            # convergence err and a mean local loss from arm_stats
+            assert [r["round"] for r in rows] == list(range(n_rounds)), rows
+            missing = [r["round"] for r in rows if r["loss"] is None]
+            assert not missing, f"arm {arm} loss trace has holes: {missing}"
+            # rule consistency: nothing dropped by the majority filter,
+            # and winning_md5 single-valued per arm on each side of the
+            # swap (arm A forever on the incumbent; arm B flips once)
+            assert all(r["n_dropped"] == 0 for r in rows), rows
+            md5s = [r["winning_md5"] for r in rows]
+            assert len(set(md5s if arm == "A" else md5s[:swap_round])) == 1
+            if arm == "B":
+                assert len(set(md5s[swap_round:])) == 1
+                assert md5s[0] != md5s[-1], \
+                    "arm B's rule swap never took effect"
+        assert by_arm["A"][-1]["winning_md5"] != \
+            by_arm["B"][-1]["winning_md5"], "arms converged to one rule"
+        say(f"A/B over {n_rounds} rounds: arm A on "
+            f"{by_arm['A'][-1]['winning_md5'][:8]} throughout, arm B "
+            f"hot-swapped to {by_arm['B'][-1]['winning_md5'][:8]} at "
+            f"round {swap_round}, zero mixed-rule results")
+        say(f"final err A={by_arm['A'][-1]['err']:.3f} "
+            f"B={by_arm['B'][-1]['err']:.3f}; mean loss "
+            f"A={by_arm['A'][-1]['loss']:.4f} B={by_arm['B'][-1]['loss']:.4f}")
+
+        # compressed payloads riding the same binary wire
+        sess.run_rounds(fe, 2, compression="topk_ef", compression_frac=0.5)
+        assert len(sess.round_log) == 2, sess.round_log
+        assert all(r["n_accepted"] >= n_clients // 2
+                   for r in sess.round_log), sess.round_log
+        say("2 topk_ef-compressed rounds on the same fleet: "
+            f"err {sess.round_log[-1]['err']:.3f}")
+        say("federated A/B with live optimizer hot-swap over TCP: PASS")
+        return 0
+    finally:
+        fleet.shutdown()
+
+
 def run_smoke(n_clients: int = 3, iterations: int = 3, shards: int = 1,
               churn: bool = False, verbose: bool = True,
               json_clients: Sequence[str] = ()) -> int:
@@ -690,6 +757,11 @@ def main(argv: Optional[list] = None) -> int:
                     help="run the staged-rollout scenario: an unhealthy "
                          "canary auto-rolls-back, then a healthy canary "
                          "promotes fleet-wide")
+    ap.add_argument("--fed-ab", action="store_true",
+                    help="run the federated A/B scenario: a sharded TCP "
+                         "fleet drives a FedAvg session with arm B's "
+                         "optimizer rule hot-swapped mid-session on a "
+                         "50%% cohort")
     ap.add_argument("--trace-dump", action="store_true",
                     help="deploy over TCP, then assemble and print the "
                          "deploy trace pulled from every node")
@@ -706,6 +778,9 @@ def main(argv: Optional[list] = None) -> int:
         return run_shard_failover_smoke(args.clients, shards=args.shards)
     if args.rollout:
         return run_rollout_smoke(max(args.clients, 4), shards=args.shards)
+    if args.fed_ab:
+        return run_fed_ab_smoke(max(args.clients, 8),
+                                shards=max(args.shards, 2))
     if args.trace_dump or args.metrics_dump:
         return run_telemetry_smoke(
             max(args.clients, 4), shards=args.shards,

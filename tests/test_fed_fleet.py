@@ -1,0 +1,303 @@
+"""FedAvg as a deployable fleet workload: compression error-feedback
+exactness, the round-timeout failure shape, identity-derived non-IID
+shifts (churn-stable), mixed compressed/plain rounds, per-arm loss
+traces through the shard merge, and the live optimizer A/B."""
+import numpy as np
+import pytest
+
+from fault_fabric import FaultPlan, FaultyTransport
+from repro.core.assignment import Status
+from repro.core.consistency import TaggedResult
+from repro.core.fleet import Fleet
+from repro.core.rollout import ArmStats, arm_report, merge_arm_reports
+from repro.fed.fedavg import (
+    DIM,
+    FEDERATED_ROUND_SOURCE,
+    FederatedRoundError,
+    FederatedSession,
+    _features,
+    client_shift,
+    default_client_update,
+)
+
+
+def _wrap(plan):
+    return lambda inner: FaultyTransport(inner, plan)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: error feedback must match what the cloud reconstructs
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", ["int8_ef", "topk_ef"])
+def test_error_feedback_residual_matches_decoded_payload(kind):
+    """The EF invariant, exactly: residual == w - decode(encode(w)) for
+    both payload kinds. topk_ef ships float32 values, so a residual
+    computed against the float64 kept values (the old bug) diverges from
+    the cloud's reconstruction by the float32 rounding error."""
+    class App:
+        client_id = "c000"
+        fed_state = {}
+
+    w = np.random.default_rng(5).normal(size=DIM)
+    p = FederatedSession._compress_payload(App, w, kind, 0.5)
+    back = FederatedSession.decode_payload(p)
+    np.testing.assert_array_equal(App.fed_state["residual"], w - back)
+    # and across rounds: round 2 encodes w + residual, same invariant
+    carried = App.fed_state["residual"].copy()
+    p2 = FederatedSession._compress_payload(App, w, kind, 0.5)
+    back2 = FederatedSession.decode_payload(p2)
+    np.testing.assert_array_equal(App.fed_state["residual"],
+                                  (w + carried) - back2)
+
+
+def test_topk_payload_size_is_deterministic_under_ties():
+    """Exactly ``max(1, int(n * frac))`` values ship, even when
+    magnitudes tie at the threshold (the old jnp mask kept every
+    coordinate >= the k-th magnitude, inflating tied payloads), and the
+    EF residual still matches the reconstruction exactly."""
+    class App:
+        client_id = "c000"
+        fed_state = {}
+
+    w = np.array([1.0, -1.0, 1.0, -1.0, 0.5, 0.25, -0.125, 0.0625])
+    p = FederatedSession._compress_payload(App, w, "topk_ef", 0.25)
+    assert len(p["idx"]) == max(1, int(DIM * 0.25))
+    np.testing.assert_array_equal(
+        App.fed_state["residual"], w - FederatedSession.decode_payload(p))
+
+
+# ---------------------------------------------------------------------------
+# Satellite: a starved round fails with a named error, not a bare unpack
+# ---------------------------------------------------------------------------
+
+
+def test_round_timeout_raises_federated_round_error():
+    plan = FaultPlan()
+    fleet = Fleet.create(4, seed=7, transport_wrap=_wrap(plan))
+    try:
+        sess = FederatedSession(fleet, seed=3, round_timeout_s=1.0)
+        fe = fleet.frontend(sess.user_id)
+        # deploy first — module installs ack over task_done frames too
+        sess.ensure_round_module(fe)
+        plan.delay(tag="task_done")          # park every round result
+        with pytest.raises(FederatedRoundError,
+                           match="federated round 0 failed"):
+            sess.run_rounds(fe, 1)
+    finally:
+        plan.release()
+        fleet.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# Satellite: the non-IID shift follows client identity, not enumeration
+# ---------------------------------------------------------------------------
+
+
+def test_client_shift_is_pure_and_bounded():
+    ids = [f"c{i:03d}" for i in range(100)]
+    assert [client_shift(c) for c in ids] == [client_shift(c) for c in ids]
+    assert all(0.0 <= client_shift(c) < 0.36 for c in ids)
+    assert len({client_shift(c) for c in ids[:16]}) > 2   # actually non-IID
+
+
+def _one_client_round(n_clients: int, cid: str, seed: int = 3):
+    """Run one federated round on ``cid`` alone in a fleet of
+    ``n_clients`` and return (window, payload)."""
+    fleet = Fleet.create(n_clients, seed=7)
+    try:
+        sess = FederatedSession(fleet, seed=seed)
+        fe = fleet.frontend(sess.user_id)
+        sess.ensure_round_module(fe)
+        xs = np.array(fleet.client_apps[cid].data[:64])
+        handle = fe.submit_analytics(
+            "federated_round", iterations=1, client_ids=[cid],
+            params=sess._round_params(sess.w, None, 0.25, False))
+        it = sess._commit_round(handle, 0)
+        assert it.n_accepted == 1
+        return xs, np.asarray(it.value[0], dtype=np.float64), sess.true_w
+    finally:
+        fleet.shutdown()
+
+
+def test_shift_follows_identity_across_fleet_compositions():
+    """A churned/re-homed client keeps its data distribution: the same
+    client id produces the same round update no matter how the rest of
+    the fleet is composed, and the update matches the identity-derived
+    shift (under the old insertion-order scheme c002's shift was
+    0.1 * idx — position-dependent, 0.2 here)."""
+    xs4, got4, true_w = _one_client_round(4, "c002")
+    xs3, got3, _ = _one_client_round(3, "c002")
+    np.testing.assert_array_equal(xs4, xs3)       # same telemetry stream
+    np.testing.assert_array_equal(got4, got3)     # same distribution
+    ys = _features(xs4) @ true_w + client_shift("c002")
+    expected = default_client_update(np.zeros(DIM), xs4, ys)
+    np.testing.assert_allclose(got4, expected, rtol=1e-12)
+    assert client_shift("c002") != pytest.approx(0.2)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: mixed plain/compressed payloads in one round
+# ---------------------------------------------------------------------------
+
+
+def test_aggregate_value_decodes_per_element():
+    sess = FederatedSession(None, seed=0)
+    plain = [float(i) for i in range(DIM)]
+    comp = {"kind": "topk_ef", "dim": DIM, "idx": [0], "val": [2.0]}
+    w = sess._aggregate_value([comp, plain])
+    expected = np.stack([
+        np.array([2.0] + [0.0] * (DIM - 1)),
+        np.arange(DIM, dtype=np.float64),
+    ]).mean(axis=0)
+    np.testing.assert_allclose(w, expected)
+
+
+def test_mixed_compression_round_after_module_swap():
+    """A mid-session swap of the round driver that changes the payload
+    shape (plain lists vs compressed dicts) must not break aggregation:
+    payloads are decoded per element, and — both drivers tagging the
+    same optimizer rule — nothing is dropped."""
+    plain_variant = FEDERATED_ROUND_SOURCE.replace(
+        'comp = p.get("compression")', "comp = None")
+    assert plain_variant != FEDERATED_ROUND_SOURCE
+    fleet = Fleet.create(4, seed=7)
+    try:
+        sess = FederatedSession(fleet, seed=3)
+        fe = fleet.frontend(sess.user_id)
+        sess.ensure_round_module(fe)
+        dep = fe.deploy_code("federated_round", plain_variant,
+                             client_ids=["c000", "c001"])
+        dep.result(timeout=15.0)
+        handle = fe.submit_analytics(
+            "federated_round", iterations=1,
+            params=sess._round_params(sess.w, "int8_ef", 0.25, False))
+        it = sess._commit_round(handle, 0)
+        assert it.n_accepted == 4 and it.n_dropped == 0
+        kinds = {type(v).__name__ for v in it.value}
+        assert kinds == {"list", "dict"}          # genuinely mixed
+        w = sess._aggregate_value(it.value)
+        assert w.shape == (DIM,) and np.all(np.isfinite(w))
+    finally:
+        fleet.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# Context-aware active modules (the mechanism the round driver rides)
+# ---------------------------------------------------------------------------
+
+
+CTX_MODULE = """
+import numpy as np
+
+def run(xs, ctx):
+    st = ctx["state"]
+    st["calls"] = st.get("calls", 0) + 1
+    return {"__tagged__": True, "code_md5": "rule-md5",
+            "payload": [float(len(xs))], "metric": 0.5}
+"""
+
+
+def test_ctx_module_state_and_tagged_envelope():
+    fleet = Fleet.create(2, seed=0)
+    try:
+        fe = fleet.frontend("u")
+        fe.deploy_code("ctxmod", CTX_MODULE).result(timeout=15.0)
+        handle = fe.submit_analytics(
+            "ctxmod", iterations=2,
+            params={"arms": {"c000": "A", "c001": "B"}})
+        results, done = handle.result(timeout=15.0)
+        assert done.status is Status.DONE
+        assert len(results) == 2
+        for it in results:
+            # the envelope's md5 wins (the rule, not the driver module)
+            assert it.winning_md5 == "rule-md5"
+            a = ArmStats.from_report(it.arm_stats["A"])
+            assert a.metric_n == 1 and a.metric_mean == 0.5
+        # per-method state persisted across iterations
+        assert fleet.client_apps["c000"].method_state["ctxmod"]["calls"] == 2
+    finally:
+        fleet.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# Arm metrics: wire shape, accumulation, exact shard merge
+# ---------------------------------------------------------------------------
+
+
+def test_tagged_result_metric_wire_roundtrip():
+    r = TaggedResult("c0", 1, "md", payload=[1.0], arm="A", metric=0.25)
+    d = r.to_wire_dict()
+    assert d["metric"] == 0.25
+    assert TaggedResult.from_wire_dict(d).metric == 0.25
+    bare = TaggedResult("c0", 1, "md")
+    assert "metric" not in bare.to_wire_dict()
+    assert TaggedResult.from_wire_dict(bare.to_wire_dict()).metric is None
+
+
+def test_arm_report_accumulates_metrics_and_merges():
+    rs = [TaggedResult("c0", 0, "m", payload=[0.0], arm="A", metric=1.0),
+          TaggedResult("c1", 0, "m", payload=[0.0], arm="A", metric=3.0),
+          TaggedResult("c2", 0, "m", payload=[0.0], arm="B"),
+          TaggedResult("c3", 0, "error:boom", arm="B", metric=9.0)]
+    rep = arm_report(rs, {})
+    a = ArmStats.from_report(rep["A"])
+    assert (a.metric_sum, a.metric_n, a.metric_mean) == (4.0, 2, 2.0)
+    b = ArmStats.from_report(rep["B"])
+    assert b.metric_n == 0 and b.metric_mean is None  # errors don't count
+    merged = merge_arm_reports([rep, rep])
+    assert ArmStats.from_report(merged["A"]).metric_sum == 8.0
+    assert ArmStats.from_report(merged["A"]).metric_n == 4
+    # pre-metric reports (older shard legs) still merge
+    legacy = {"A": {"n": 1, "errors": 0, "value_sum": 0.5, "value_n": 1}}
+    m2 = merge_arm_reports([rep, legacy])
+    assert m2["A"]["metric_n"] == 2 and m2["A"]["n"] == 3
+
+
+# ---------------------------------------------------------------------------
+# Tentpole: live optimizer A/B over a sharded fleet, loss traces intact
+# ---------------------------------------------------------------------------
+
+
+def test_run_ab_hot_swap_with_loss_traces_sharded():
+    fleet = Fleet.create(8, seed=7, shards=2)
+    try:
+        sess = FederatedSession(fleet, seed=3)
+        fe = fleet.frontend(sess.user_id)
+        log = sess.run_ab(fe, n_rounds=6, swap_round=3)
+        by_arm = {}
+        for row in log:
+            by_arm.setdefault(row["arm"], []).append(row)
+        assert sorted(by_arm) == ["A", "B"]
+        for arm, rows in by_arm.items():
+            assert [r["round"] for r in rows] == list(range(6))
+            assert all(r["loss"] is not None for r in rows)
+            assert all(r["n_dropped"] == 0 for r in rows)
+            assert all(r["n_accepted"] == 4 for r in rows)
+        a_md5s = [r["winning_md5"] for r in by_arm["A"]]
+        b_md5s = [r["winning_md5"] for r in by_arm["B"]]
+        assert len(set(a_md5s)) == 1                   # A never swapped
+        assert len(set(b_md5s[:3])) == 1 == len(set(b_md5s[3:]))
+        assert b_md5s[0] == a_md5s[0] != b_md5s[-1]    # B swapped at 3
+        # convergence trace actually descends for both arms
+        for rows in by_arm.values():
+            assert rows[-1]["err"] < rows[0]["err"]
+    finally:
+        fleet.shutdown()
+
+
+def test_cloud_aggregate_slot_runs_on_cloud_path():
+    fleet = Fleet.create(4, seed=7)
+    try:
+        sess = FederatedSession(fleet, seed=3)
+        fe = fleet.frontend(sess.user_id)
+        sess.run_rounds(fe, 2, cloud_aggregate=True)
+        assert [r["n_accepted"] for r in sess.round_log] == [4, 4]
+        assert fleet.cloud_app.registry.resolve(
+            sess.user_id, "fed_aggregate") is not None
+        with pytest.raises(ValueError, match="cloud_aggregate"):
+            sess.run_rounds(fe, 1, compression="int8_ef",
+                            cloud_aggregate=True)
+    finally:
+        fleet.shutdown()

@@ -51,3 +51,53 @@ def test_soak_fleet_survives_shard_kill_at_scale(capsys):
     # light fabric rows from benchmarks.run survive)
     if SOAK_CLIENTS == 100:            # only record the canonical shape
         record_rows(soak_rows(metrics))
+
+
+@pytest.mark.slow
+def test_soak_federated_rounds_at_scale(capsys):
+    """The paper's workload at fleet scale: FedAvg over O(100) TCP
+    client processes x 4 shard processes — deployable round driver,
+    compressed weight payloads on the binary wire, cloud-side
+    aggregation at the router. Records the ``fed_soak_round_*`` row
+    into experiments/BENCH_fleet.json (nightly only, merge-by-name)."""
+    import time
+
+    from benchmarks.bench_fabric import record_rows
+    from repro.fed.fedavg import FederatedSession
+    from repro.launch.fleet_proc import spawn_tcp_fleet
+
+    def say(msg):
+        with capsys.disabled():
+            print(f"[soak] {msg}", flush=True)
+
+    n_rounds = 5
+    fleet = spawn_tcp_fleet(SOAK_CLIENTS, shards=SOAK_SHARDS)
+    say(f"{SOAK_CLIENTS} client processes across {SOAK_SHARDS} shards up")
+    try:
+        sess = FederatedSession(fleet, seed=3, round_timeout_s=120.0)
+        fe = fleet.frontend(sess.user_id)
+        t0 = time.perf_counter()
+        sess.run_rounds(fe, n_rounds, compression="topk_ef",
+                        compression_frac=0.5)
+        wall = time.perf_counter() - t0
+        say(f"{n_rounds} compressed federated rounds in {wall:.1f}s "
+            f"(err {sess.round_log[-1]['err']:.3f})")
+
+        assert len(sess.round_log) == n_rounds
+        # every round committed with at least a quorum of the fleet and
+        # a single winning rule hash (no mixed-rule aggregation)
+        for row in sess.round_log:
+            assert row["n_accepted"] >= SOAK_CLIENTS // 2, row
+            assert row["winning_md5"] == "builtin:client_update", row
+
+        if SOAK_CLIENTS == 100 and SOAK_SHARDS == 4:
+            record_rows([{
+                "name": f"fed_soak_round_{SOAK_CLIENTS}c_{SOAK_SHARDS}s",
+                "us_per_call": wall / n_rounds * 1e6,
+                "derived": f"one topk_ef-compressed FedAvg round over "
+                           f"{SOAK_CLIENTS} tcp client processes, "
+                           f"{SOAK_SHARDS} shard processes "
+                           f"({n_rounds} rounds, deployable round module)",
+            }], path="experiments/BENCH_fleet.json")
+    finally:
+        fleet.shutdown()
